@@ -1,0 +1,87 @@
+//! Strategy comparison + Pareto exploration: run CNNParted, the
+//! fault-unaware baseline, greedy, random search and AFarePart on one
+//! model/scenario and dump a CSV of the AFarePart front for plotting.
+//!
+//!     cargo run --release --example pareto_explore [model] [> front.csv]
+
+use anyhow::Result;
+
+use afarepart::baselines::{
+    greedy_latency_mapping, random_search_mapping, CnnParted, FaultUnaware,
+};
+use afarepart::config::ExperimentConfig;
+use afarepart::coordinator::OfflineRunner;
+use afarepart::experiment::Experiment;
+use afarepart::faults::FaultScenario;
+use afarepart::nsga2::Nsga2Config;
+use afarepart::partition::Mapping;
+use afarepart::util::fmt::{pct, Table};
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "squeezenet".into());
+    let cfg = ExperimentConfig {
+        model,
+        fault_rate: 0.2,
+        scenario: FaultScenario::InputWeight,
+        eval_limit: 128,
+        nsga2: Nsga2Config { pop_size: 24, generations: 12, ..Default::default() },
+        ..Default::default()
+    };
+    let exp = Experiment::load(&cfg)?;
+    println!(
+        "# strategy comparison: {} at FR={} ({})",
+        cfg.model,
+        cfg.fault_rate,
+        cfg.scenario.label()
+    );
+
+    let mut rows: Vec<(&str, Mapping)> = Vec::new();
+
+    let mut ev = exp.partition_evaluator(cfg.scenario);
+    rows.push(("CNNParted", CnnParted::new(cfg.nsga2.clone()).partition(&mut ev)?));
+
+    let mut ev2 = exp.partition_evaluator(cfg.scenario);
+    rows.push(("Flt-unaware", FaultUnaware::new(cfg.nsga2.clone()).partition(&mut ev2)?));
+
+    let ev3 = exp.partition_evaluator(cfg.scenario);
+    rows.push(("Greedy", greedy_latency_mapping(&ev3, 0.5)));
+
+    let mut ev4 = exp.partition_evaluator(cfg.scenario);
+    rows.push((
+        "RandomSearch",
+        random_search_mapping(&mut ev4, 64, (1.0, 10.0, 100.0), cfg.seed)?,
+    ));
+
+    let mut ev5 = exp.partition_evaluator(cfg.scenario);
+    let runner = OfflineRunner { nsga2: cfg.nsga2.clone(), ..Default::default() };
+    let out = runner.run(&mut ev5, vec![], |_| {})?;
+    rows.push(("AFarePart", out.deployed.clone()));
+
+    let mut scorer = exp.partition_evaluator(cfg.scenario);
+    let mut t = Table::new(&["strategy", "mapping", "faulty acc", "dAcc", "lat ms", "energy mJ"]);
+    for (name, m) in &rows {
+        let acc = scorer.faulty_accuracy(m)?;
+        t.row(vec![
+            name.to_string(),
+            m.display(),
+            pct(acc),
+            pct((exp.clean_acc - acc).max(0.0)),
+            format!("{:.2}", scorer.latency_ms(m)),
+            format!("{:.3}", scorer.energy_mj(m)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n# AFarePart Pareto front (CSV):");
+    println!("mapping,latency_ms,energy_mj,dacc");
+    for ind in &out.front {
+        println!(
+            "{},{:.4},{:.5},{:.4}",
+            Mapping(ind.genome.clone()).display(),
+            ind.objectives[0],
+            ind.objectives[1],
+            ind.objectives[2]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,253 @@
+"""AOT pipeline: train → quantize → lower to HLO text → write artifacts.
+
+Runs once at build time (`make artifacts`); python never appears on the
+rust request path. Per model (alexnet, squeezenet, resnet18) it emits:
+
+  artifacts/<model>.hlo.txt       faulty quantized forward (see model.py)
+  artifacts/<model>_weights.bin   quantized int32 weight tensors (AFWB)
+  artifacts/<model>_manifest.json unit costs, weight order, scales, accs
+plus once:
+  artifacts/eval_data.bin         held-out eval set (AFED)
+  artifacts/index.json            model index + global config
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Checkpoints are cached in artifacts/ckpt/ so re-running is cheap.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models as M
+from . import synthdata, train, quantize
+from .model import make_export_fn
+from .quantize import _prefixed
+
+WEIGHTS_MAGIC = b"AFWB"
+EVAL_MAGIC = b"AFED"
+
+DEFAULTS = dict(
+    precision=8,
+    faulty_bits=4,
+    batch=64,
+    n_train=8192,
+    n_eval=512,
+    steps=500,
+    seed=2026,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the interchange format).
+
+    print_large_constants=True is load-bearing: the default printer elides
+    big constant arrays as `constant({...})`, and xla_extension 0.5.1's
+    text parser silently reads those as ZEROS — the baked (BN-folded)
+    biases vanish and accuracy collapses on the rust side. See
+    EXPERIMENTS.md §Debugging.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def write_weights_bin(path: str, tensors) -> None:
+    """AFWB format: magic, version, count, then [ndim, dims..., i32 data]."""
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for t in tensors:
+            a = np.asarray(t, dtype=np.int32)
+            f.write(struct.pack("<I", a.ndim))
+            f.write(struct.pack(f"<{a.ndim}I", *a.shape))
+            f.write(a.tobytes())
+
+
+def write_eval_bin(path: str, images: np.ndarray, labels: np.ndarray) -> None:
+    """AFED format: magic, version, n, h, w, c, f32 images, i32 labels."""
+    n, h, w, c = images.shape
+    with open(path, "wb") as f:
+        f.write(EVAL_MAGIC)
+        f.write(struct.pack("<IIIII", 1, n, h, w, c))
+        f.write(images.astype(np.float32).tobytes())
+        f.write(labels.astype(np.int32).tobytes())
+
+
+def train_or_load(mdef, train_set, ckpt_dir, steps, seed):
+    """Train the f32 model or load the cached checkpoint."""
+    path = os.path.join(ckpt_dir, f"{mdef.name}.npz")
+    if os.path.exists(path):
+        data = dict(np.load(path))
+        params = train.unflatten_tree(
+            {k[2:]: v for k, v in data.items() if k.startswith("p.")}
+        )
+        state = train.unflatten_tree(
+            {k[2:]: v for k, v in data.items() if k.startswith("s.")}
+        )
+        # ensure every unit has a (possibly empty) state entry
+        state = {u.name: state.get(u.name, {}) for u in mdef.units}
+        print(f"  [{mdef.name}] loaded checkpoint {path}")
+        return params, state
+    params, state, _ = train.train_model(
+        mdef, train_set[0], train_set[1], steps=steps, seed=seed
+    )
+    flat = {}
+    flat.update({f"p.{k}": v for k, v in train.flatten_tree(params).items()})
+    flat.update({f"s.{k}": v for k, v in train.flatten_tree(state).items()})
+    os.makedirs(ckpt_dir, exist_ok=True)
+    np.savez(path, **flat)
+    return params, state
+
+
+def quant_accuracy(mdef, qparams, act_scales, images, labels, cfg, batch=64) -> float:
+    """Clean (rates=0) quantized accuracy — A_clean of the paper's ΔAcc."""
+    fn, order = make_export_fn(
+        mdef, qparams, act_scales, bits=cfg["faulty_bits"], precision=cfg["precision"]
+    )
+    jfn = jax.jit(fn)
+    L = mdef.num_units
+    zeros = jnp.zeros((L,), jnp.float32)
+    key = jnp.zeros((2,), jnp.uint32)
+    wqs = [qparams[u][_prefixed(p, "wq")] for (u, p) in order]
+    hits, total = 0, 0
+    for i in range(0, (len(images) // batch) * batch, batch):
+        (logits,) = jfn(jnp.asarray(images[i : i + batch]), *wqs, zeros, zeros, key)
+        hits += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(labels[i : i + batch])))
+        total += batch
+    return hits / max(total, 1)
+
+
+def export_model(mdef, train_set, eval_set, out_dir, cfg) -> dict:
+    """Full per-model pipeline; returns its manifest dict."""
+    print(f"[aot] === {mdef.name} ===")
+    params, state = train_or_load(
+        mdef, train_set, os.path.join(out_dir, "ckpt"), cfg["steps"], cfg["seed"]
+    )
+    ev_images, ev_labels = eval_set
+    acc_f32 = train.accuracy_f32(mdef, params, state, jnp.asarray(ev_images), ev_labels)
+    print(f"  [{mdef.name}] clean f32 top-1 = {acc_f32:.4f}")
+
+    qparams, w_scale = quantize.quantize_model(mdef, params, state, cfg["precision"])
+    act_scales = quantize.calibrate_act_scales(
+        mdef, params, state, train_set[0][:256], cfg["precision"]
+    )
+    acc_q = quant_accuracy(
+        mdef, qparams, act_scales, ev_images, ev_labels, cfg, batch=cfg["batch"]
+    )
+    print(f"  [{mdef.name}] clean int{cfg['precision']} top-1 = {acc_q:.4f}")
+
+    # ---- lower to HLO text
+    fn, order = make_export_fn(
+        mdef, qparams, act_scales, bits=cfg["faulty_bits"], precision=cfg["precision"]
+    )
+    B, L = cfg["batch"], mdef.num_units
+    ex_images = jax.ShapeDtypeStruct((B, 32, 32, 3), jnp.float32)
+    ex_wqs = [
+        jax.ShapeDtypeStruct(qparams[u][_prefixed(p, "wq")].shape, jnp.int32)
+        for (u, p) in order
+    ]
+    ex_rates = jax.ShapeDtypeStruct((L,), jnp.float32)
+    ex_key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    lowered = jax.jit(fn).lower(ex_images, *ex_wqs, ex_rates, ex_rates, ex_key)
+    hlo = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{mdef.name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    print(f"  [{mdef.name}] wrote {hlo_path} ({len(hlo)/1e6:.2f} MB)")
+
+    # ---- weights blob + manifest
+    wq_tensors = [qparams[u][_prefixed(p, "wq")] for (u, p) in order]
+    write_weights_bin(os.path.join(out_dir, f"{mdef.name}_weights.bin"), wq_tensors)
+
+    manifest = dict(
+        model=mdef.name,
+        num_units=L,
+        num_classes=mdef.num_classes,
+        precision=cfg["precision"],
+        faulty_bits=cfg["faulty_bits"],
+        batch=B,
+        hlo=f"{mdef.name}.hlo.txt",
+        weights=f"{mdef.name}_weights.bin",
+        clean_acc_f32=acc_f32,
+        clean_acc_quant=acc_q,
+        weight_scale=w_scale,
+        units=M.profile_units(mdef, precision=cfg["precision"]),
+        weight_tensors=[
+            dict(
+                unit=u,
+                prefix=p,
+                shape=list(qparams[u][_prefixed(p, "wq")].shape),
+                scale=qparams[u][_prefixed(p, "scale")],
+            )
+            for (u, p) in order
+        ],
+        act_scales={u.name: act_scales[u.name] for u in mdef.units},
+    )
+    with open(os.path.join(out_dir, f"{mdef.name}_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="AFarePart AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="alexnet,squeezenet,resnet18")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("AFARE_STEPS", DEFAULTS["steps"])))
+    ap.add_argument("--precision", type=int, default=DEFAULTS["precision"], choices=[8, 16])
+    ap.add_argument("--faulty-bits", type=int, default=DEFAULTS["faulty_bits"])
+    ap.add_argument("--batch", type=int, default=DEFAULTS["batch"])
+    ap.add_argument("--n-train", type=int, default=DEFAULTS["n_train"])
+    ap.add_argument("--n-eval", type=int, default=DEFAULTS["n_eval"])
+    ap.add_argument("--seed", type=int, default=DEFAULTS["seed"])
+    args = ap.parse_args(argv)
+
+    cfg = dict(
+        precision=args.precision,
+        faulty_bits=args.faulty_bits,
+        batch=args.batch,
+        steps=args.steps,
+        seed=args.seed,
+    )
+    os.makedirs(args.out, exist_ok=True)
+
+    print(f"[aot] generating synthetic dataset (train={args.n_train}, eval={args.n_eval})")
+    train_set, eval_set = synthdata.train_eval_split(args.n_train, args.n_eval)
+    write_eval_bin(os.path.join(args.out, "eval_data.bin"), eval_set[0], eval_set[1])
+
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    manifests = []
+    for name in names:
+        mdef = M.MODELS[name]()
+        manifests.append(export_model(mdef, train_set, eval_set, args.out, cfg))
+
+    index = dict(
+        models=names,
+        eval_data="eval_data.bin",
+        batch=args.batch,
+        precision=args.precision,
+        faulty_bits=args.faulty_bits,
+        n_eval=args.n_eval,
+        clean_acc={m["model"]: m["clean_acc_quant"] for m in manifests},
+    )
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print("[aot] done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: fused probabilistic LSB bit-flip + dequantize.
+
+This is the paper's Algorithm 2 (bit-flip fault injection) fused with the
+dequantize step of quantized inference. It is the fault-injection hot spot:
+it runs once per weight tensor and once per activation tensor on every
+forward pass evaluated inside the NSGA-II loop.
+
+TPU mapping (see DESIGN.md §8): the tensor is streamed through VMEM in
+(block_rows, 128)-shaped blocks (lane dimension 128); the flip + dequant is
+pure VPU elementwise work, so the kernel is memory-bound and the fusion
+saves one full HBM round-trip versus flip-then-dequant as separate ops.
+
+Randomness contract (shared bit-exactly with ref.py and the rust mirror in
+rust/src/util/bits.rs): each element consumes one uint32 of externally
+supplied random bits; bit i < `bits` flips iff the i-th 8-bit slice of that
+uint32 is < round(rate * 256). Flip probabilities are therefore quantized
+to 1/256 granularity, and up to 4 independent-ish uniforms come from a
+single draw.
+
+Lowered with interpret=True: CPU PJRT cannot execute Mosaic custom-calls,
+so the kernel body becomes plain HLO (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width of the TPU VPU; blocks are shaped (BLOCK_ROWS, LANES).
+#
+# BLOCK_ROWS was tuned in the L1 performance pass (EXPERIMENTS.md §Perf):
+# interpret-mode lowering turns each grid step into a dynamic-slice +
+# kernel-body + dynamic-update-slice sequence, so CPU execution time is
+# dominated by grid-step count — (8,128) blocks cost 1071 ms per alexnet
+# batch vs 81 ms at (4096,128). (2048,128) int32 blocks are 1 MiB per
+# buffer (3 MiB with in/out + double buffering), comfortably inside a
+# 16 MiB TPU VMEM budget, so the same shape serves both targets.
+LANES = 128
+BLOCK_ROWS = 2048
+
+
+def _bitflip_dequant_kernel(rate_ref, scale_ref, q_ref, rnd_ref, o_ref, *, bits: int):
+    """One (BLOCK_ROWS, LANES) block: flip `bits` LSBs, dequantize to f32."""
+    q = q_ref[...]
+    rnd = rnd_ref[...]
+    # Threshold on an 8-bit slice: P(flip) = round(rate*256)/256.
+    thr = jnp.round(rate_ref[0, 0] * 256.0).astype(jnp.uint32)
+    flip = jnp.zeros_like(q)
+    for i in range(bits):
+        sl = (rnd >> jnp.uint32(8 * i)) & jnp.uint32(0xFF)
+        flip = flip | jnp.where(sl < thr, jnp.int32(1 << i), jnp.int32(0))
+    o_ref[...] = (q ^ flip).astype(jnp.float32) * scale_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def bitflip_dequant(q, rnd, rate, scale, *, bits: int = 4):
+    """Flip up to `bits` LSBs of quantized tensor `q` and dequantize.
+
+    Args:
+      q:     int32 tensor (any shape) holding quantized values.
+      rnd:   uint32 tensor, same shape: one random draw per element.
+      rate:  scalar f32, per-bit flip probability (paper's FR).
+      scale: scalar f32, dequantization scale.
+      bits:  static number of vulnerable LSBs (paper's b, default 4).
+
+    Returns:
+      float32 tensor, same shape as q: dequantized faulty values.
+    """
+    if q.shape != rnd.shape:
+        raise ValueError(f"shape mismatch: q{q.shape} vs rnd{rnd.shape}")
+    orig_shape = q.shape
+    n = q.size
+    # Flatten and pad to a whole number of (BLOCK_ROWS, LANES) blocks.
+    block = BLOCK_ROWS * LANES
+    n_pad = (-n) % block
+    qf = jnp.concatenate([q.reshape(-1), jnp.zeros((n_pad,), jnp.int32)])
+    rf = jnp.concatenate([rnd.reshape(-1), jnp.zeros((n_pad,), jnp.uint32)])
+    rows = (n + n_pad) // LANES
+    qf = qf.reshape(rows, LANES)
+    rf = rf.reshape(rows, LANES)
+    rate2 = jnp.asarray(rate, jnp.float32).reshape(1, 1)
+    scale2 = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_bitflip_dequant_kernel, bits=bits),
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # rate (scalar)
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # scale (scalar)
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(rate2, scale2, qf, rf)
+    return out.reshape(-1)[:n].reshape(orig_shape)

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: tiled matmul with fused weight bit-flip + dequantize.
+
+The dense (fully-connected) layers of the quantized models run through this
+kernel: activations are f32, weights arrive quantized (int32 lanes holding
+b-bit fixed-point values); the kernel flips the vulnerable LSBs of the
+weight tile, dequantizes it in VMEM and feeds the MXU-sized tile straight
+into a f32-accumulating dot.
+
+TPU mapping (DESIGN.md §8): grid tiles the output as (bm, bn) blocks with
+the full K dimension resident per block (K <= a few thousand for the FC
+layers here, comfortably inside VMEM: bm*K + K*bn + bm*bn floats). The
+fusion means faulty weights never make a round trip to HBM — this is where
+a CUDA implementation would have used a shared-memory staging buffer, and
+the BlockSpec index_map plays the role of the threadblock schedule.
+
+interpret=True for CPU PJRT execution (Mosaic is TPU-only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 64
+DEFAULT_BN = 128
+
+
+def _qmatmul_kernel(rate_ref, scale_ref, x_ref, w_ref, rnd_ref, o_ref, *, bits: int):
+    """o[bm,bn] = x[bm,K] @ dequant(bitflip(w[K,bn]))."""
+    wq = w_ref[...]
+    rnd = rnd_ref[...]
+    thr = jnp.round(rate_ref[0, 0] * 256.0).astype(jnp.uint32)
+    flip = jnp.zeros_like(wq)
+    for i in range(bits):
+        sl = (rnd >> jnp.uint32(8 * i)) & jnp.uint32(0xFF)
+        flip = flip | jnp.where(sl < thr, jnp.int32(1 << i), jnp.int32(0))
+    w = (wq ^ flip).astype(jnp.float32) * scale_ref[0, 0]
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn"))
+def qmatmul_bitflip(x, wq, rnd, rate, scale, *, bits: int = 4,
+                    bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """Faulty quantized matmul: x[M,K] @ dequant(flip(wq[K,N])) -> f32[M,N].
+
+    Args:
+      x:     f32[M, K] activations.
+      wq:    int32[K, N] quantized weights.
+      rnd:   uint32[K, N] random draws (one per weight element).
+      rate:  scalar f32 per-bit flip probability.
+      scale: scalar f32 weight dequantization scale.
+      bits:  static vulnerable-LSB count.
+      bm/bn: static output tile shape.
+    """
+    if x.ndim != 2 or wq.ndim != 2 or x.shape[1] != wq.shape[0]:
+        raise ValueError(f"bad shapes x{x.shape} wq{wq.shape}")
+    if wq.shape != rnd.shape:
+        raise ValueError(f"shape mismatch wq{wq.shape} vs rnd{rnd.shape}")
+    m, k = x.shape
+    _, n = wq.shape
+    mp, np_ = (-m) % bm, (-n) % bn
+    xp = jnp.pad(x, ((0, mp), (0, 0)))
+    wp = jnp.pad(wq, ((0, 0), (0, np_)))
+    rp = jnp.pad(rnd, ((0, 0), (0, np_)))
+    rate2 = jnp.asarray(rate, jnp.float32).reshape(1, 1)
+    scale2 = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_qmatmul_kernel, bits=bits),
+        grid=((m + mp) // bm, (n + np_) // bn),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),   # rate
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),   # scale
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # x row-tile
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # w col-tile
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # rnd col-tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + mp, n + np_), jnp.float32),
+        interpret=True,
+    )(rate2, scale2, xp, wp, rp)
+    return out[:m, :n]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness contract: `bitflip.py` / `qmatmul.py` must match
+these bit-for-bit (integers) / exactly (f32 elementwise ops). pytest
+(python/tests/) sweeps shapes, rates and bit counts with hypothesis; the
+rust mirror (rust/src/util/bits.rs) is cross-checked against the same
+vectors via golden files emitted by python/tests/test_cross_vectors.py.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flip_mask(rnd, rate, bits: int):
+    """int32 mask of bits to flip, given uint32 draws and per-bit rate.
+
+    Bit i of the mask is set iff the i-th 8-bit slice of the draw is below
+    round(rate*256) — the shared randomness contract (see bitflip.py).
+    """
+    thr = jnp.round(jnp.asarray(rate, jnp.float32) * 256.0).astype(jnp.uint32)
+    mask = jnp.zeros(rnd.shape, jnp.int32)
+    for i in range(bits):
+        sl = (rnd >> jnp.uint32(8 * i)) & jnp.uint32(0xFF)
+        mask = mask | jnp.where(sl < thr, jnp.int32(1 << i), jnp.int32(0))
+    return mask
+
+
+def bitflip_dequant_ref(q, rnd, rate, scale, *, bits: int = 4):
+    """Oracle for bitflip.bitflip_dequant."""
+    return (q ^ flip_mask(rnd, rate, bits)).astype(jnp.float32) * jnp.asarray(
+        scale, jnp.float32
+    )
+
+
+def qmatmul_bitflip_ref(x, wq, rnd, rate, scale, *, bits: int = 4):
+    """Oracle for qmatmul.qmatmul_bitflip."""
+    w = bitflip_dequant_ref(wq, rnd, rate, scale, bits=bits)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

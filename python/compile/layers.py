@@ -1,0 +1,83 @@
+"""L2 building blocks: f32 training ops + fixed-point quantization helpers.
+
+NHWC layout throughout. Convolutions use XLA's native conv (the Pallas
+story lives in the elementwise fault-injection kernel that feeds every conv
+its faulty dequantized weights, and in the fused qmatmul that runs the
+dense layers — see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+def conv2d(x, w, stride: int = 1, pad: int = 0):
+    """NHWC conv. w: [kh, kw, cin, cout]."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def maxpool2(x):
+    """2x2 max pool, stride 2."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def global_avg_pool(x):
+    """[B,H,W,C] -> [B,C]."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def batchnorm_train(x, gamma, beta, mean, var):
+    """Batch norm with batch statistics; returns (y, new_mean, new_var)."""
+    mu = jnp.mean(x, axis=(0, 1, 2))
+    sig2 = jnp.var(x, axis=(0, 1, 2))
+    y = (x - mu) / jnp.sqrt(sig2 + BN_EPS) * gamma + beta
+    new_mean = BN_MOMENTUM * mean + (1.0 - BN_MOMENTUM) * mu
+    new_var = BN_MOMENTUM * var + (1.0 - BN_MOMENTUM) * sig2
+    return y, new_mean, new_var
+
+
+def batchnorm_eval(x, gamma, beta, mean, var):
+    """Batch norm with running statistics (inference)."""
+    return (x - mean) / jnp.sqrt(var + BN_EPS) * gamma + beta
+
+
+def fold_bn(w, b, gamma, beta, mean, var):
+    """Fold a trained BN into the preceding conv: returns (w', b').
+
+    Standard deployment transform — the quantized inference graph is
+    BN-free: y = conv(x, w') + b' == bn(conv(x, w) + b).
+    """
+    k = gamma / jnp.sqrt(var + BN_EPS)
+    return w * k[None, None, None, :], beta + (b - mean) * k
+
+
+def quant_range(precision: int):
+    """(qmin, qmax) of a signed `precision`-bit two's-complement value."""
+    qmax = (1 << (precision - 1)) - 1
+    return -qmax - 1, qmax
+
+
+def quantize_tensor(w, precision: int):
+    """Symmetric per-tensor fixed-point quantization -> (int32 q, f32 scale)."""
+    qmin, qmax = quant_range(precision)
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(w / scale), qmin, qmax).astype(jnp.int32)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_act(x, scale, precision: int):
+    """Quantize activations with a pre-calibrated scale -> int32."""
+    qmin, qmax = quant_range(precision)
+    return jnp.clip(jnp.round(x / scale), qmin, qmax).astype(jnp.int32)

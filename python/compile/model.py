@@ -1,0 +1,150 @@
+"""L2 export entry: the faulty quantized forward pass.
+
+This is the computation AOT-lowered to artifacts/<model>.hlo.txt and
+executed from the rust request path. It implements quantized inference
+with the paper's in-graph probabilistic bit-flip fault injection
+(Algorithm 2) on BOTH domains of §III-B:
+
+  * weight faults  — every quantized weight tensor passes through the L1
+    Pallas bitflip+dequant kernel (dense layers use the fused qmatmul);
+  * activation faults — each unit's input activation is quantized with its
+    calibrated scale, bit-flipped, and dequantized.
+
+Traced inputs (= HLO parameter order; rust mirrors this via the manifest):
+  images      f32[B,32,32,3]
+  wq_0..wq_T  int32 quantized weight tensors (weight_tensor_order)
+  w_rates     f32[L] per-unit weight fault rate (device-dependent, from L3)
+  a_rates     f32[L] per-unit activation fault rate
+  key_data    u32[2] PRNG key (fresh per batch, from L3)
+Output: logits f32[B,10].
+
+Setting both rate vectors to zero yields clean *quantized* inference —
+A_clean of the paper's ΔAcc = A_clean − A_faulty is the deployed quantized
+model's accuracy, so the same artifact serves both evaluations.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as ly
+from . import models as M
+from .quantize import _prefixed, weight_tensor_order
+from .kernels.bitflip import bitflip_dequant
+from .kernels.qmatmul import qmatmul_bitflip
+
+
+def _rnd_for(key, ctr: int, shape):
+    """Per-tensor random draws; ctr is a static per-tensor counter."""
+    return jax.random.bits(jax.random.fold_in(key, ctr), shape, dtype=jnp.uint32)
+
+
+def faulty_forward(
+    mdef: M.ModelDef,
+    qparams: Dict[str, dict],
+    act_scales: Dict[str, float],
+    images,
+    wq_inputs: Dict[tuple, jax.Array],
+    w_rates,
+    a_rates,
+    key_data,
+    *,
+    bits: int,
+    precision: int,
+):
+    """Quantized forward with per-unit fault injection. Returns logits."""
+    key = jax.random.wrap_key_data(key_data)
+    x = images
+    ctr = 0
+
+    def faulty_weight(unit_name: str, prefix: str, rate):
+        nonlocal ctr
+        wq = wq_inputs[(unit_name, prefix)]
+        scale = qparams[unit_name][_prefixed(prefix, "scale")]
+        rnd = _rnd_for(key, ctr, wq.shape)
+        ctr += 1
+        return bitflip_dequant(wq, rnd, rate, scale, bits=bits)
+
+    def conv(x, unit_name, prefix, stride, pad, rate, relu=True):
+        w = faulty_weight(unit_name, prefix, rate)
+        y = ly.conv2d(x, w, stride, pad) + qparams[unit_name][_prefixed(prefix, "b")]
+        return jax.nn.relu(y) if relu else y
+
+    for i, unit in enumerate(mdef.units):
+        cfg = unit.cfg
+        qp = qparams[unit.name]
+        wr, ar = w_rates[i], a_rates[i]
+
+        # --- activation quantize + fault at the unit input (§III-B data faults)
+        if unit.kind == "dense" and x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        a_scale = act_scales[unit.name]
+        xq = ly.quantize_act(x, a_scale, precision)
+        rnd = _rnd_for(key, ctr, xq.shape)
+        ctr += 1
+        x = bitflip_dequant(xq, rnd, ar, a_scale, bits=bits)
+
+        # --- unit compute with faulty weights
+        if unit.kind == "conv":
+            x = conv(x, unit.name, "", cfg["stride"], cfg["pad"], wr, cfg["relu"])
+            if cfg.get("pool", 1) == 2:
+                x = ly.maxpool2(x)
+        elif unit.kind == "fire":
+            sq = conv(x, unit.name, "s", 1, 0, wr)
+            e1 = conv(sq, unit.name, "e1", 1, 0, wr)
+            e3 = conv(sq, unit.name, "e3", 1, 1, wr)
+            x = jnp.concatenate([e1, e3], axis=-1)
+            if cfg.get("pool", 1) == 2:
+                x = ly.maxpool2(x)
+        elif unit.kind == "block":
+            idn = x
+            y = conv(x, unit.name, "c1", cfg["stride"], 1, wr)
+            y = conv(y, unit.name, "c2", 1, 1, wr, relu=False)
+            if "p_wq" in qp:
+                idn = conv(x, unit.name, "p", cfg["stride"], 0, wr, relu=False)
+            x = jax.nn.relu(y + idn)
+        elif unit.kind in ("dense", "gap_dense"):
+            if unit.kind == "gap_dense":
+                x = ly.global_avg_pool(x)
+            wq = wq_inputs[(unit.name, "")]
+            rnd = _rnd_for(key, ctr, wq.shape)
+            ctr += 1
+            x = qmatmul_bitflip(x, wq, rnd, wr, qp["scale"], bits=bits) + qp["b"]
+            if cfg.get("relu", False):
+                x = jax.nn.relu(x)
+        elif unit.kind == "conv_gap":
+            x = ly.global_avg_pool(conv(x, unit.name, "", 1, 0, wr, relu=False))
+        else:  # pragma: no cover
+            raise ValueError(unit.kind)
+    return x
+
+
+def make_export_fn(mdef: M.ModelDef, qparams, act_scales, *, bits: int, precision: int):
+    """Bind static config; return (fn, ordered weight keys) for lowering.
+
+    fn(images, *wqs, w_rates, a_rates, key_data) -> (logits,)
+    """
+    order = weight_tensor_order(mdef, qparams)
+
+    def fn(images, *rest):
+        wqs = rest[: len(order)]
+        w_rates, a_rates, key_data = rest[len(order) :]
+        wq_inputs = {k: v for k, v in zip(order, wqs)}
+        logits = faulty_forward(
+            mdef,
+            qparams,
+            act_scales,
+            images,
+            wq_inputs,
+            w_rates,
+            a_rates,
+            key_data,
+            bits=bits,
+            precision=precision,
+        )
+        return (logits,)
+
+    return fn, order

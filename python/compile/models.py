@@ -1,0 +1,340 @@
+"""Model zoo: architecturally faithful mini variants of the paper's CNNs.
+
+AlexNet-mini (conv stack + 3 FC), SqueezeNet-mini (fire modules),
+ResNet18-mini (4 stages x 2 basic blocks). Channel counts are scaled for
+the 32x32 synthetic dataset (DESIGN.md §1) but the topologies — and hence
+the partitioning problem structure — match the originals.
+
+A model is a list of *units*; the unit is the paper's partitioning
+granularity (P : {1..L} -> devices maps units to accelerators). Each unit
+carries everything the L3 cost models need: MACs, weight bytes, activation
+bytes (see profile_units).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as ly
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Unit:
+    """One mappable layer (paper's l in {1..L})."""
+
+    name: str
+    kind: str  # conv | fire | block | dense | gap_dense | conv_gap
+    cfg: dict
+
+    # hashable despite the dict cfg, so ModelDef can be a jit static arg
+    def _key(self):
+        return (self.name, self.kind, tuple(sorted(self.cfg.items())))
+
+    def __hash__(self):
+        return hash(self._key())
+
+    def __eq__(self, other):
+        return isinstance(other, Unit) and self._key() == other._key()
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    name: str
+    units: Tuple[Unit, ...]
+    num_classes: int = 10
+
+    @property
+    def num_units(self) -> int:
+        return len(self.units)
+
+
+def alexnet_mini() -> ModelDef:
+    u = [
+        Unit("conv1", "conv", dict(out=32, k=5, stride=1, pad=2, relu=True, pool=2)),
+        Unit("conv2", "conv", dict(out=64, k=5, stride=1, pad=2, relu=True, pool=2)),
+        Unit("conv3", "conv", dict(out=96, k=3, stride=1, pad=1, relu=True, pool=1)),
+        Unit("conv4", "conv", dict(out=96, k=3, stride=1, pad=1, relu=True, pool=1)),
+        Unit("conv5", "conv", dict(out=64, k=3, stride=1, pad=1, relu=True, pool=2)),
+        Unit("fc1", "dense", dict(out=256, relu=True)),
+        Unit("fc2", "dense", dict(out=128, relu=True)),
+        Unit("fc3", "dense", dict(out=10, relu=False)),
+    ]
+    return ModelDef("alexnet", tuple(u))
+
+
+def squeezenet_mini() -> ModelDef:
+    u = [
+        Unit("conv1", "conv", dict(out=32, k=3, stride=1, pad=1, relu=True, pool=2)),
+        Unit("fire2", "fire", dict(squeeze=8, expand=16, pool=1)),
+        Unit("fire3", "fire", dict(squeeze=8, expand=16, pool=2)),
+        Unit("fire4", "fire", dict(squeeze=16, expand=32, pool=1)),
+        Unit("fire5", "fire", dict(squeeze=16, expand=32, pool=2)),
+        Unit("conv10", "conv_gap", dict()),
+    ]
+    return ModelDef("squeezenet", tuple(u))
+
+
+def resnet18_mini() -> ModelDef:
+    u = [
+        Unit("conv1", "conv", dict(out=24, k=3, stride=1, pad=1, relu=True, pool=1, bn=True)),
+        Unit("block1", "block", dict(out=24, stride=1)),
+        Unit("block2", "block", dict(out=24, stride=1)),
+        Unit("block3", "block", dict(out=48, stride=2)),
+        Unit("block4", "block", dict(out=48, stride=1)),
+        Unit("block5", "block", dict(out=96, stride=2)),
+        Unit("block6", "block", dict(out=96, stride=1)),
+        Unit("block7", "block", dict(out=96, stride=2)),
+        Unit("block8", "block", dict(out=96, stride=1)),
+        Unit("fc", "gap_dense", dict(out=10)),
+    ]
+    return ModelDef("resnet18", tuple(u))
+
+
+MODELS = {
+    "alexnet": alexnet_mini,
+    "squeezenet": squeezenet_mini,
+    "resnet18": resnet18_mini,
+}
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _he(key, shape):
+    fan_in = math.prod(shape[:-1])
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def _conv_params(key, cin, cout, k, bn: bool):
+    kw, kb = jax.random.split(key)
+    p = {"w": _he(kw, (k, k, cin, cout)), "b": jnp.zeros((cout,), jnp.float32)}
+    s = {}
+    if bn:
+        p["gamma"] = jnp.ones((cout,), jnp.float32)
+        p["beta"] = jnp.zeros((cout,), jnp.float32)
+        s["mean"] = jnp.zeros((cout,), jnp.float32)
+        s["var"] = jnp.ones((cout,), jnp.float32)
+    return p, s
+
+
+def init_params(mdef: ModelDef, seed: int, input_shape=(32, 32, 3)):
+    """Returns (params, bn_state) pytrees keyed by unit name."""
+    key = jax.random.key(seed)
+    params: Dict[str, dict] = {}
+    state: Dict[str, dict] = {}
+    h, w, c = input_shape
+    for unit in mdef.units:
+        key, uk = jax.random.split(key)
+        cfg = unit.cfg
+        if unit.kind == "conv":
+            p, s = _conv_params(uk, c, cfg["out"], cfg["k"], cfg.get("bn", False))
+            params[unit.name], state[unit.name] = p, s
+            h = (h + 2 * cfg["pad"] - cfg["k"]) // cfg["stride"] + 1
+            w = (w + 2 * cfg["pad"] - cfg["k"]) // cfg["stride"] + 1
+            c = cfg["out"]
+            if cfg.get("pool", 1) == 2:
+                h, w = h // 2, w // 2
+        elif unit.kind == "fire":
+            ks = jax.random.split(uk, 3)
+            sq, ex = cfg["squeeze"], cfg["expand"]
+            p = {}
+            s = {}
+            for nm, kk, (ci, co, ksz) in [
+                ("s", ks[0], (c, sq, 1)),
+                ("e1", ks[1], (sq, ex, 1)),
+                ("e3", ks[2], (sq, ex, 3)),
+            ]:
+                pp, ss = _conv_params(kk, ci, co, ksz, bn=True)
+                for a, v in pp.items():
+                    p[f"{nm}_{a}"] = v
+                for a, v in ss.items():
+                    s[f"{nm}_{a}"] = v
+            params[unit.name], state[unit.name] = p, s
+            c = 2 * ex
+            if cfg.get("pool", 1) == 2:
+                h, w = h // 2, w // 2
+        elif unit.kind == "block":
+            ks = jax.random.split(uk, 3)
+            out, stride = cfg["out"], cfg["stride"]
+            p = {}
+            s = {}
+            convs = [("c1", c, out, 3), ("c2", out, out, 3)]
+            if stride != 1 or c != out:
+                convs.append(("p", c, out, 1))
+            for (nm, ci, co, ksz), kk in zip(convs, ks):
+                pp, ss = _conv_params(kk, ci, co, ksz, bn=True)
+                for a, v in pp.items():
+                    p[f"{nm}_{a}"] = v
+                for a, v in ss.items():
+                    s[f"{nm}_{a}"] = v
+            params[unit.name], state[unit.name] = p, s
+            c = out
+            h, w = (h + stride - 1) // stride, (w + stride - 1) // stride
+        elif unit.kind == "dense":
+            fan_in = h * w * c if h > 0 else c
+            params[unit.name] = {
+                "w": _he(uk, (fan_in, cfg["out"])),
+                "b": jnp.zeros((cfg["out"],), jnp.float32),
+            }
+            state[unit.name] = {}
+            h, w, c = 0, 0, cfg["out"]  # flattened from here on
+        elif unit.kind == "gap_dense":
+            params[unit.name] = {
+                "w": _he(uk, (c, cfg["out"])),
+                "b": jnp.zeros((cfg["out"],), jnp.float32),
+            }
+            state[unit.name] = {}
+            h, w, c = 0, 0, cfg["out"]
+        elif unit.kind == "conv_gap":
+            params[unit.name] = {
+                "w": _he(uk, (1, 1, c, mdef.num_classes)),
+                "b": jnp.zeros((mdef.num_classes,), jnp.float32),
+            }
+            state[unit.name] = {}
+            h, w, c = 0, 0, mdef.num_classes
+        else:  # pragma: no cover
+            raise ValueError(unit.kind)
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# f32 forward (training / calibration)
+# ---------------------------------------------------------------------------
+
+
+def _conv_bn_act(x, p, s, prefix, stride, pad, train, relu=True):
+    """conv [+bn] [+relu]; returns (y, new_bn_state_items)."""
+    pre = f"{prefix}_" if prefix else ""
+    y = ly.conv2d(x, p[f"{pre}w"], stride, pad) + p[f"{pre}b"]
+    new = {}
+    if f"{pre}gamma" in p:
+        if train:
+            y, nm, nv = ly.batchnorm_train(
+                y, p[f"{pre}gamma"], p[f"{pre}beta"], s[f"{pre}mean"], s[f"{pre}var"]
+            )
+            new[f"{pre}mean"], new[f"{pre}var"] = nm, nv
+        else:
+            y = ly.batchnorm_eval(
+                y, p[f"{pre}gamma"], p[f"{pre}beta"], s[f"{pre}mean"], s[f"{pre}var"]
+            )
+    if relu:
+        y = jax.nn.relu(y)
+    return y, new
+
+
+def forward_f32(mdef: ModelDef, params, state, x, train: bool = False):
+    """Float32 forward pass. Returns (logits, new_bn_state)."""
+    new_state = {}
+    for unit in mdef.units:
+        p, s = params[unit.name], state[unit.name]
+        cfg = unit.cfg
+        ns: dict = {}
+        if unit.kind == "conv":
+            x, ns = _conv_bn_act(x, p, s, "", cfg["stride"], cfg["pad"], train, cfg["relu"])
+            if cfg.get("pool", 1) == 2:
+                x = ly.maxpool2(x)
+        elif unit.kind == "fire":
+            x, n1 = _conv_bn_act(x, p, s, "s", 1, 0, train)
+            e1, n2 = _conv_bn_act(x, p, s, "e1", 1, 0, train)
+            e3, n3 = _conv_bn_act(x, p, s, "e3", 1, 1, train)
+            x = jnp.concatenate([e1, e3], axis=-1)
+            ns = {**n1, **n2, **n3}
+        elif unit.kind == "block":
+            idn = x
+            y, n1 = _conv_bn_act(x, p, s, "c1", cfg["stride"], 1, train)
+            y, n2 = _conv_bn_act(y, p, s, "c2", 1, 1, train, relu=False)
+            ns = {**n1, **n2}
+            if "p_w" in p:
+                idn, n3 = _conv_bn_act(x, p, s, "p", cfg["stride"], 0, train, relu=False)
+                ns.update(n3)
+            x = jax.nn.relu(y + idn)
+        elif unit.kind == "dense":
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            x = x @ p["w"] + p["b"]
+            if cfg["relu"]:
+                x = jax.nn.relu(x)
+        elif unit.kind == "gap_dense":
+            x = ly.global_avg_pool(x) @ p["w"] + p["b"]
+        elif unit.kind == "conv_gap":
+            x = ly.global_avg_pool(ly.conv2d(x, p["w"], 1, 0) + p["b"])
+        new_state[unit.name] = {**s, **ns}
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Per-unit cost metadata for the L3 hardware models
+# ---------------------------------------------------------------------------
+
+
+def profile_units(mdef: ModelDef, input_shape=(32, 32, 3), precision: int = 8):
+    """Per-unit cost descriptors (per single sample).
+
+    Returns a list of dicts: name, kind, macs, w_params, w_bytes,
+    in_bytes, out_bytes, out_shape — the inputs of the Eyeriss/SIMBA
+    analytical models and the link cost model (DESIGN.md §2).
+    """
+    h, w, c = input_shape
+    rows = []
+    for unit in mdef.units:
+        cfg = unit.cfg
+        in_elems = h * w * c if h else c
+        macs = 0
+        wp = 0
+        if unit.kind == "conv":
+            oh = (h + 2 * cfg["pad"] - cfg["k"]) // cfg["stride"] + 1
+            ow = (w + 2 * cfg["pad"] - cfg["k"]) // cfg["stride"] + 1
+            macs = oh * ow * cfg["out"] * cfg["k"] * cfg["k"] * c
+            wp = cfg["k"] * cfg["k"] * c * cfg["out"]
+            h, w, c = oh, ow, cfg["out"]
+            if cfg.get("pool", 1) == 2:
+                h, w = h // 2, w // 2
+        elif unit.kind == "fire":
+            sq, ex = cfg["squeeze"], cfg["expand"]
+            macs = h * w * (c * sq + sq * ex + 9 * sq * ex)
+            wp = c * sq + sq * ex + 9 * sq * ex
+            c = 2 * ex
+            if cfg.get("pool", 1) == 2:
+                h, w = h // 2, w // 2
+        elif unit.kind == "block":
+            out, stride = cfg["out"], cfg["stride"]
+            oh, ow = (h + stride - 1) // stride, (w + stride - 1) // stride
+            macs = oh * ow * out * 9 * c + oh * ow * out * 9 * out
+            wp = 9 * c * out + 9 * out * out
+            if stride != 1 or c != out:
+                macs += oh * ow * out * c
+                wp += c * out
+            h, w, c = oh, ow, out
+        elif unit.kind == "dense":
+            fan_in = in_elems
+            macs = fan_in * cfg["out"]
+            wp = fan_in * cfg["out"]
+            h, w, c = 0, 0, cfg["out"]
+        elif unit.kind == "gap_dense":
+            macs = c * cfg["out"]
+            wp = c * cfg["out"]
+            h, w, c = 0, 0, cfg["out"]
+        elif unit.kind == "conv_gap":
+            macs = h * w * c * mdef.num_classes
+            wp = c * mdef.num_classes
+            h, w, c = 0, 0, mdef.num_classes
+        out_elems = h * w * c if h else c
+        rows.append(
+            dict(
+                name=unit.name,
+                kind=unit.kind,
+                macs=int(macs),
+                w_params=int(wp),
+                w_bytes=int(wp * precision // 8),
+                in_bytes=int(in_elems * precision // 8),
+                out_bytes=int(out_elems * precision // 8),
+                out_shape=[int(h), int(w), int(c)] if h else [int(c)],
+            )
+        )
+    return rows

@@ -1,0 +1,127 @@
+"""Post-training quantization: BN fold + fixed-point weights + calibrated
+activation scales.
+
+Quantization scheme (validated empirically; see EXPERIMENTS.md §Fault-Signal):
+
+* **Weights: one global power-of-two scale per model.** Edge accelerators
+  with a shared fixed-point datapath (the paper's §III-B "fixed-point
+  integer representations (e.g., INT8)") run every tensor through the same
+  Q-format; tensors whose dynamic range under-fills the format carry
+  proportionally larger LSB steps — which is exactly why LSB bit-flips
+  degrade accuracy *differently per layer*, the signal AFarePart optimizes.
+* **Activations: per-unit power-of-two scales** (per-layer configurable
+  activation formats, as in Eyeriss). With a single global activation
+  format the input image is quantized to ~4 levels and every strategy
+  collapses to chance — no partitioning signal at all.
+
+Produces the deployment-form model consumed by model.faulty_forward:
+  qparams[unit] = {"<conv>_wq": int32, "<conv>_scale": float,
+                   "<conv>_b": f32 folded bias}
+  act_scales[unit] = float scale of the unit's input activation tensor.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+from . import layers as ly
+from . import models as M
+
+# conv sub-names per unit kind (order fixed — it defines the HLO input order)
+UNIT_CONVS = {
+    "conv": [""],
+    "fire": ["s", "e1", "e3"],
+    "block": ["c1", "c2", "p"],  # "p" only if present
+    "dense": [""],
+    "gap_dense": [""],
+    "conv_gap": [""],
+}
+
+
+def _prefixed(prefix: str, attr: str) -> str:
+    return f"{prefix}_{attr}" if prefix else attr
+
+
+def pow2_scale(max_abs: float, qmax: int) -> float:
+    """Smallest power-of-two scale whose qmax covers max_abs."""
+    return 2.0 ** math.ceil(math.log2(max(max_abs, 1e-12) / qmax))
+
+
+def fold_all(mdef: M.ModelDef, params, state) -> Dict[Tuple[str, str], tuple]:
+    """BN-fold every conv; returns {(unit, prefix): (w, b)} in f32."""
+    folded = {}
+    for unit in mdef.units:
+        p, s = params[unit.name], state[unit.name]
+        for prefix in UNIT_CONVS[unit.kind]:
+            wk = _prefixed(prefix, "w")
+            if wk not in p:
+                continue  # e.g. absent projection conv
+            w, b = p[wk], p[_prefixed(prefix, "b")]
+            gk = _prefixed(prefix, "gamma")
+            if gk in p:
+                w, b = ly.fold_bn(
+                    w,
+                    b,
+                    p[gk],
+                    p[_prefixed(prefix, "beta")],
+                    s[_prefixed(prefix, "mean")],
+                    s[_prefixed(prefix, "var")],
+                )
+            folded[(unit.name, prefix)] = (w, b)
+    return folded
+
+
+def quantize_model(mdef: M.ModelDef, params, state, precision: int):
+    """Fold BN and quantize all weights with the global pow2 model scale.
+
+    Returns (qparams, weight_scale).
+    """
+    qmin, qmax = ly.quant_range(precision)
+    folded = fold_all(mdef, params, state)
+    gmax = max(float(jnp.max(jnp.abs(w))) for (w, _) in folded.values())
+    scale = pow2_scale(gmax, qmax)
+    qparams: Dict[str, dict] = {u.name: {} for u in mdef.units}
+    for (uname, prefix), (w, b) in folded.items():
+        q = jnp.clip(jnp.round(w / scale), qmin, qmax).astype(jnp.int32)
+        qparams[uname][_prefixed(prefix, "wq")] = q
+        qparams[uname][_prefixed(prefix, "scale")] = float(scale)
+        qparams[uname][_prefixed(prefix, "b")] = b
+    return qparams, scale
+
+
+def calibrate_act_scales(
+    mdef: M.ModelDef, params, state, images, precision: int
+) -> Dict[str, float]:
+    """Per-unit input-activation pow2 scales from a f32 calibration run."""
+    _, qmax = ly.quant_range(precision)
+    scales: Dict[str, float] = {}
+    x = jnp.asarray(images)
+    for unit in mdef.units:
+        flat = x.reshape(x.shape[0], -1) if unit.kind == "dense" and x.ndim > 2 else x
+        scales[unit.name] = pow2_scale(float(jnp.max(jnp.abs(flat))), qmax)
+        x = _unit_forward_f32(mdef, unit, params[unit.name], state[unit.name], x)
+    return scales
+
+
+def _unit_forward_f32(mdef, unit, p, s, x):
+    """Single-unit eval-mode forward (helper for calibration)."""
+    one = M.ModelDef(mdef.name, (unit,), mdef.num_classes)
+    y, _ = M.forward_f32(one, {unit.name: p}, {unit.name: s}, x, train=False)
+    return y
+
+
+def weight_tensor_order(mdef: M.ModelDef, qparams) -> List[Tuple[str, str]]:
+    """Deterministic (unit, conv-prefix) order of quantized weight inputs.
+
+    This order defines both the HLO parameter order after `images` and the
+    layout of <model>_weights.bin; the rust manifest loader mirrors it.
+    """
+    order = []
+    for unit in mdef.units:
+        for prefix in UNIT_CONVS[unit.kind]:
+            if _prefixed(prefix, "wq") in qparams[unit.name]:
+                order.append((unit.name, prefix))
+    return order

@@ -1,0 +1,110 @@
+"""Deterministic synthetic image-classification dataset ("synthshapes").
+
+Stand-in for Tiny-ImageNet (unavailable offline; see DESIGN.md §1): ten
+visually distinct classes of 32x32x3 images built from oriented gratings,
+colored blobs and checker patterns, plus per-sample noise, random phase,
+brightness jitter and translation so the task is learnable but not trivial.
+
+Everything is generated from an explicit integer seed so the artifact
+pipeline is reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 10
+IMG_SIZE = 32
+IMG_SHAPE = (IMG_SIZE, IMG_SIZE, 3)
+
+# (kind, param, color) per class. Kinds: grating / blob / checker / ring.
+_CLASS_DEFS = [
+    ("grating", {"angle": 0.0, "freq": 4.0}, (1.0, 0.2, 0.2)),
+    ("grating", {"angle": 90.0, "freq": 4.0}, (0.2, 1.0, 0.2)),
+    ("grating", {"angle": 45.0, "freq": 6.0}, (0.2, 0.4, 1.0)),
+    ("grating", {"angle": 135.0, "freq": 6.0}, (1.0, 1.0, 0.2)),
+    ("blob", {"cx": 0.3, "cy": 0.3, "sigma": 0.15}, (1.0, 0.4, 0.8)),
+    ("blob", {"cx": 0.7, "cy": 0.7, "sigma": 0.15}, (0.3, 1.0, 1.0)),
+    ("blob", {"cx": 0.5, "cy": 0.5, "sigma": 0.28}, (1.0, 0.7, 0.2)),
+    ("checker", {"cells": 4}, (0.8, 0.8, 0.8)),
+    ("ring", {"r0": 0.25, "w": 0.08}, (0.5, 1.0, 0.4)),
+    ("ring", {"r0": 0.40, "w": 0.06}, (0.7, 0.5, 1.0)),
+]
+
+
+def _base_pattern(kind: str, p: dict, rng: np.random.Generator) -> np.ndarray:
+    """Render one grayscale 32x32 pattern with randomized phase/offset."""
+    xs = np.linspace(0.0, 1.0, IMG_SIZE, dtype=np.float64)
+    xx, yy = np.meshgrid(xs, xs, indexing="xy")
+    # random translation so location alone never identifies the class
+    dx, dy = rng.uniform(-0.15, 0.15, size=2)
+    if kind == "grating":
+        theta = np.deg2rad(p["angle"] + rng.uniform(-15.0, 15.0))
+        phase = rng.uniform(0.0, 2.0 * np.pi)
+        freq = p["freq"] * rng.uniform(0.85, 1.15)
+        u = (xx + dx) * np.cos(theta) + (yy + dy) * np.sin(theta)
+        img = 0.5 + 0.5 * np.sin(2.0 * np.pi * freq * u + phase)
+    elif kind == "blob":
+        cx, cy = p["cx"] + dx, p["cy"] + dy
+        r2 = (xx - cx) ** 2 + (yy - cy) ** 2
+        img = np.exp(-r2 / (2.0 * p["sigma"] ** 2))
+    elif kind == "checker":
+        n = p["cells"]
+        phase = rng.integers(0, 2)
+        img = ((np.floor((xx + dx) * n) + np.floor((yy + dy) * n) + phase) % 2).astype(
+            np.float64
+        )
+    elif kind == "ring":
+        r = np.sqrt((xx - 0.5 - dx) ** 2 + (yy - 0.5 - dy) ** 2)
+        img = np.exp(-((r - p["r0"]) ** 2) / (2.0 * p["w"] ** 2))
+    else:  # pragma: no cover - defensive
+        raise ValueError(f"unknown pattern kind {kind!r}")
+    return img
+
+
+def _distractors(rng: np.random.Generator, k: int) -> np.ndarray:
+    """Class-independent clutter: random colored blobs shared by all classes."""
+    xs = np.linspace(0.0, 1.0, IMG_SIZE, dtype=np.float64)
+    xx, yy = np.meshgrid(xs, xs, indexing="xy")
+    img = np.zeros(IMG_SHAPE)
+    for _ in range(k):
+        cx, cy = rng.uniform(0.1, 0.9, size=2)
+        sigma = rng.uniform(0.05, 0.12)
+        col = rng.uniform(0.2, 1.0, size=3)
+        blob = np.exp(-((xx - cx) ** 2 + (yy - cy) ** 2) / (2 * sigma**2))
+        img += blob[..., None] * col[None, None, :] * rng.uniform(0.4, 0.9)
+    return img
+
+
+def make_sample(label: int, rng: np.random.Generator, noise: float = 0.5) -> np.ndarray:
+    """One (32,32,3) float32 image in [0,1] for class `label`.
+
+    Deliberately hard: heavy pixel noise, clutter blobs, color/brightness
+    jitter — trained models land at ~85-95% clean top-1 instead of
+    saturating, so fault-induced degradation is measurable (the regime the
+    paper's evaluation needs).
+    """
+    kind, p, color = _CLASS_DEFS[label]
+    gray = _base_pattern(kind, p, rng)
+    brightness = rng.uniform(0.45, 1.0)
+    col = np.asarray(color) * brightness + rng.normal(0.0, 0.08, size=3)
+    img = gray[..., None] * col[None, None, :]
+    img = img + 0.6 * _distractors(rng, rng.integers(2, 5))
+    img = img + rng.normal(0.0, noise, size=IMG_SHAPE)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def make_dataset(n: int, seed: int, noise: float = 0.5):
+    """Return (images [n,32,32,3] f32, labels [n] int32), class-balanced."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n, dtype=np.int32) % NUM_CLASSES
+    rng.shuffle(labels)
+    images = np.stack([make_sample(int(l), rng, noise) for l in labels])
+    return images, labels
+
+
+def train_eval_split(n_train: int, n_eval: int, seed: int = 1234, noise: float = 0.5):
+    """Disjoint train/eval sets drawn from independent RNG streams."""
+    tr = make_dataset(n_train, seed=seed, noise=noise)
+    ev = make_dataset(n_eval, seed=seed + 777, noise=noise)
+    return tr, ev

@@ -1,0 +1,115 @@
+"""Build-time f32 training loop (hand-rolled Adam — optax unavailable offline).
+
+Trains each mini model on the synthetic dataset to a clean top-1 well above
+chance; checkpoints are cached under artifacts/ckpt/ so `make artifacts` is
+idempotent. Runs once at artifact-build time; never on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import models as M
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    tf = t.astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, tf)
+    bc2 = 1.0 - jnp.power(b2, tf)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps), params, m, v
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("mdef",))
+def _train_step(mdef, params, state, opt, images, labels, lr):
+    def loss_fn(p):
+        logits, new_state = M.forward_f32(mdef, p, state, images, train=True)
+        return cross_entropy(logits, labels), new_state
+
+    (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, opt = adam_update(params, grads, opt, lr)
+    return params, new_state, opt, loss
+
+
+@functools.partial(jax.jit, static_argnames=("mdef",))
+def _eval_logits(mdef, params, state, images):
+    logits, _ = M.forward_f32(mdef, params, state, images, train=False)
+    return logits
+
+
+def accuracy_f32(mdef, params, state, images, labels, batch: int = 256) -> float:
+    hits = 0
+    for i in range(0, len(images), batch):
+        logits = _eval_logits(mdef, params, state, images[i : i + batch])
+        hits += int(jnp.sum(jnp.argmax(logits, -1) == labels[i : i + batch]))
+    return hits / len(images)
+
+
+def train_model(
+    mdef: M.ModelDef,
+    train_images: np.ndarray,
+    train_labels: np.ndarray,
+    steps: int = 500,
+    batch: int = 128,
+    lr: float = 2e-3,
+    seed: int = 0,
+    log_every: int = 100,
+):
+    """Train a model; returns (params, bn_state, final_loss)."""
+    params, state = M.init_params(mdef, seed)
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 99)
+    n = len(train_images)
+    loss = float("nan")
+    for step in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        cur_lr = lr * (0.1 if step > int(steps * 0.7) else 1.0)
+        params, state, opt, loss = _train_step(
+            mdef, params, state, opt, train_images[idx], train_labels[idx], cur_lr
+        )
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            print(f"  [{mdef.name}] step {step:4d} loss {float(loss):.4f}")
+    return params, state, float(loss)
+
+
+def flatten_tree(tree, prefix=""):
+    """Flatten nested dict-of-arrays to {dotted.name: array} for npz I/O."""
+    out = {}
+    for k, v in tree.items():
+        name = f"{prefix}.{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(flatten_tree(v, name))
+        else:
+            out[name] = np.asarray(v)
+    return out
+
+
+def unflatten_tree(flat):
+    out: dict = {}
+    for name, v in flat.items():
+        parts = name.split(".")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = jnp.asarray(v)
+    return out

@@ -1,0 +1,102 @@
+"""Artifact-format tests: AFWB/AFED binary layouts + manifest schema.
+
+These pin the python→rust interchange contract (the rust side has the
+mirrored parsers in rust/src/model/weights.rs and rust/src/dataset/).
+"""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_weights_bin_roundtrip(tmp_path):
+    path = tmp_path / "w.bin"
+    t1 = np.arange(-6, 6, dtype=np.int32).reshape(2, 3, 2)
+    t2 = np.array([7, -8, 9], dtype=np.int32)
+    aot.write_weights_bin(str(path), [t1, t2])
+    b = path.read_bytes()
+    assert b[:4] == b"AFWB"
+    version, count = struct.unpack("<II", b[4:12])
+    assert (version, count) == (1, 2)
+    off = 12
+    for expected in (t1, t2):
+        ndim = struct.unpack("<I", b[off : off + 4])[0]
+        off += 4
+        dims = struct.unpack(f"<{ndim}I", b[off : off + 4 * ndim])
+        off += 4 * ndim
+        assert dims == expected.shape
+        n = int(np.prod(dims))
+        got = np.frombuffer(b[off : off + 4 * n], dtype="<i4").reshape(dims)
+        off += 4 * n
+        np.testing.assert_array_equal(got, expected)
+    assert off == len(b), "no trailing bytes"
+
+
+def test_eval_bin_roundtrip(tmp_path):
+    path = tmp_path / "e.bin"
+    images = np.random.default_rng(0).random((5, 4, 4, 3)).astype(np.float32)
+    labels = np.arange(5, dtype=np.int32)
+    aot.write_eval_bin(str(path), images, labels)
+    b = path.read_bytes()
+    assert b[:4] == b"AFED"
+    version, n, h, w, c = struct.unpack("<IIIII", b[4:24])
+    assert (version, n, h, w, c) == (1, 5, 4, 4, 3)
+    img = np.frombuffer(b[24 : 24 + n * h * w * c * 4], dtype="<f4").reshape(5, 4, 4, 3)
+    np.testing.assert_array_equal(img, images)
+    lbl = np.frombuffer(b[24 + n * h * w * c * 4 :], dtype="<i4")
+    np.testing.assert_array_equal(lbl, labels)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "index.json")),
+    reason="artifacts not built",
+)
+def test_built_manifests_schema():
+    index = json.load(open(os.path.join(ARTIFACTS, "index.json")))
+    assert set(index["models"]) == {"alexnet", "squeezenet", "resnet18"}
+    for model in index["models"]:
+        man = json.load(open(os.path.join(ARTIFACTS, f"{model}_manifest.json")))
+        for key in (
+            "model",
+            "num_units",
+            "precision",
+            "faulty_bits",
+            "batch",
+            "hlo",
+            "weights",
+            "clean_acc_quant",
+            "weight_scale",
+            "units",
+            "weight_tensors",
+            "act_scales",
+        ):
+            assert key in man, f"{model}: missing {key}"
+        assert len(man["units"]) == man["num_units"]
+        # activation chain: unit i out_bytes == unit i+1 in_bytes
+        for a, b in zip(man["units"], man["units"][1:]):
+            assert a["out_bytes"] == b["in_bytes"]
+        # all weight tensors reference real units and share the global scale
+        unit_names = {u["name"] for u in man["units"]}
+        for wt in man["weight_tensors"]:
+            assert wt["unit"] in unit_names
+            assert wt["scale"] == man["weight_scale"]
+        # the HLO must not contain elided constants (the silent-zeros bug)
+        hlo = open(os.path.join(ARTIFACTS, man["hlo"])).read()
+        assert "constant({...})" not in hlo, f"{model}: elided constants in HLO"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "index.json")),
+    reason="artifacts not built",
+)
+def test_built_models_trained_above_chance():
+    index = json.load(open(os.path.join(ARTIFACTS, "index.json")))
+    for model, acc in index["clean_acc"].items():
+        assert acc > 0.7, f"{model} clean quantized acc {acc}"

@@ -1,0 +1,30 @@
+"""Cross-language contract: the golden bit-flip vectors consumed by the
+rust mirror (rust/tests/data/bitflip_golden.json, asserted by the rust test
+suite against rust/src/util/bits.rs) must match ref.py forever.
+
+If this test fails, the Algorithm-2 randomness contract drifted — fix the
+implementation, do NOT regenerate the goldens casually.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+GOLDEN = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "data", "bitflip_golden.json"
+)
+
+
+def test_golden_vectors_match_ref():
+    with open(GOLDEN) as f:
+        cases = json.load(f)
+    assert len(cases) >= 18
+    for c in cases:
+        q = np.asarray(c["q"], np.int32)
+        rnd = np.asarray(c["rnd"], np.uint32)
+        got = np.asarray(ref.flip_mask(jnp.asarray(rnd), c["rate"], c["bits"])) ^ q
+        np.testing.assert_array_equal(got, np.asarray(c["expected"], np.int32), err_msg=str(c["rate"]))

@@ -1,0 +1,87 @@
+"""Integration tests of the exported computation (model.faulty_forward):
+
+the L2 graph must be (a) runnable for every model, (b) clean at zero rates,
+(c) monotonically degraded by growing fault rates, (d) deterministic given
+the PRNG key — the properties the L3 optimizer relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models as M, quantize as Q
+from compile.model import make_export_fn
+from compile.quantize import _prefixed
+
+BATCH = 8
+
+
+@pytest.fixture(scope="module", params=["alexnet", "squeezenet", "resnet18"])
+def exported(request):
+    mdef = M.MODELS[request.param]()
+    params, state = M.init_params(mdef, seed=11)
+    qparams, _ = Q.quantize_model(mdef, params, state, 8)
+    rng = np.random.default_rng(1)
+    images = rng.uniform(0, 1, (BATCH, 32, 32, 3)).astype(np.float32)
+    act_scales = Q.calibrate_act_scales(mdef, params, state, images, 8)
+    fn, order = make_export_fn(mdef, qparams, act_scales, bits=4, precision=8)
+    wqs = [qparams[u][_prefixed(p, "wq")] for (u, p) in order]
+    return mdef, jax.jit(fn), wqs, jnp.asarray(images)
+
+
+def _run(exported, w_rates, a_rates, key=(1, 2)):
+    mdef, fn, wqs, images = exported
+    L = mdef.num_units
+    wr = jnp.full((L,), w_rates, jnp.float32) if np.isscalar(w_rates) else w_rates
+    ar = jnp.full((L,), a_rates, jnp.float32) if np.isscalar(a_rates) else a_rates
+    (logits,) = fn(images, *wqs, wr, ar, jnp.asarray(key, jnp.uint32))
+    return np.asarray(logits)
+
+
+def test_output_shape_and_finite(exported):
+    logits = _run(exported, 0.0, 0.0)
+    assert logits.shape == (BATCH, 10)
+    assert np.isfinite(logits).all()
+
+
+def test_zero_rate_is_deterministic_wrt_key(exported):
+    """With rates=0 the PRNG key must not influence the output."""
+    a = _run(exported, 0.0, 0.0, key=(1, 2))
+    b = _run(exported, 0.0, 0.0, key=(99, 100))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_same_key_same_faults(exported):
+    a = _run(exported, 0.3, 0.3, key=(5, 6))
+    b = _run(exported, 0.3, 0.3, key=(5, 6))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_different_key_different_faults(exported):
+    a = _run(exported, 0.3, 0.3, key=(5, 6))
+    b = _run(exported, 0.3, 0.3, key=(7, 8))
+    assert not np.array_equal(a, b)
+
+
+def test_faults_perturb_logits(exported):
+    clean = _run(exported, 0.0, 0.0)
+    faulty = _run(exported, 0.4, 0.4)
+    assert np.abs(clean - faulty).max() > 1e-3
+
+
+def test_perturbation_grows_with_rate(exported):
+    clean = _run(exported, 0.0, 0.0)
+    d_lo = np.abs(_run(exported, 0.05, 0.05) - clean).mean()
+    d_hi = np.abs(_run(exported, 0.4, 0.4) - clean).mean()
+    assert d_hi > d_lo
+
+
+def test_per_unit_rate_vector_respected(exported):
+    """Faulting only unit 0's weights must differ from faulting only the last."""
+    mdef, fn, wqs, images = exported
+    L = mdef.num_units
+    z = jnp.zeros((L,), jnp.float32)
+    a = _run(exported, z.at[0].set(0.4), 0.0)
+    b = _run(exported, z.at[L - 1].set(0.4), 0.0)
+    assert not np.array_equal(a, b)

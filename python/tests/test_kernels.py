@@ -1,0 +1,131 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes, rates and bit counts; integer outputs must match
+bit-for-bit, f32 matmuls to tight tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bitflip import bitflip_dequant
+from compile.kernels.qmatmul import qmatmul_bitflip
+
+
+def _rand_q(key, shape, precision=8):
+    lim = 1 << (precision - 1)
+    return jax.random.randint(key, shape, -lim, lim, dtype=jnp.int32)
+
+
+def _rand_bits(key, shape):
+    return jax.random.bits(key, shape, dtype=jnp.uint32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 70),
+    cols=st.integers(1, 40),
+    rate=st.floats(0.0, 1.0),
+    bits=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitflip_matches_ref(rows, cols, rate, bits, seed):
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    q = _rand_q(k1, (rows, cols))
+    rnd = _rand_bits(k2, (rows, cols))
+    got = bitflip_dequant(q, rnd, rate, 0.015625, bits=bits)
+    want = ref.bitflip_dequant_ref(q, rnd, rate, 0.015625, bits=bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 64),
+    n=st.integers(1, 150),
+    rate=st.floats(0.0, 1.0),
+    bits=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_matches_ref(m, k, n, rate, bits, seed):
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    wq = _rand_q(k2, (k, n))
+    rnd = _rand_bits(k3, (k, n))
+    got = qmatmul_bitflip(x, wq, rnd, rate, 0.0078125, bits=bits)
+    want = ref.qmatmul_bitflip_ref(x, wq, rnd, rate, 0.0078125, bits=bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_bitflip_3d_shape_roundtrip():
+    key = jax.random.key(3)
+    q = _rand_q(key, (5, 7, 11))
+    rnd = _rand_bits(key, (5, 7, 11))
+    out = bitflip_dequant(q, rnd, 0.25, 0.5, bits=4)
+    assert out.shape == (5, 7, 11)
+    want = ref.bitflip_dequant_ref(q, rnd, 0.25, 0.5, bits=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_rate_zero_is_identity_dequant():
+    key = jax.random.key(4)
+    q = _rand_q(key, (33, 65))
+    rnd = _rand_bits(key, (33, 65))
+    out = bitflip_dequant(q, rnd, 0.0, 2.0, bits=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(q, np.float32) * 2.0)
+
+
+def test_rate_one_flips_all_bits():
+    key = jax.random.key(5)
+    q = _rand_q(key, (16, 128))
+    rnd = _rand_bits(key, (16, 128))
+    out = bitflip_dequant(q, rnd, 1.0, 1.0, bits=4)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(np.asarray(q) ^ 0xF, np.float32)
+    )
+
+
+def test_flip_statistics_match_rate():
+    """Empirical per-bit flip frequency ~= round(rate*256)/256."""
+    key = jax.random.key(6)
+    n = 200_000
+    q = jnp.zeros((n,), jnp.int32)
+    rnd = _rand_bits(key, (n,))
+    rate = 0.2
+    out = np.asarray(bitflip_dequant(q, rnd, rate, 1.0, bits=4)).astype(np.int64)
+    expect = round(rate * 256) / 256
+    for i in range(4):
+        freq = ((out >> i) & 1).mean()
+        assert abs(freq - expect) < 0.005, (i, freq, expect)
+
+
+def test_flips_limited_to_lsbs():
+    key = jax.random.key(7)
+    q = _rand_q(key, (4096,), precision=8)
+    rnd = _rand_bits(key, (4096,))
+    for bits in (1, 2, 3, 4):
+        out = np.asarray(bitflip_dequant(q, rnd, 1.0, 1.0, bits=bits)).astype(np.int64)
+        diff = out ^ np.asarray(q)
+        assert (diff & ~((1 << bits) - 1)).max() == 0
+
+
+def test_qmatmul_identity_weights():
+    """rate=0 with identity-matrix weights reproduces x * scale."""
+    x = jnp.arange(12.0, dtype=jnp.float32).reshape(3, 4)
+    wq = jnp.eye(4, dtype=jnp.int32) * 64
+    rnd = jnp.zeros((4, 4), jnp.uint32) | jnp.uint32(0xFFFFFFFF)
+    out = qmatmul_bitflip(x, wq, rnd, 0.0, 0.25, bits=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 16.0, rtol=1e-6)
+
+
+def test_bitflip_negative_values_twos_complement():
+    """LSB flips on negative values behave as int16/int8 two's complement."""
+    q = jnp.array([-1, -128, -37, 127], jnp.int32)
+    rnd = jnp.zeros((4,), jnp.uint32)  # all slices 0 -> all bits flip at rate 1
+    out = np.asarray(bitflip_dequant(q, rnd, 1.0, 1.0, bits=4)).astype(np.int64)
+    np.testing.assert_array_equal(out, np.array([-1, -128, -37, 127]) ^ 0xF)

@@ -1,0 +1,91 @@
+"""L2 model structure tests: shapes, parameter trees, unit profiling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models as M
+
+
+@pytest.fixture(scope="module", params=["alexnet", "squeezenet", "resnet18"])
+def model(request):
+    mdef = M.MODELS[request.param]()
+    params, state = M.init_params(mdef, seed=0)
+    return mdef, params, state
+
+
+def test_forward_shapes(model):
+    mdef, params, state = model
+    x = jnp.zeros((4, 32, 32, 3), jnp.float32)
+    logits, new_state = M.forward_f32(mdef, params, state, x, train=False)
+    assert logits.shape == (4, 10)
+    assert set(new_state) == {u.name for u in mdef.units}
+
+
+def test_train_mode_updates_bn_state(model):
+    mdef, params, state = model
+    has_bn = any("mean" in k for s in state.values() for k in s)
+    if not has_bn:
+        pytest.skip("model has no BN units")
+    x = jax.random.normal(jax.random.key(0), (8, 32, 32, 3), jnp.float32)
+    _, new_state = M.forward_f32(mdef, params, state, x, train=True)
+    changed = False
+    for uname, s in state.items():
+        for k, v in s.items():
+            if k.endswith("mean") and not np.allclose(v, new_state[uname][k]):
+                changed = True
+    assert changed
+
+
+def test_eval_mode_preserves_bn_state(model):
+    mdef, params, state = model
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3), jnp.float32)
+    _, new_state = M.forward_f32(mdef, params, state, x, train=False)
+    for uname, s in state.items():
+        for k, v in s.items():
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(new_state[uname][k]))
+
+
+def test_profile_units_consistency(model):
+    mdef, params, state = model
+    rows = M.profile_units(mdef, precision=8)
+    assert len(rows) == mdef.num_units
+    for r in rows:
+        assert r["macs"] > 0
+        assert r["in_bytes"] > 0 and r["out_bytes"] > 0
+    # final unit emits the logits
+    assert rows[-1]["out_shape"] == [10]
+    # w_params matches the actual parameter count of quantizable weights
+    from compile.quantize import UNIT_CONVS, _prefixed
+
+    for unit, row in zip(mdef.units, rows):
+        wp = sum(
+            params[unit.name][_prefixed(p, "w")].size
+            for p in UNIT_CONVS[unit.kind]
+            if _prefixed(p, "w") in params[unit.name]
+        )
+        assert wp == row["w_params"], unit.name
+
+
+def test_profile_in_out_bytes_chain(model):
+    """Unit i's out_bytes equals unit i+1's in_bytes (same activation)."""
+    mdef, _, _ = model
+    rows = M.profile_units(mdef, precision=8)
+    for a, b in zip(rows, rows[1:]):
+        assert a["out_bytes"] == b["in_bytes"], (a["name"], b["name"])
+
+
+def test_num_units_match_paper_granularity():
+    assert M.alexnet_mini().num_units == 8  # 5 conv + 3 fc
+    assert M.squeezenet_mini().num_units == 6  # conv1 + 4 fire + conv10
+    assert M.resnet18_mini().num_units == 10  # conv1 + 8 blocks + fc
+
+
+def test_init_deterministic():
+    mdef = M.alexnet_mini()
+    p1, _ = M.init_params(mdef, seed=42)
+    p2, _ = M.init_params(mdef, seed=42)
+    for u in p1:
+        for k in p1[u]:
+            np.testing.assert_array_equal(np.asarray(p1[u][k]), np.asarray(p2[u][k]))

@@ -1,0 +1,106 @@
+"""Quantization-scheme tests: BN fold correctness, pow2 scales, PTQ fidelity."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers as ly, models as M, quantize as Q
+
+
+def test_fold_bn_equivalence():
+    """conv+BN(eval) == conv with folded weights, to numerical tolerance."""
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (2, 8, 8, 3), jnp.float32)
+    w = jax.random.normal(ks[1], (3, 3, 3, 5), jnp.float32) * 0.2
+    b = jax.random.normal(ks[2], (5,), jnp.float32) * 0.1
+    gamma = jax.random.uniform(ks[3], (5,), jnp.float32, 0.5, 1.5)
+    beta = jax.random.normal(ks[4], (5,), jnp.float32) * 0.1
+    mean = jax.random.normal(ks[5], (5,), jnp.float32) * 0.1
+    var = jnp.abs(jax.random.normal(ks[5], (5,), jnp.float32)) + 0.5
+
+    y_bn = ly.batchnorm_eval(ly.conv2d(x, w, 1, 1) + b, gamma, beta, mean, var)
+    wf, bf = ly.fold_bn(w, b, gamma, beta, mean, var)
+    y_fold = ly.conv2d(x, wf, 1, 1) + bf
+    np.testing.assert_allclose(np.asarray(y_bn), np.asarray(y_fold), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(max_abs=st.floats(1e-6, 1e4), precision=st.sampled_from([8, 16]))
+def test_pow2_scale_properties(max_abs, precision):
+    _, qmax = ly.quant_range(precision)
+    s = Q.pow2_scale(max_abs, qmax)
+    # power of two
+    assert math.log2(s) == round(math.log2(s))
+    # covers the range, and is the smallest such power
+    assert s * qmax >= max_abs * 0.999999
+    assert (s / 2) * qmax < max_abs * 1.000001 or s <= 2 ** -40
+
+
+def test_quant_range():
+    assert ly.quant_range(8) == (-128, 127)
+    assert ly.quant_range(16) == (-32768, 32767)
+
+
+@pytest.mark.parametrize("precision", [8, 16])
+def test_quantize_model_global_scale(precision):
+    mdef = M.alexnet_mini()
+    params, state = M.init_params(mdef, seed=1)
+    qparams, scale = Q.quantize_model(mdef, params, state, precision)
+    # every tensor shares the global scale
+    for u in mdef.units:
+        for k, v in qparams[u.name].items():
+            if k.endswith("scale"):
+                assert v == scale
+    # values in range
+    _, qmax = ly.quant_range(precision)
+    for u in mdef.units:
+        for k, v in qparams[u.name].items():
+            if k.endswith("wq"):
+                assert int(jnp.max(jnp.abs(v))) <= qmax
+                assert v.dtype == jnp.int32
+
+
+def test_quantization_error_bounded():
+    """Dequantized weights are within scale/2 of the folded f32 weights."""
+    mdef = M.squeezenet_mini()
+    params, state = M.init_params(mdef, seed=2)
+    qparams, scale = Q.quantize_model(mdef, params, state, 8)
+    folded = Q.fold_all(mdef, params, state)
+    for (uname, prefix), (w, _) in folded.items():
+        wq = qparams[uname][Q._prefixed(prefix, "wq")]
+        err = np.abs(np.asarray(wq, np.float32) * scale - np.asarray(w))
+        # clipping cannot occur (scale covers global max), so error <= s/2
+        assert err.max() <= scale / 2 + 1e-7, (uname, prefix)
+
+
+def test_weight_tensor_order_stable_and_complete():
+    mdef = M.resnet18_mini()
+    params, state = M.init_params(mdef, seed=3)
+    qparams, _ = Q.quantize_model(mdef, params, state, 8)
+    order = Q.weight_tensor_order(mdef, qparams)
+    # 1 conv1 + blocks(2 or 3 convs) + 1 fc
+    n_proj = sum(1 for u in mdef.units if "p_wq" in qparams[u.name])
+    assert len(order) == 1 + 8 * 2 + n_proj + 1
+    assert order == Q.weight_tensor_order(mdef, qparams)
+    # units appear in model order
+    unit_order = [u.name for u in mdef.units]
+    seen = [u for (u, _) in order]
+    assert sorted(range(len(seen)), key=lambda i: unit_order.index(seen[i])) == list(
+        range(len(seen))
+    )
+
+
+def test_calibrate_act_scales_pow2_and_positive():
+    mdef = M.alexnet_mini()
+    params, state = M.init_params(mdef, seed=4)
+    images = np.random.default_rng(0).uniform(0, 1, (16, 32, 32, 3)).astype(np.float32)
+    scales = Q.calibrate_act_scales(mdef, params, state, images, 8)
+    assert set(scales) == {u.name for u in mdef.units}
+    for v in scales.values():
+        assert v > 0
+        assert math.log2(v) == round(math.log2(v))

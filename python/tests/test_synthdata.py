@@ -1,0 +1,53 @@
+"""Synthetic dataset sanity: determinism, balance, value ranges, difficulty."""
+
+import numpy as np
+
+from compile import synthdata as S
+
+
+def test_deterministic():
+    a = S.make_dataset(64, seed=5)
+    b = S.make_dataset(64, seed=5)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_seed_changes_data():
+    a = S.make_dataset(64, seed=5)
+    b = S.make_dataset(64, seed=6)
+    assert not np.array_equal(a[0], b[0])
+
+
+def test_class_balance():
+    _, labels = S.make_dataset(200, seed=0)
+    counts = np.bincount(labels, minlength=S.NUM_CLASSES)
+    assert counts.min() == counts.max() == 20
+
+
+def test_value_range_and_dtype():
+    images, labels = S.make_dataset(32, seed=1)
+    assert images.dtype == np.float32 and labels.dtype == np.int32
+    assert images.shape == (32, 32, 32, 3)
+    assert images.min() >= 0.0 and images.max() <= 1.0
+
+
+def test_split_disjoint_streams():
+    tr, ev = S.train_eval_split(32, 32, seed=9)
+    # different RNG streams -> no identical images across the split
+    assert not np.array_equal(tr[0][:32], ev[0][:32])
+
+
+def test_every_class_renderable():
+    rng = np.random.default_rng(0)
+    for c in range(S.NUM_CLASSES):
+        img = S.make_sample(c, rng)
+        assert img.shape == S.IMG_SHAPE
+        assert np.isfinite(img).all()
+
+
+def test_intra_class_variability():
+    """Augmentation: two samples of the same class must differ."""
+    rng = np.random.default_rng(0)
+    a = S.make_sample(0, rng)
+    b = S.make_sample(0, rng)
+    assert np.abs(a - b).mean() > 0.01

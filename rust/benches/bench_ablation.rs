@@ -1,0 +1,115 @@
+//! Ablations (DESIGN.md §4): the design choices behind AFarePart.
+//!
+//! A1 — ΔAcc mode: exact in-graph injection vs sensitivity surrogate
+//!      (fidelity of the estimate + wall-time difference).
+//! A3 — link cost: AFarePart excludes link latency/energy (§VI-E);
+//!      measure how including it changes the deployed mapping's metrics.
+//! A4 — optimizer: NSGA-II vs random search at the same evaluation budget.
+//!
+//! Run: `cargo bench --bench bench_ablation`.
+
+use afarepart::baselines::random_search_mapping;
+use afarepart::bench::suite::bench_budget;
+use afarepart::bench::{bench_header, Stopwatch};
+use afarepart::coordinator::OfflineRunner;
+use afarepart::experiment::Experiment;
+use afarepart::faults::FaultScenario;
+use afarepart::partition::{DaccMode, PartitionEvaluator};
+use afarepart::util::fmt::{pct, Table};
+use afarepart::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let fast = bench_header("Ablations — dAcc mode, link cost, optimizer");
+    let (mut cfg, nsga2) = bench_budget(fast);
+    cfg.model = "alexnet".into();
+    cfg.fault_rate = 0.2;
+    let scenario = FaultScenario::InputWeight;
+    let mut exp = Experiment::load(&cfg)?;
+
+    // ---------- A1: surrogate fidelity + speed ----------
+    println!("[A1] measuring sensitivity table...");
+    let sw = Stopwatch::start();
+    exp.measure_sensitivity(&[0.05, 0.1, 0.2, 0.4])?;
+    let table_ms = sw.ms();
+    let table = exp.sensitivity.as_ref().unwrap().clone();
+
+    // fidelity: compare surrogate vs exact dAcc on random mappings
+    let mut rng = Rng::new(42);
+    let l = exp.model.num_units();
+    let mut exact_ev = exp.partition_evaluator(scenario);
+    let mut sur_ev = PartitionEvaluator::new(
+        &exp.model.manifest,
+        &exp.platform,
+        exact_ev.dev_w_rates.clone(),
+        exact_ev.dev_a_rates.clone(),
+        scenario,
+        exp.clean_acc,
+        false,
+        DaccMode::Surrogate(&table),
+    );
+    let n_cmp = if fast { 8 } else { 16 };
+    let mut abs_err = Vec::new();
+    let mut order_pairs = 0;
+    let mut order_agree = 0;
+    let mut points = Vec::new();
+    for _ in 0..n_cmp {
+        let m = afarepart::partition::Mapping::random(&mut rng, l, 2);
+        let de = exact_ev.dacc(&m)?;
+        let ds = sur_ev.dacc(&m)?;
+        abs_err.push((de - ds).abs());
+        points.push((de, ds));
+    }
+    for i in 0..points.len() {
+        for j in (i + 1)..points.len() {
+            if (points[i].0 - points[j].0).abs() > 0.02 {
+                order_pairs += 1;
+                if (points[i].0 < points[j].0) == (points[i].1 < points[j].1) {
+                    order_agree += 1;
+                }
+            }
+        }
+    }
+    let mean_err = abs_err.iter().sum::<f64>() / abs_err.len() as f64;
+    println!(
+        "[A1] surrogate vs exact on {n_cmp} random mappings: mean |err| = {:.3} ({} of clean), ranking agreement {}/{}",
+        mean_err,
+        pct(mean_err / exp.clean_acc),
+        order_agree,
+        order_pairs
+    );
+    println!("[A1] one-time table cost {:.1}s; per-candidate cost ~0 vs one PJRT exec", table_ms / 1e3);
+
+    // ---------- A3: link cost on/off ----------
+    let runner = OfflineRunner { nsga2: nsga2.clone(), ..Default::default() };
+    let mut rows = Table::new(&["config", "mapping", "dAcc", "lat ms", "energy mJ", "boundaries"]);
+    for link in [false, true] {
+        let mut ev = exp.partition_evaluator(scenario);
+        ev.include_link_cost = link;
+        let out = runner.run(&mut ev, vec![], |_| {})?;
+        rows.row(vec![
+            if link { "with link cost".into() } else { "no link cost (paper)".to_string() },
+            out.deployed.display(),
+            pct(out.deployed_objectives[2]),
+            format!("{:.2}", out.deployed_objectives[0]),
+            format!("{:.3}", out.deployed_objectives[1]),
+            out.deployed.boundaries().to_string(),
+        ]);
+    }
+    println!("\n[A3] link-cost ablation:\n{}", rows.render());
+
+    // ---------- A4: NSGA-II vs random search at equal budget ----------
+    let mut ev = exp.partition_evaluator(scenario);
+    let out = runner.run(&mut ev, vec![], |_| {})?;
+    let budget = nsga2.pop_size * (nsga2.generations + 1);
+    let mut ev_rs = exp.partition_evaluator(scenario);
+    let rs = random_search_mapping(&mut ev_rs, budget, (1.0, 10.0, 100.0), 7)?;
+    let mut scorer = exp.partition_evaluator(scenario);
+    let rs_acc = scorer.faulty_accuracy(&rs)?;
+    let afp_acc = exp.clean_acc - out.deployed_objectives[2];
+    println!(
+        "[A4] equal budget ({budget} evals): NSGA-II P* acc {} vs random-search {} (scalarized)",
+        pct(afp_acc),
+        pct(rs_acc)
+    );
+    Ok(())
+}

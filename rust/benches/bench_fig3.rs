@@ -1,0 +1,61 @@
+//! Reproduces paper Fig. 3: top-1 accuracy of CNNParted, Fault-unaware
+//! and AFarePart across the three CNNs at fault rate 20% in weights.
+//!
+//! Paper's series (weight faults, FR = 0.2):
+//!   AlexNet    : CNNParted 74.2, Flt-unaware 72.0, AFarePart 81.0
+//!   SqueezeNet : CNNParted 67.7, Flt-unaware 68.3, AFarePart 76.5
+//!   ResNet18   : CNNParted 83.9, Flt-unaware 82.1, AFarePart 88.4
+//! The shape to reproduce: AFarePart's bar is the tallest for every model.
+//!
+//! Run: `cargo bench --bench bench_fig3` (AFARE_BENCH_FAST=1 to shrink).
+
+use afarepart::bench::suite::{bench_budget, run_cell, Tool};
+use afarepart::bench::{bench_header, Stopwatch};
+use afarepart::experiment::Experiment;
+use afarepart::faults::FaultScenario;
+use afarepart::util::fmt::{pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let fast = bench_header("Fig. 3 — top-1 accuracy @ FR=20% weight faults, 3 CNNs x 3 tools");
+    let (mut cfg, nsga2) = bench_budget(fast);
+    cfg.fault_rate = 0.2;
+    cfg.scenario = FaultScenario::WeightOnly;
+
+    let mut table = Table::new(&[
+        "model",
+        "clean",
+        "CNNParted",
+        "Flt-unware",
+        "AFarePart",
+        "AFP gain vs best baseline",
+    ]);
+    let sw = Stopwatch::start();
+    for model in ["alexnet", "squeezenet", "resnet18"] {
+        cfg.model = model.into();
+        let exp = Experiment::load(&cfg)?;
+        let mut accs = Vec::new();
+        for tool in Tool::all() {
+            let cell = run_cell(&exp, FaultScenario::WeightOnly, &nsga2, tool)?;
+            println!(
+                "  {model:10} {:10} -> map {} acc {}",
+                tool.label(),
+                cell.mapping.display(),
+                pct(cell.acc)
+            );
+            accs.push(cell.acc);
+        }
+        let gain = accs[2] - accs[0].max(accs[1]);
+        table.row(vec![
+            model.to_string(),
+            pct(exp.clean_acc),
+            pct(accs[0]),
+            pct(accs[1]),
+            pct(accs[2]),
+            format!("{:+.1} pts", gain * 100.0),
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!("total wall: {:.1}s", sw.s());
+    println!("shape check: AFarePart column must dominate both baselines per row.");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Reproduces paper Fig. 4: accuracy vs. fault rate (weight faults) for
+//! ResNet18 under the three partitioning strategies, FR in 10%..40%.
+//!
+//! Shape to reproduce: every curve decays as FR grows; the AFarePart curve
+//! dominates (sits above) both fault-agnostic baselines at every FR.
+//!
+//! Run: `cargo bench --bench bench_fig4` (AFARE_BENCH_FAST=1 to shrink).
+
+use afarepart::bench::suite::{bench_budget, run_cell, Tool};
+use afarepart::bench::{bench_header, Stopwatch};
+use afarepart::experiment::Experiment;
+use afarepart::faults::FaultScenario;
+use afarepart::util::fmt::{pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let fast = bench_header("Fig. 4 — accuracy vs fault rate (ResNet18, weight faults)");
+    let (mut cfg, nsga2) = bench_budget(fast);
+    cfg.model = "resnet18".into();
+    cfg.scenario = FaultScenario::WeightOnly;
+
+    let rates = [0.1f32, 0.2, 0.3, 0.4];
+    let mut series: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    let sw = Stopwatch::start();
+    for &fr in &rates {
+        cfg.fault_rate = fr;
+        let exp = Experiment::load(&cfg)?;
+        for (ti, tool) in Tool::all().into_iter().enumerate() {
+            let cell = run_cell(&exp, FaultScenario::WeightOnly, &nsga2, tool)?;
+            println!("  FR={fr:.1} {:10} -> {}", tool.label(), pct(cell.acc));
+            series[ti].push(cell.acc);
+        }
+    }
+
+    let mut table = Table::new(&["tool", "FR=10%", "FR=20%", "FR=30%", "FR=40%"]);
+    for (ti, tool) in Tool::all().into_iter().enumerate() {
+        let mut row = vec![tool.label().to_string()];
+        row.extend(series[ti].iter().map(|&a| pct(a)));
+        table.row(row);
+    }
+    println!("\n{}", table.render());
+
+    // shape checks
+    let afp = &series[2];
+    let monotone_ok = afp.windows(2).all(|w| w[1] <= w[0] + 0.03);
+    let dominates =
+        (0..rates.len()).all(|i| afp[i] + 1e-9 >= series[0][i].min(series[1][i]));
+    println!("monotone decay (AFarePart, 3pt tolerance): {monotone_ok}");
+    println!("AFarePart >= min(baselines) at every FR:  {dominates}");
+    println!("total wall: {:.1}s", sw.s());
+    Ok(())
+}

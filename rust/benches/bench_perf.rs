@@ -1,0 +1,114 @@
+//! Performance benches (EXPERIMENTS.md §Perf): the L3 hot paths.
+//!
+//! * PJRT batched execution latency (clean + faulty) per model.
+//! * NSGA-II optimizer throughput on the analytical objectives (no PJRT).
+//! * ΔAcc cache effect: NSGA-II wall time with and without memoization.
+//! * Evaluator scalar costs (latency/energy models, rate-vector build).
+//!
+//! Run: `cargo bench --bench bench_perf`.
+
+use afarepart::bench::suite::bench_budget;
+use afarepart::bench::{bench_header, bench_ms, BenchConfig, BenchReport, Stopwatch};
+use afarepart::coordinator::offline::optimize_partitions;
+use afarepart::experiment::Experiment;
+use afarepart::faults::{FaultScenario, RateVectors};
+use afarepart::nsga2::Nsga2Config;
+use afarepart::partition::{DaccMode, Mapping, PartitionEvaluator};
+use afarepart::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let fast = bench_header("Perf — runtime exec, optimizer throughput, cache effect");
+    let (mut cfg, _) = bench_budget(fast);
+    let mut report = BenchReport::new();
+    let bc = BenchConfig { warmup_iters: 2, sample_iters: if fast { 5 } else { 10 } };
+
+    for model in ["alexnet", "squeezenet", "resnet18"] {
+        cfg.model = model.into();
+        let exp = Experiment::load(&cfg)?;
+        let l = exp.model.num_units();
+        let zero = RateVectors::zeros(l);
+        let faulty = RateVectors {
+            w_rates: vec![0.2; l],
+            a_rates: vec![0.2; l],
+        };
+        let mut k = 0u32;
+        report.add(
+            format!("pjrt exec clean  b64 [{model}]"),
+            bench_ms(bc, || {
+                k += 1;
+                exp.acc_eval.accuracy(&exp.model, &zero, k, 1).unwrap();
+            }),
+        );
+        report.add(
+            format!("pjrt exec faulty b64 [{model}]"),
+            bench_ms(bc, || {
+                k += 1;
+                exp.acc_eval.accuracy(&exp.model, &faulty, k, 1).unwrap();
+            }),
+        );
+    }
+
+    // optimizer throughput on analytical objectives only (DaccMode::None):
+    // isolates the NSGA-II machinery itself.
+    cfg.model = "resnet18".into();
+    let exp = Experiment::load(&cfg)?;
+    let mk_eval = || {
+        PartitionEvaluator::new(
+            &exp.model.manifest,
+            &exp.platform,
+            vec![0.2, 0.03],
+            vec![0.2, 0.03],
+            FaultScenario::InputWeight,
+            exp.clean_acc,
+            false,
+            DaccMode::None,
+        )
+    };
+    let nsga = Nsga2Config { pop_size: 60, generations: 60, ..Default::default() };
+    let evals = nsga.pop_size * (nsga.generations + 1);
+    let s = bench_ms(bc, || {
+        let mut ev = mk_eval();
+        optimize_partitions(&mut ev, &nsga, false, vec![], |_| {});
+    });
+    println!(
+        "NSGA-II machinery (pop 60 x gens 60, analytical objectives): {:.2} ms/run = {:.0} evals/ms",
+        s.mean,
+        evals as f64 / s.mean
+    );
+    report.add("nsga2 60x60 analytical", s);
+
+    // evaluator scalar costs
+    let ev = mk_eval();
+    let mut rng = Rng::new(1);
+    let maps: Vec<Mapping> =
+        (0..1024).map(|_| Mapping::random(&mut rng, exp.model.num_units(), 2)).collect();
+    let mut i = 0;
+    report.add(
+        "latency+energy model x1024",
+        bench_ms(bc, || {
+            for m in &maps {
+                std::hint::black_box(ev.latency_ms(m) + ev.energy_mj(m));
+            }
+            i += 1;
+        }),
+    );
+
+    // cache effect on a real exact-mode optimization (small budget)
+    let sw = Stopwatch::start();
+    let mut ev = exp.partition_evaluator(FaultScenario::InputWeight);
+    let small = Nsga2Config { pop_size: 12, generations: 4, ..Default::default() };
+    optimize_partitions(&mut ev, &small, true, vec![], |_| {});
+    let (hits, misses, rate) = ev.cache_stats();
+    println!(
+        "exact-mode NSGA-II 12x4 [resnet18]: {:.1}s wall, cache {hits} hits / {misses} misses ({:.0}% hit rate)",
+        sw.s(),
+        rate * 100.0
+    );
+    println!(
+        "  -> without memoization this run would cost ~{:.0}x more PJRT executions",
+        (hits + misses) as f64 / misses.max(1) as f64
+    );
+
+    println!("\n{}", report.render());
+    Ok(())
+}

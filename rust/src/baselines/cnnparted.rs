@@ -1,0 +1,76 @@
+//! CNNParted baseline (Kreß et al. 2023): fault-agnostic NSGA-II over
+//! {latency, energy} with link costs modeled, selecting aggressively for
+//! combined performance/efficiency.
+
+use anyhow::Result;
+
+use crate::coordinator::offline::optimize_partitions;
+use crate::nsga2::{Individual, Nsga2Config};
+use crate::partition::{Mapping, PartitionEvaluator};
+
+/// CNNParted-style partitioner.
+pub struct CnnParted {
+    pub nsga2: Nsga2Config,
+}
+
+impl Default for CnnParted {
+    fn default() -> Self {
+        CnnParted { nsga2: Nsga2Config::default() }
+    }
+}
+
+impl CnnParted {
+    pub fn new(nsga2: Nsga2Config) -> Self {
+        CnnParted { nsga2 }
+    }
+
+    /// Aggressive perf/energy selection: min of normalized latency+energy.
+    pub fn select(front: &[Individual]) -> Option<&Individual> {
+        if front.is_empty() {
+            return None;
+        }
+        let min_l = front.iter().map(|i| i.objectives[0]).fold(f64::INFINITY, f64::min);
+        let max_l = front.iter().map(|i| i.objectives[0]).fold(f64::NEG_INFINITY, f64::max);
+        let min_e = front.iter().map(|i| i.objectives[1]).fold(f64::INFINITY, f64::min);
+        let max_e = front.iter().map(|i| i.objectives[1]).fold(f64::NEG_INFINITY, f64::max);
+        let norm = |x: f64, lo: f64, hi: f64| if hi > lo { (x - lo) / (hi - lo) } else { 0.0 };
+        front.iter().min_by(|a, b| {
+            let sa = norm(a.objectives[0], min_l, max_l) + norm(a.objectives[1], min_e, max_e);
+            let sb = norm(b.objectives[0], min_l, max_l) + norm(b.objectives[1], min_e, max_e);
+            sa.partial_cmp(&sb).unwrap()
+        })
+    }
+
+    /// Run the CNNParted flow; link costs are enabled for the duration of
+    /// the optimization (CNNParted models them; AFarePart doesn't — §VI-E).
+    pub fn partition(&self, ev: &mut PartitionEvaluator) -> Result<Mapping> {
+        let saved_link = ev.include_link_cost;
+        ev.include_link_cost = true;
+        let front = optimize_partitions(ev, &self.nsga2, false, vec![], |_| {});
+        ev.include_link_cost = saved_link;
+        let chosen = Self::select(&front).expect("empty CNNParted front");
+        Ok(Mapping(chosen.genome.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ind(l: f64, e: f64) -> Individual {
+        Individual { genome: vec![0], objectives: vec![l, e], rank: 0, crowding: 0.0 }
+    }
+
+    #[test]
+    fn selects_aggressive_perf_energy() {
+        let front = vec![ind(10.0, 9.0), ind(11.0, 5.0), ind(30.0, 4.9)];
+        // normalized sums: a=0+1=1.0, b=0.05+~0.02=0.07, c=1+0=1.0
+        let sel = CnnParted::select(&front).unwrap();
+        assert_eq!(sel.objectives[0], 11.0);
+    }
+
+    #[test]
+    fn empty_front_none() {
+        assert!(CnnParted::select(&[]).is_none());
+    }
+}

@@ -1,0 +1,57 @@
+//! The paper's fault-unaware base model (§VI-A): AFarePart's optimizer
+//! with the ΔAcc objective removed. No link costs; knee-point selection.
+
+use anyhow::Result;
+
+use crate::coordinator::offline::optimize_partitions;
+use crate::nsga2::{Individual, Nsga2Config};
+use crate::partition::{select_knee, Mapping, PartitionEvaluator};
+
+/// Fault-unaware two-objective partitioner.
+pub struct FaultUnaware {
+    pub nsga2: Nsga2Config,
+}
+
+impl Default for FaultUnaware {
+    fn default() -> Self {
+        FaultUnaware { nsga2: Nsga2Config::default() }
+    }
+}
+
+impl FaultUnaware {
+    pub fn new(nsga2: Nsga2Config) -> Self {
+        FaultUnaware { nsga2 }
+    }
+
+    /// Knee-point selection over the 2-objective front.
+    pub fn select(front: &[Individual]) -> Option<&Individual> {
+        select_knee(front)
+    }
+
+    pub fn partition(&self, ev: &mut PartitionEvaluator) -> Result<Mapping> {
+        let saved_link = ev.include_link_cost;
+        ev.include_link_cost = false;
+        let front = optimize_partitions(ev, &self.nsga2, false, vec![], |_| {});
+        ev.include_link_cost = saved_link;
+        let chosen = Self::select(&front).expect("empty fault-unaware front");
+        Ok(Mapping(chosen.genome.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knee_selection_balances() {
+        let ind = |l: f64, e: f64| Individual {
+            genome: vec![0],
+            objectives: vec![l, e],
+            rank: 0,
+            crowding: 0.0,
+        };
+        let front = vec![ind(10.0, 100.0), ind(12.0, 20.0), ind(100.0, 10.0)];
+        let sel = FaultUnaware::select(&front).unwrap();
+        assert_eq!(sel.objectives[0], 12.0);
+    }
+}

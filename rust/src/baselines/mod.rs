@@ -1,0 +1,23 @@
+//! Comparator strategies of the paper's evaluation (§VI):
+//!
+//! * [`CnnParted`] — re-implementation of CNNParted's published strategy:
+//!   fault-agnostic NSGA-II over {latency, energy} *including* link
+//!   latency/energy, with aggressive perf/energy selection (min normalized
+//!   latency+energy sum).
+//! * [`FaultUnaware`] — the paper's own "fault-unaware base model": the
+//!   same optimizer stack as AFarePart with the ΔAcc objective removed and
+//!   no link costs, knee-point selection ("alternative partitioning
+//!   strategies" — §VI-D explains why it sometimes lands on more resilient
+//!   mappings than CNNParted despite being equally fault-agnostic).
+//! * [`greedy_latency_mapping`] / [`random_search_mapping`] — sanity
+//!   baselines used by the ablation bench.
+
+mod cnnparted;
+mod fault_unaware;
+mod greedy;
+mod random_search;
+
+pub use cnnparted::CnnParted;
+pub use fault_unaware::FaultUnaware;
+pub use greedy::greedy_latency_mapping;
+pub use random_search::random_search_mapping;

@@ -1,0 +1,92 @@
+//! Random-search baseline: same evaluation budget as NSGA-II, no
+//! evolutionary structure. Used by the ablation bench to show the
+//! optimizer earns its keep.
+
+use anyhow::Result;
+
+use crate::partition::{Mapping, PartitionEvaluator};
+use crate::util::prng::Rng;
+
+/// Sample `budget` random mappings; return the one minimizing
+/// `w_lat*lat + w_en*energy + w_dacc*dacc` (a scalarization — random
+/// search has no Pareto machinery).
+pub fn random_search_mapping(
+    ev: &mut PartitionEvaluator,
+    budget: usize,
+    weights: (f64, f64, f64),
+    seed: u64,
+) -> Result<Mapping> {
+    let mut rng = Rng::new(seed);
+    let (n, d) = (ev.num_units(), ev.num_devices());
+    let mut best: Option<(f64, Mapping)> = None;
+    for _ in 0..budget {
+        let m = Mapping::random(&mut rng, n, d);
+        let lat = ev.latency_ms(&m);
+        let en = ev.energy_mj(&m);
+        let da = ev.dacc(&m)?;
+        let score = weights.0 * lat + weights.1 * en + weights.2 * da;
+        if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
+            best = Some((score, m));
+        }
+    }
+    Ok(best.expect("budget > 0").1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::FaultScenario;
+    use crate::hw::Platform;
+    use crate::model::{Manifest, UnitCost};
+    use crate::partition::DaccMode;
+
+    #[test]
+    fn finds_low_latency_mapping_with_budget() {
+        let units = (0..4)
+            .map(|i| UnitCost {
+                name: format!("u{i}"),
+                kind: "conv".into(),
+                macs: 1_000_000,
+                w_params: 1_000,
+                w_bytes: 1_000,
+                in_bytes: 1_000,
+                out_bytes: 1_000,
+                out_shape: vec![1],
+            })
+            .collect();
+        let m = Manifest {
+            model: "t".into(),
+            num_units: 4,
+            num_classes: 10,
+            precision: 8,
+            faulty_bits: 4,
+            batch: 4,
+            hlo_file: "x".into(),
+            weights_file: "x".into(),
+            clean_acc_f32: 0.9,
+            clean_acc_quant: 0.9,
+            weight_scale: 0.01,
+            units,
+            weight_tensors: vec![],
+            act_scales: vec![0.1; 4],
+        };
+        let p = Platform::default_two_device();
+        let mut ev = PartitionEvaluator::new(
+            &m,
+            &p,
+            vec![0.2, 0.03],
+            vec![0.2, 0.03],
+            FaultScenario::WeightOnly,
+            0.9,
+            false,
+            DaccMode::None,
+        );
+        let best = random_search_mapping(&mut ev, 64, (1.0, 0.0, 0.0), 3).unwrap();
+        // with 2^4=16 mappings and budget 64, the optimum is found
+        let lat_best = ev.latency_ms(&best);
+        for bits in 0..16usize {
+            let m = Mapping((0..4).map(|i| (bits >> i) & 1).collect());
+            assert!(lat_best <= ev.latency_ms(&m) + 1e-12);
+        }
+    }
+}

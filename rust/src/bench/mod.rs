@@ -1,0 +1,124 @@
+//! Micro-benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §9): warmup + timed samples + summary statistics, plus a
+//! stopwatch for one-shot phase timings. Used by the `rust/benches/*`
+//! binaries, which `cargo bench` runs with `harness = false`.
+
+pub mod suite;
+
+use std::time::Instant;
+
+use crate::util::fmt::Table;
+use crate::util::stats::{summarize, Summary};
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, sample_iters: 10 }
+    }
+}
+
+/// Time a closure: `warmup_iters` unrecorded runs, then `sample_iters`
+/// timed runs. Returns per-iteration milliseconds.
+pub fn bench_ms<F: FnMut()>(cfg: BenchConfig, mut f: F) -> Summary {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.sample_iters);
+    for _ in 0..cfg.sample_iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(&samples)
+}
+
+/// One-shot stopwatch (phases too expensive to repeat).
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Collects named timing rows and renders the standard bench table.
+#[derive(Default)]
+pub struct BenchReport {
+    rows: Vec<(String, Summary)>,
+}
+
+impl BenchReport {
+    pub fn new() -> BenchReport {
+        BenchReport::default()
+    }
+
+    pub fn add(&mut self, name: impl Into<String>, s: Summary) {
+        self.rows.push((name.into(), s));
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["benchmark", "mean ms", "p50 ms", "p95 ms", "min ms", "n"]);
+        for (name, s) in &self.rows {
+            t.row(vec![
+                name.clone(),
+                format!("{:.3}", s.mean),
+                format!("{:.3}", s.p50),
+                format!("{:.3}", s.p95),
+                format!("{:.3}", s.min),
+                s.n.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Standard bench preamble: prints the bench name and returns eval-budget
+/// overrides from the environment (AFARE_BENCH_FAST shrinks budgets for CI).
+pub fn bench_header(name: &str) -> bool {
+    let fast = std::env::var("AFARE_BENCH_FAST").is_ok();
+    println!("\n=== {name} {}===", if fast { "(fast mode) " } else { "" });
+    fast
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let s = bench_ms(BenchConfig { warmup_iters: 1, sample_iters: 5 }, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+        assert!(s.min <= s.p95);
+    }
+
+    #[test]
+    fn report_renders_rows() {
+        let mut r = BenchReport::new();
+        r.add("x", summarize(&[1.0, 2.0, 3.0]));
+        let out = r.render();
+        assert!(out.contains('x'));
+        assert!(out.contains("2.000"));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.ms() >= 1.0);
+    }
+}

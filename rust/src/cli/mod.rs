@@ -1,0 +1,115 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline —
+//! DESIGN.md §9). Supports subcommands, `--key value`, `--key=value`,
+//! and boolean `--flag` switches.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + options + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (exclusive of argv[0]). Keys listed in
+    /// `bool_flags` take no value.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&stripped) {
+                    args.flags.push(stripped.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        args.flags.push(stripped.to_string());
+                    } else {
+                        args.opts.insert(stripped.to_string(), it.next().unwrap().clone());
+                    }
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a.clone());
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(
+            &sv(&["offline", "--model", "alexnet", "--pop=24", "--verbose", "extra"]),
+            &["verbose"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("offline"));
+        assert_eq!(a.get("model"), Some("alexnet"));
+        assert_eq!(a.get_usize("pop", 0), 24);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn trailing_switch_without_value_is_flag() {
+        let a = Args::parse(&sv(&["run", "--fast"]), &[]);
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn flag_followed_by_switch_is_flag() {
+        let a = Args::parse(&sv(&["run", "--fast", "--model", "x"]), &[]);
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get("model"), Some("x"));
+    }
+
+    #[test]
+    fn typed_getters_fall_back() {
+        let a = Args::parse(&sv(&["x", "--n", "abc"]), &[]);
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_f64("missing", 1.5), 1.5);
+    }
+}

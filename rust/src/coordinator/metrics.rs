@@ -1,0 +1,79 @@
+//! Coordinator metrics: counters + latency samples exported by both phases.
+
+use crate::util::stats::{summarize, Summary};
+
+/// Accumulated metrics of a serving run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub batches_served: usize,
+    pub samples_served: usize,
+    pub reconfigurations: usize,
+    pub reopt_evaluations: usize,
+    exec_ms: Vec<f64>,
+    reopt_ms: Vec<f64>,
+}
+
+impl Metrics {
+    pub fn record_batch(&mut self, n_valid: usize, exec_ms: f64) {
+        self.batches_served += 1;
+        self.samples_served += n_valid;
+        self.exec_ms.push(exec_ms);
+    }
+
+    pub fn record_reconfiguration(&mut self, evals: usize, wall_ms: f64) {
+        self.reconfigurations += 1;
+        self.reopt_evaluations += evals;
+        self.reopt_ms.push(wall_ms);
+    }
+
+    pub fn exec_summary(&self) -> Option<Summary> {
+        if self.exec_ms.is_empty() {
+            None
+        } else {
+            Some(summarize(&self.exec_ms))
+        }
+    }
+
+    pub fn reopt_summary(&self) -> Option<Summary> {
+        if self.reopt_ms.is_empty() {
+            None
+        } else {
+            Some(summarize(&self.reopt_ms))
+        }
+    }
+
+    /// Served throughput in samples/second given total wall seconds.
+    pub fn throughput(&self, wall_s: f64) -> f64 {
+        if wall_s > 0.0 {
+            self.samples_served as f64 / wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut m = Metrics::default();
+        m.record_batch(64, 5.0);
+        m.record_batch(32, 7.0);
+        m.record_reconfiguration(120, 300.0);
+        assert_eq!(m.batches_served, 2);
+        assert_eq!(m.samples_served, 96);
+        assert_eq!(m.reconfigurations, 1);
+        let s = m.exec_summary().unwrap();
+        assert_eq!(s.n, 2);
+        assert!((m.throughput(2.0) - 48.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summaries_none() {
+        let m = Metrics::default();
+        assert!(m.exec_summary().is_none());
+        assert!(m.reopt_summary().is_none());
+    }
+}

@@ -1,0 +1,19 @@
+//! The L3 coordinator: paper Algorithm 1.
+//!
+//! * [`offline`] — multi-objective partitioning (lines 1–12): NSGA-II over
+//!   {latency, energy, ΔAcc} with fault injection inside each fitness
+//!   evaluation; returns the Pareto front and the deployed P*.
+//! * [`online`] — dynamic accuracy-aware repartitioning (lines 13–19): a
+//!   threaded serving loop executing the compiled model, a rolling
+//!   accuracy monitor, and θ-triggered re-optimization with current
+//!   runtime statistics.
+//! * [`server`] — the request/batching event loop used by `online`.
+//! * [`metrics`] — counters and timelines exported by both phases.
+
+pub mod metrics;
+pub mod offline;
+pub mod online;
+pub mod server;
+
+pub use offline::{optimize_partitions, OfflineOutcome, OfflineRunner};
+pub use online::{OnlineConfig, OnlineOutcome, OnlineRunner, TimelinePoint};

@@ -1,0 +1,199 @@
+//! Online phase (paper Algorithm 1, lines 13–19): dynamic accuracy-aware
+//! repartitioning.
+//!
+//! The system serves inference with the deployed partition P* while the
+//! fault environment drifts. A rolling accuracy monitor (labeled canary
+//! batches) compares observed accuracy against A_clean; when
+//! `A_clean − A_rolling > θ` the coordinator re-invokes NSGA-II with the
+//! *current* environment rates ("RunNSGAIIWithCurrentStats"), seeded with
+//! the incumbent mapping, and swaps in the new P'.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::offline::optimize_partitions;
+use super::server::InferenceServer;
+use crate::dataset::EvalSet;
+use crate::faults::FaultEnv;
+use crate::nsga2::Nsga2Config;
+use crate::partition::{select_min_dacc_within_budget, Mapping, PartitionEvaluator};
+use crate::util::prng::Rng;
+use crate::util::stats::RollingMean;
+
+/// Online-phase configuration.
+#[derive(Clone, Debug)]
+pub struct OnlineConfig {
+    /// Accuracy-drop threshold θ that triggers repartitioning (paper: 1%
+    /// — we default to 5% for the drifting-attack demo; configurable).
+    pub theta: f64,
+    /// Rolling monitor window (batches).
+    pub window: usize,
+    /// Simulated seconds per served batch (drives the drift schedule).
+    pub tick_seconds: f64,
+    /// Number of batches to serve.
+    pub ticks: usize,
+    /// NSGA-II budget for re-optimization (smaller than offline).
+    pub reopt: Nsga2Config,
+    /// Budget factors for P' selection.
+    pub lat_budget: f64,
+    pub energy_budget: f64,
+    /// Cooldown (ticks) after a reconfiguration before the next trigger.
+    pub cooldown: usize,
+    pub seed: u64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            theta: 0.05,
+            window: 8,
+            tick_seconds: 1.0,
+            ticks: 120,
+            reopt: Nsga2Config { pop_size: 16, generations: 6, ..Default::default() },
+            // Wider than the offline defaults: while a fault attack is in
+            // progress, accuracy dominates the trade-off (the ablation
+            // bench showed 1.6x budgets pin sensitive units to the
+            // attacked device because robust mappings cost ~2-3x energy
+            // on this platform).
+            lat_budget: 2.5,
+            energy_budget: 4.0,
+            cooldown: 10,
+            seed: 11,
+        }
+    }
+}
+
+/// One timeline sample of the serving run.
+#[derive(Clone, Debug)]
+pub struct TimelinePoint {
+    pub tick: usize,
+    pub sim_time_s: f64,
+    /// Environment weight-fault rate on the most fault-prone device.
+    pub env_rate_dev0: f32,
+    pub batch_accuracy: f64,
+    pub rolling_accuracy: f64,
+    pub mapping: Mapping,
+    pub reconfigured: bool,
+}
+
+/// Result of an online run.
+#[derive(Debug)]
+pub struct OnlineOutcome {
+    pub timeline: Vec<TimelinePoint>,
+    pub metrics: Metrics,
+    pub final_mapping: Mapping,
+}
+
+/// The online coordinator.
+pub struct OnlineRunner<'a, 'b> {
+    pub cfg: OnlineConfig,
+    pub server: &'a InferenceServer,
+    pub evaluator: &'b mut PartitionEvaluator<'a>,
+    pub clean_acc: f64,
+}
+
+impl OnlineRunner<'_, '_> {
+    /// Serve `cfg.ticks` labeled batches from `eval` under the drifting
+    /// `env`, monitoring accuracy and repartitioning on θ violations.
+    pub fn run(
+        &mut self,
+        eval: &EvalSet,
+        env: &FaultEnv,
+        initial: Mapping,
+        mut on_tick: impl FnMut(&TimelinePoint),
+    ) -> Result<OnlineOutcome> {
+        let batch = self.server.batch;
+        let sample_len = eval.h * eval.w * eval.c;
+        let n_batches_avail = eval.n / batch;
+        assert!(n_batches_avail > 0, "eval set smaller than a batch");
+
+        let mut mapping = initial;
+        let mut monitor = RollingMean::new(self.cfg.window);
+        let mut metrics = Metrics::default();
+        let mut timeline = Vec::with_capacity(self.cfg.ticks);
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut cooldown = 0usize;
+
+        for tick in 0..self.cfg.ticks {
+            let t_s = tick as f64 * self.cfg.tick_seconds;
+            let dev_w = env.dev_w_rates(t_s);
+            let dev_a = env.dev_a_rates(t_s);
+
+            // serve one labeled canary batch under the current mapping
+            let bi = tick % n_batches_avail;
+            let rates = crate::faults::RateVectors::from_mapping(
+                &mapping.0,
+                &dev_w,
+                &dev_a,
+                self.evaluator.scenario,
+            );
+            let images = eval.batch_images(bi * batch, batch).to_vec();
+            debug_assert_eq!(images.len(), batch * sample_len);
+            let key = [rng.next_u32(), rng.next_u32()];
+            let reply = self.server.infer_blocking(images, batch, rates, key)?;
+            metrics.record_batch(batch, reply.exec_ms);
+
+            let labels = eval.batch_labels(bi * batch, batch);
+            let hits = reply
+                .preds
+                .iter()
+                .zip(labels)
+                .filter(|(p, &l)| **p as i32 == l)
+                .count();
+            let acc = hits as f64 / batch as f64;
+            monitor.push(acc);
+            let rolling = monitor.mean().unwrap_or(acc);
+
+            // θ trigger (Algorithm 1 line 16)
+            let mut reconfigured = false;
+            if cooldown > 0 {
+                cooldown -= 1;
+            } else if monitor.is_warm() && self.clean_acc - rolling > self.cfg.theta {
+                let t0 = Instant::now();
+                // RunNSGAIIWithCurrentStats: current environment rates,
+                // seeded with the incumbent mapping.
+                self.evaluator.set_env_rates(dev_w.clone(), dev_a.clone());
+                let front = optimize_partitions(
+                    self.evaluator,
+                    &self.cfg.reopt,
+                    true,
+                    vec![mapping.clone()],
+                    |_| {},
+                );
+                if let Some(chosen) = select_min_dacc_within_budget(
+                    &front,
+                    self.cfg.lat_budget,
+                    self.cfg.energy_budget,
+                ) {
+                    let new_mapping = Mapping(chosen.genome.clone());
+                    reconfigured = new_mapping != mapping;
+                    mapping = new_mapping;
+                }
+                metrics.record_reconfiguration(
+                    front.len(),
+                    t0.elapsed().as_secs_f64() * 1e3,
+                );
+                // reset the monitor so stale pre-reconfig samples don't
+                // immediately re-trigger
+                monitor = RollingMean::new(self.cfg.window);
+                cooldown = self.cfg.cooldown;
+            }
+
+            let point = TimelinePoint {
+                tick,
+                sim_time_s: t_s,
+                env_rate_dev0: dev_w[0],
+                batch_accuracy: acc,
+                rolling_accuracy: rolling,
+                mapping: mapping.clone(),
+                reconfigured,
+            };
+            on_tick(&point);
+            timeline.push(point);
+        }
+
+        Ok(OnlineOutcome { timeline, metrics, final_mapping: mapping })
+    }
+}

@@ -1,0 +1,224 @@
+//! Threaded inference server: the request-path event loop of the online
+//! phase (tokio is unavailable offline — this is a hand-rolled
+//! channel-based design, DESIGN.md §9).
+//!
+//! A dedicated worker thread owns the PJRT client and compiled executable
+//! (PJRT handles are not Send-safe to share, so the executable never
+//! leaves its thread); clients talk to it through an mpsc queue. Each job
+//! carries the fault-rate vectors its batch experiences (decided by the
+//! coordinator from the current mapping + environment) and a PRNG key.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::faults::RateVectors;
+use crate::model::Manifest;
+use crate::runtime::Runtime;
+
+/// One inference job: a full batch of images (server batch size).
+pub struct InferJob {
+    /// Row-major NHWC f32, exactly batch*h*w*c floats.
+    pub images: Vec<f32>,
+    /// Number of *real* samples in the batch (rest is padding).
+    pub n_valid: usize,
+    pub rates: RateVectors,
+    pub key: [u32; 2],
+    pub reply: Sender<InferReply>,
+}
+
+/// Result of one job.
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    /// Top-1 predictions for the valid samples.
+    pub preds: Vec<usize>,
+    /// Wall-clock execution time of the PJRT call (ms).
+    pub exec_ms: f64,
+}
+
+enum Cmd {
+    Infer(Box<InferJob>),
+    Shutdown,
+}
+
+/// Handle to the serving thread.
+pub struct InferenceServer {
+    tx: Sender<Cmd>,
+    handle: Option<JoinHandle<Result<()>>>,
+    pub batch: usize,
+    pub num_units: usize,
+    pub img_dims: (usize, usize, usize),
+}
+
+impl InferenceServer {
+    /// Spawn the worker: it compiles `model` from `artifacts_dir` on its
+    /// own thread and then serves jobs until shutdown.
+    pub fn spawn(
+        artifacts_dir: PathBuf,
+        manifest: Manifest,
+        img_dims: (usize, usize, usize),
+    ) -> Result<InferenceServer> {
+        let batch = manifest.batch;
+        let num_units = manifest.num_units;
+        let (tx, rx): (Sender<Cmd>, Receiver<Cmd>) = mpsc::channel();
+        // readiness handshake so spawn() fails fast on compile errors
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dims = img_dims;
+        let handle = std::thread::Builder::new()
+            .name("afare-infer".into())
+            .spawn(move || -> Result<()> {
+                let rt = match Runtime::cpu() {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return Ok(());
+                    }
+                };
+                let model = match rt.load_model(&artifacts_dir, manifest) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return Ok(());
+                    }
+                };
+                let _ = ready_tx.send(Ok(()));
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Shutdown => break,
+                        Cmd::Infer(job) => {
+                            let t0 = Instant::now();
+                            let lit = model.image_literal(&job.images, dims.0, dims.1, dims.2)?;
+                            let logits = model.run_batch(&lit, &job.rates, job.key)?;
+                            let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+                            let mut preds = model.argmax_predictions(&logits);
+                            preds.truncate(job.n_valid);
+                            // receiver may have gone away; that's fine
+                            let _ = job.reply.send(InferReply { preds, exec_ms });
+                        }
+                    }
+                }
+                Ok(())
+            })
+            .context("spawning inference worker")?;
+        ready_rx
+            .recv()
+            .context("inference worker died before ready")?
+            .context("inference worker failed to initialize")?;
+        Ok(InferenceServer { tx, handle: Some(handle), batch, num_units, img_dims })
+    }
+
+    /// Submit a job (non-blocking); reply arrives on the job's channel.
+    pub fn submit(&self, job: InferJob) -> Result<()> {
+        self.tx
+            .send(Cmd::Infer(Box::new(job)))
+            .map_err(|_| anyhow::anyhow!("inference worker gone"))
+    }
+
+    /// Convenience: synchronous round-trip for one batch.
+    pub fn infer_blocking(
+        &self,
+        images: Vec<f32>,
+        n_valid: usize,
+        rates: RateVectors,
+        key: [u32; 2],
+    ) -> Result<InferReply> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.submit(InferJob { images, n_valid, rates, key, reply: reply_tx })?;
+        reply_rx.recv().context("inference worker dropped reply")
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Request batcher: accumulates single-sample requests into full batches,
+/// padding the tail by repeating the last sample (padding predictions are
+/// discarded via `n_valid`).
+pub struct Batcher {
+    batch: usize,
+    sample_len: usize,
+    buf: Vec<f32>,
+    count: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, sample_len: usize) -> Batcher {
+        Batcher { batch, sample_len, buf: Vec::with_capacity(batch * sample_len), count: 0 }
+    }
+
+    /// Add one sample; returns a full (images, n_valid) batch when ready.
+    pub fn push(&mut self, sample: &[f32]) -> Option<(Vec<f32>, usize)> {
+        assert_eq!(sample.len(), self.sample_len, "sample length mismatch");
+        self.buf.extend_from_slice(sample);
+        self.count += 1;
+        if self.count == self.batch {
+            Some(self.take())
+        } else {
+            None
+        }
+    }
+
+    /// Flush a partial batch (padded), if any samples are pending.
+    pub fn flush(&mut self) -> Option<(Vec<f32>, usize)> {
+        if self.count == 0 {
+            return None;
+        }
+        let n_real = self.count;
+        // pad by repeating the last sample
+        let last = self.buf[self.buf.len() - self.sample_len..].to_vec();
+        while self.count < self.batch {
+            self.buf.extend_from_slice(&last);
+            self.count += 1;
+        }
+        let (images, _) = self.take();
+        Some((images, n_real))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.count
+    }
+
+    fn take(&mut self) -> (Vec<f32>, usize) {
+        let n_valid = self.count.min(self.batch);
+        let images = std::mem::take(&mut self.buf);
+        self.count = 0;
+        self.buf = Vec::with_capacity(self.batch * self.sample_len);
+        (images, n_valid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batcher_fills_and_emits() {
+        let mut b = Batcher::new(3, 2);
+        assert!(b.push(&[1.0, 2.0]).is_none());
+        assert!(b.push(&[3.0, 4.0]).is_none());
+        let (imgs, n) = b.push(&[5.0, 6.0]).unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(imgs, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn batcher_flush_pads_with_last() {
+        let mut b = Batcher::new(4, 1);
+        b.push(&[1.0]);
+        b.push(&[2.0]);
+        let (imgs, n) = b.flush().unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(imgs, vec![1.0, 2.0, 2.0, 2.0]);
+        assert!(b.flush().is_none());
+    }
+}

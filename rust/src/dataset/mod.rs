@@ -1,0 +1,122 @@
+//! Evaluation dataset loader (AFED blob) and batch iteration.
+//!
+//! Layout (little-endian), produced by python/compile/aot.py:
+//!   magic "AFED" | u32 version=1 | u32 n | u32 h | u32 w | u32 c
+//!   f32 images[n*h*w*c] | i32 labels[n]
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// The held-out evaluation set used for accuracy measurement.
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Row-major [n, h, w, c].
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl EvalSet {
+    pub fn load(path: &Path) -> Result<EvalSet> {
+        let buf =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        EvalSet::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<EvalSet> {
+        if buf.len() < 24 || &buf[..4] != b"AFED" {
+            bail!("not an AFED eval blob");
+        }
+        let rd = |i: usize| u32::from_le_bytes(buf[i..i + 4].try_into().unwrap()) as usize;
+        let version = rd(4);
+        if version != 1 {
+            bail!("unsupported AFED version {version}");
+        }
+        let (n, h, w, c) = (rd(8), rd(12), rd(16), rd(20));
+        let img_bytes = n * h * w * c * 4;
+        let lbl_bytes = n * 4;
+        if buf.len() != 24 + img_bytes + lbl_bytes {
+            bail!(
+                "AFED size mismatch: have {}, want {}",
+                buf.len(),
+                24 + img_bytes + lbl_bytes
+            );
+        }
+        let mut images = vec![0f32; n * h * w * c];
+        for (i, ch) in buf[24..24 + img_bytes].chunks_exact(4).enumerate() {
+            images[i] = f32::from_le_bytes(ch.try_into().unwrap());
+        }
+        let mut labels = vec![0i32; n];
+        for (i, ch) in buf[24 + img_bytes..].chunks_exact(4).enumerate() {
+            labels[i] = i32::from_le_bytes(ch.try_into().unwrap());
+        }
+        Ok(EvalSet { n, h, w, c, images, labels })
+    }
+
+    /// Image slice of sample `i`.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let sz = self.h * self.w * self.c;
+        &self.images[i * sz..(i + 1) * sz]
+    }
+
+    /// Contiguous batch [start, start+len) of images (row-major).
+    pub fn batch_images(&self, start: usize, len: usize) -> &[f32] {
+        let sz = self.h * self.w * self.c;
+        &self.images[start * sz..(start + len) * sz]
+    }
+
+    pub fn batch_labels(&self, start: usize, len: usize) -> &[i32] {
+        &self.labels[start..start + len]
+    }
+
+    /// Number of full batches of size `b` available from the first `limit`
+    /// samples (limit=0 means the whole set).
+    pub fn full_batches(&self, b: usize, limit: usize) -> usize {
+        let n = if limit == 0 { self.n } else { self.n.min(limit) };
+        n / b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(n: usize, h: usize, w: usize, c: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"AFED");
+        for v in [1u32, n as u32, h as u32, w as u32, c as u32] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        for i in 0..(n * h * w * c) {
+            b.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        for i in 0..n {
+            b.extend_from_slice(&((i % 10) as i32).to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parse_and_slice() {
+        let ev = EvalSet::parse(&blob(6, 2, 2, 3)).unwrap();
+        assert_eq!((ev.n, ev.h, ev.w, ev.c), (6, 2, 2, 3));
+        assert_eq!(ev.image(1)[0], 12.0);
+        assert_eq!(ev.batch_labels(2, 3), &[2, 3, 4]);
+        assert_eq!(ev.batch_images(1, 2).len(), 24);
+        assert_eq!(ev.full_batches(2, 0), 3);
+        assert_eq!(ev.full_batches(4, 5), 1);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_size() {
+        let mut b = blob(2, 2, 2, 3);
+        b[1] = b'X';
+        assert!(EvalSet::parse(&b).is_err());
+        let b2 = blob(2, 2, 2, 3);
+        assert!(EvalSet::parse(&b2[..b2.len() - 1]).is_err());
+    }
+}

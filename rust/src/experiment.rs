@@ -1,0 +1,113 @@
+//! Experiment harness: wires artifacts → PJRT runtime → eval set →
+//! partition evaluator for a given [`ExperimentConfig`]. Shared by the
+//! CLI, the examples and every bench.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::dataset::EvalSet;
+use crate::faults::{DeviceFaultProfile, FaultEnv, FaultScenario};
+use crate::hw::Platform;
+use crate::model::Manifest;
+use crate::partition::{DaccMode, PartitionEvaluator, SensitivityTable};
+use crate::runtime::{AccuracyEvaluator, ArtifactIndex, CompiledModel, Runtime};
+
+/// A fully-loaded experiment: compiled model, eval data, platform.
+pub struct Experiment {
+    pub index: ArtifactIndex,
+    pub runtime: Runtime,
+    pub model: CompiledModel,
+    pub eval_set: EvalSet,
+    pub acc_eval: AccuracyEvaluator,
+    pub platform: Platform,
+    pub profiles: Vec<DeviceFaultProfile>,
+    /// Clean (zero-rate) quantized accuracy measured on this eval subset.
+    pub clean_acc: f64,
+    pub sensitivity: Option<SensitivityTable>,
+    cfg: ExperimentConfig,
+}
+
+impl Experiment {
+    /// Load everything for `cfg` (compiles the model's HLO once).
+    pub fn load(cfg: &ExperimentConfig) -> Result<Experiment> {
+        let index = ArtifactIndex::load(&cfg.artifacts_dir)?;
+        if !index.models.iter().any(|m| m == &cfg.model) {
+            bail!("model {:?} not in artifacts (have: {:?})", cfg.model, index.models);
+        }
+        let manifest = Manifest::load(&index.manifest_path(&cfg.model))?;
+        let runtime = Runtime::cpu()?;
+        let model = runtime
+            .load_model(&cfg.artifacts_dir, manifest)
+            .context("loading compiled model")?;
+        let eval_set = EvalSet::load(&index.eval_data_path())?;
+        let acc_eval = AccuracyEvaluator::new(&model, &eval_set, cfg.eval_limit)?;
+        let clean_acc = acc_eval.clean_accuracy(&model, cfg.dacc_batches)?;
+        Ok(Experiment {
+            index,
+            runtime,
+            model,
+            eval_set,
+            acc_eval,
+            platform: Platform::default_two_device(),
+            profiles: DeviceFaultProfile::default_two_device(),
+            clean_acc,
+            sensitivity: None,
+            cfg: cfg.clone(),
+        })
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// The static fault environment of the offline phase.
+    pub fn fault_env(&self) -> FaultEnv {
+        FaultEnv::constant(self.cfg.fault_rate, self.profiles.clone())
+    }
+
+    /// Measure (and cache) the layer sensitivity table for surrogate mode.
+    pub fn measure_sensitivity(&mut self, rate_grid: &[f32]) -> Result<&SensitivityTable> {
+        if self.sensitivity.is_none() {
+            let table = SensitivityTable::measure(
+                &self.model,
+                &self.acc_eval,
+                rate_grid,
+                self.cfg.dacc_batches,
+                0xA11CE,
+            )?;
+            self.sensitivity = Some(table);
+        }
+        Ok(self.sensitivity.as_ref().unwrap())
+    }
+
+    /// Build a partition evaluator for `scenario` under the *current*
+    /// (t = 0) environment rates. Uses surrogate mode if configured (and
+    /// measured), exact in-graph fault injection otherwise.
+    pub fn partition_evaluator(&self, scenario: FaultScenario) -> PartitionEvaluator<'_> {
+        let env = self.fault_env();
+        let dacc = match (&self.cfg.surrogate, &self.sensitivity) {
+            (true, Some(table)) => DaccMode::Surrogate(table),
+            _ => DaccMode::Exact {
+                model: &self.model,
+                eval: &self.acc_eval,
+                key_seed: (self.cfg.seed & 0xFFFF_FFFF) as u32,
+                n_batches: self.cfg.dacc_batches,
+            },
+        };
+        PartitionEvaluator::new(
+            &self.model.manifest,
+            &self.platform,
+            env.dev_w_rates(0.0),
+            env.dev_a_rates(0.0),
+            scenario,
+            self.clean_acc,
+            self.cfg.link_cost,
+            dacc,
+        )
+    }
+
+    /// Image dims of the eval set (h, w, c).
+    pub fn img_dims(&self) -> (usize, usize, usize) {
+        (self.eval_set.h, self.eval_set.w, self.eval_set.c)
+    }
+}

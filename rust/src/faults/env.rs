@@ -1,0 +1,137 @@
+//! Time-varying fault environment for the online phase.
+//!
+//! Models the scenarios of the paper's threat model (§III-A): an ambient
+//! soft-error baseline plus drifting or adversarial components (EM attack
+//! ramp on one device, supply-noise oscillation, decay after mitigation).
+//! The online coordinator samples the environment each monitoring tick;
+//! a drift past the θ threshold is what triggers dynamic repartitioning.
+
+use super::profile::DeviceFaultProfile;
+
+/// How the environment fault rate evolves over time (t in seconds).
+#[derive(Clone, Debug)]
+pub enum DriftSchedule {
+    /// Constant ambient rate.
+    Constant,
+    /// Step attack: rate multiplies by `factor` on `device` at t >= at_s.
+    StepAttack { device: usize, at_s: f64, factor: f32 },
+    /// Sinusoidal supply noise on `device`: rate * (1 + amp*sin(2πt/period)).
+    Sinusoid { device: usize, period_s: f64, amp: f32 },
+    /// Exponential decay back to ambient after an incident at t=0.
+    Decay { device: usize, factor: f32, tau_s: f64 },
+}
+
+/// The complete fault environment: base rate, per-device profiles, drift.
+#[derive(Clone, Debug)]
+pub struct FaultEnv {
+    /// Environment fault rate FR (per-bit flip probability).
+    pub base_rate: f32,
+    pub profiles: Vec<DeviceFaultProfile>,
+    pub drift: DriftSchedule,
+}
+
+impl FaultEnv {
+    pub fn constant(base_rate: f32, profiles: Vec<DeviceFaultProfile>) -> Self {
+        FaultEnv { base_rate, profiles, drift: DriftSchedule::Constant }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.profiles.len()
+    }
+
+    fn drift_mult(&self, device: usize, t_s: f64) -> f32 {
+        match &self.drift {
+            DriftSchedule::Constant => 1.0,
+            DriftSchedule::StepAttack { device: d, at_s, factor } => {
+                if device == *d && t_s >= *at_s {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+            DriftSchedule::Sinusoid { device: d, period_s, amp } => {
+                if device == *d {
+                    1.0 + amp * (2.0 * std::f64::consts::PI * t_s / period_s).sin() as f32
+                } else {
+                    1.0
+                }
+            }
+            DriftSchedule::Decay { device: d, factor, tau_s } => {
+                if device == *d {
+                    1.0 + (factor - 1.0) * (-t_s / tau_s).exp() as f32
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Per-device weight fault rates at time t (clamped to [0,1]).
+    pub fn dev_w_rates(&self, t_s: f64) -> Vec<f32> {
+        self.profiles
+            .iter()
+            .enumerate()
+            .map(|(d, p)| (self.base_rate * p.w_mult * self.drift_mult(d, t_s)).clamp(0.0, 1.0))
+            .collect()
+    }
+
+    /// Per-device activation fault rates at time t (clamped to [0,1]).
+    pub fn dev_a_rates(&self, t_s: f64) -> Vec<f32> {
+        self.profiles
+            .iter()
+            .enumerate()
+            .map(|(d, p)| (self.base_rate * p.a_mult * self.drift_mult(d, t_s)).clamp(0.0, 1.0))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(drift: DriftSchedule) -> FaultEnv {
+        FaultEnv {
+            base_rate: 0.2,
+            profiles: DeviceFaultProfile::default_two_device(),
+            drift,
+        }
+    }
+
+    #[test]
+    fn constant_env() {
+        let e = env(DriftSchedule::Constant);
+        let w = e.dev_w_rates(100.0);
+        assert!((w[0] - 0.2).abs() < 1e-6);
+        assert!((w[1] - 0.03).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_attack_fires_at_time() {
+        let e = env(DriftSchedule::StepAttack { device: 0, at_s: 10.0, factor: 2.0 });
+        assert!((e.dev_w_rates(9.9)[0] - 0.2).abs() < 1e-6);
+        assert!((e.dev_w_rates(10.0)[0] - 0.4).abs() < 1e-6);
+        // other device untouched
+        assert!((e.dev_w_rates(10.0)[1] - 0.03).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rates_clamped_to_unit_interval() {
+        let e = env(DriftSchedule::StepAttack { device: 0, at_s: 0.0, factor: 100.0 });
+        assert!(e.dev_w_rates(1.0)[0] <= 1.0);
+    }
+
+    #[test]
+    fn sinusoid_oscillates() {
+        let e = env(DriftSchedule::Sinusoid { device: 0, period_s: 4.0, amp: 0.5 });
+        let up = e.dev_w_rates(1.0)[0]; // sin(π/2)=1
+        let down = e.dev_w_rates(3.0)[0]; // sin(3π/2)=-1
+        assert!(up > 0.28 && down < 0.12);
+    }
+
+    #[test]
+    fn decay_returns_to_ambient() {
+        let e = env(DriftSchedule::Decay { device: 0, factor: 3.0, tau_s: 1.0 });
+        assert!(e.dev_w_rates(0.0)[0] > 0.55);
+        assert!((e.dev_w_rates(50.0)[0] - 0.2).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,101 @@
+//! Fault environment: per-device fault-rate profiles, drift/attack
+//! schedules, and fault scenarios (paper §III).
+//!
+//! The environment produces, at any time `t`, a per-device *weight* and
+//! *activation* fault rate. The partition evaluator turns these into the
+//! per-unit rate vectors the compiled HLO consumes: unit `l` mapped to
+//! device `d` experiences the rates of `d` (the paper's "fault domain
+//! constraints" — faults restricted to layers mapped to a given
+//! accelerator).
+
+mod env;
+mod profile;
+mod scenario;
+
+pub use env::{DriftSchedule, FaultEnv};
+pub use profile::DeviceFaultProfile;
+pub use scenario::FaultScenario;
+
+/// Per-unit fault-rate vectors fed to the compiled model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RateVectors {
+    pub w_rates: Vec<f32>,
+    pub a_rates: Vec<f32>,
+}
+
+impl RateVectors {
+    pub fn zeros(num_units: usize) -> Self {
+        RateVectors { w_rates: vec![0.0; num_units], a_rates: vec![0.0; num_units] }
+    }
+
+    /// Build per-unit vectors from a mapping and per-device rates,
+    /// masked by the fault scenario.
+    pub fn from_mapping(
+        mapping: &[usize],
+        dev_w_rates: &[f32],
+        dev_a_rates: &[f32],
+        scenario: FaultScenario,
+    ) -> Self {
+        let (wm, am) = scenario.masks();
+        RateVectors {
+            w_rates: mapping.iter().map(|&d| dev_w_rates[d] * wm).collect(),
+            a_rates: mapping.iter().map(|&d| dev_a_rates[d] * am).collect(),
+        }
+    }
+
+    /// Quantized cache key: rates rounded to the 1/256 contract
+    /// granularity (the kernel cannot distinguish finer rates, so ΔAcc
+    /// memoization on this key is exact — DESIGN.md §4.2).
+    pub fn cache_key(&self) -> Vec<u16> {
+        self.w_rates
+            .iter()
+            .chain(self.a_rates.iter())
+            .map(|&r| (r * 256.0).round().clamp(0.0, 256.0) as u16)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapping_to_rates() {
+        let rv = RateVectors::from_mapping(
+            &[0, 1, 0],
+            &[0.2, 0.02],
+            &[0.1, 0.01],
+            FaultScenario::InputWeight,
+        );
+        assert_eq!(rv.w_rates, vec![0.2, 0.02, 0.2]);
+        assert_eq!(rv.a_rates, vec![0.1, 0.01, 0.1]);
+    }
+
+    #[test]
+    fn scenario_masks_domains() {
+        let w_only = RateVectors::from_mapping(
+            &[0, 1],
+            &[0.2, 0.2],
+            &[0.1, 0.1],
+            FaultScenario::WeightOnly,
+        );
+        assert_eq!(w_only.a_rates, vec![0.0, 0.0]);
+        assert!(w_only.w_rates.iter().all(|&r| r > 0.0));
+        let a_only = RateVectors::from_mapping(
+            &[0, 1],
+            &[0.2, 0.2],
+            &[0.1, 0.1],
+            FaultScenario::InputOnly,
+        );
+        assert_eq!(a_only.w_rates, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn cache_key_quantizes_to_contract_granularity() {
+        let a = RateVectors { w_rates: vec![0.2], a_rates: vec![0.1] };
+        let b = RateVectors { w_rates: vec![0.2001], a_rates: vec![0.1001] };
+        assert_eq!(a.cache_key(), b.cache_key());
+        let c = RateVectors { w_rates: vec![0.21], a_rates: vec![0.1] };
+        assert_ne!(a.cache_key(), c.cache_key());
+    }
+}

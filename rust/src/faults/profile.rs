@@ -1,0 +1,50 @@
+//! Per-device fault susceptibility profiles.
+//!
+//! The environment-level fault rate FR (the paper's 10–40%) is scaled per
+//! device: the aggressively voltage-scaled edge part feels the full rate,
+//! the better-shielded package part a fraction of it (DESIGN.md §7). This
+//! is what couples the layer→device mapping to ΔAcc and makes the
+//! three-objective optimization non-trivial.
+
+/// Fault susceptibility of one device.
+#[derive(Clone, Debug)]
+pub struct DeviceFaultProfile {
+    pub device: String,
+    /// Multiplier on the environment weight-fault rate.
+    pub w_mult: f32,
+    /// Multiplier on the environment activation-fault rate.
+    pub a_mult: f32,
+}
+
+impl DeviceFaultProfile {
+    pub fn new(device: &str, w_mult: f32, a_mult: f32) -> Self {
+        DeviceFaultProfile { device: device.into(), w_mult, a_mult }
+    }
+
+    /// Paper-default platform: Eyeriss fault-prone, SIMBA shielded.
+    pub fn default_two_device() -> Vec<DeviceFaultProfile> {
+        vec![
+            DeviceFaultProfile::new("eyeriss", 1.0, 1.0),
+            DeviceFaultProfile::new("simba", 0.15, 0.15),
+        ]
+    }
+
+    /// Extended platform: + ECC-protected host core, fault-immune.
+    pub fn default_three_device() -> Vec<DeviceFaultProfile> {
+        let mut p = Self::default_two_device();
+        p.push(DeviceFaultProfile::new("cpu", 0.0, 0.0));
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_platform_has_contrast() {
+        let p = DeviceFaultProfile::default_two_device();
+        assert_eq!(p.len(), 2);
+        assert!(p[0].w_mult > p[1].w_mult * 3.0);
+    }
+}

@@ -1,0 +1,58 @@
+//! Fault scenarios of the paper's Table II: weight-only, input-only
+//! (activations), and combined input+weight.
+
+/// Which fault domain(s) are active (paper §III-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultScenario {
+    /// Bit-flips in stored quantized weights only ("model faults").
+    WeightOnly,
+    /// Bit-flips in activations only ("data faults").
+    InputOnly,
+    /// Both domains simultaneously.
+    InputWeight,
+}
+
+impl FaultScenario {
+    /// (weight multiplier, activation multiplier).
+    pub fn masks(self) -> (f32, f32) {
+        match self {
+            FaultScenario::WeightOnly => (1.0, 0.0),
+            FaultScenario::InputOnly => (0.0, 1.0),
+            FaultScenario::InputWeight => (1.0, 1.0),
+        }
+    }
+
+    pub fn all() -> [FaultScenario; 3] {
+        [FaultScenario::WeightOnly, FaultScenario::InputOnly, FaultScenario::InputWeight]
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultScenario::WeightOnly => "weight-only",
+            FaultScenario::InputOnly => "input-only",
+            FaultScenario::InputWeight => "input+weight",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultScenario> {
+        match s {
+            "weight" | "weight-only" | "w" => Some(FaultScenario::WeightOnly),
+            "input" | "input-only" | "a" => Some(FaultScenario::InputOnly),
+            "both" | "input+weight" | "iw" => Some(FaultScenario::InputWeight),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_labels() {
+        for s in FaultScenario::all() {
+            assert_eq!(FaultScenario::parse(s.label()), Some(s));
+        }
+        assert_eq!(FaultScenario::parse("nope"), None);
+    }
+}

@@ -1,0 +1,141 @@
+//! The `Accelerator` trait and the shared roofline helper.
+
+use crate::model::UnitCost;
+
+/// One modeled hardware accelerator.
+pub trait Accelerator {
+    fn name(&self) -> &str;
+    /// Per-sample latency of running `unit` on this device, in ms.
+    fn latency_ms(&self, unit: &UnitCost) -> f64;
+    /// Per-sample energy of running `unit` on this device, in mJ.
+    fn energy_mj(&self, unit: &UnitCost) -> f64;
+}
+
+/// Common analytical parameters of a MAC-array accelerator.
+///
+/// Latency is a roofline: max(compute time, memory time) + fixed per-layer
+/// overhead. Energy is Accelergy-style per-event accounting: MAC energy +
+/// on-chip traffic (operand fetch through the reuse hierarchy) + DRAM.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Peak MACs per cycle (PE array width).
+    pub macs_per_cycle: f64,
+    /// Core clock in MHz.
+    pub clock_mhz: f64,
+    /// DRAM bandwidth in GB/s.
+    pub dram_gbps: f64,
+    /// Fixed per-layer dispatch/configuration overhead in µs.
+    pub layer_overhead_us: f64,
+    /// Energy per MAC in pJ.
+    pub e_mac_pj: f64,
+    /// Energy per byte moved on-chip (RF/GLB average) in pJ.
+    pub e_onchip_pj_byte: f64,
+    /// Energy per byte moved from/to DRAM in pJ.
+    pub e_dram_pj_byte: f64,
+    /// Static/leakage power in mW (charged against layer latency).
+    pub static_mw: f64,
+    /// Dataflow utilization per layer kind: (conv-like, dense-like).
+    pub util_conv: f64,
+    pub util_dense: f64,
+    /// On-chip reuse factor: on-chip bytes moved per MAC operand pair.
+    pub onchip_traffic_per_mac: f64,
+}
+
+impl DeviceSpec {
+    fn util_for(&self, kind: &str) -> f64 {
+        match kind {
+            "dense" | "gap_dense" => self.util_dense,
+            _ => self.util_conv, // conv / fire / block / conv_gap
+        }
+    }
+
+    /// Roofline latency in ms.
+    pub fn latency_ms(&self, unit: &UnitCost) -> f64 {
+        let peak = self.macs_per_cycle * self.util_for(&unit.kind) * self.clock_mhz * 1e6;
+        let t_compute = unit.macs as f64 / peak; // seconds
+        let dram_bytes = (unit.w_bytes + unit.in_bytes + unit.out_bytes) as f64;
+        let t_mem = dram_bytes / (self.dram_gbps * 1e9);
+        (t_compute.max(t_mem) + self.layer_overhead_us * 1e-6) * 1e3
+    }
+
+    /// Per-event energy in mJ.
+    pub fn energy_mj(&self, unit: &UnitCost) -> f64 {
+        let e_mac = unit.macs as f64 * self.e_mac_pj;
+        let onchip_bytes = unit.macs as f64 * self.onchip_traffic_per_mac;
+        let e_onchip = onchip_bytes * self.e_onchip_pj_byte;
+        let dram_bytes = (unit.w_bytes + unit.in_bytes + unit.out_bytes) as f64;
+        let e_dram = dram_bytes * self.e_dram_pj_byte;
+        let e_static = self.static_mw * 1e-3 * (self.latency_ms(unit) * 1e-3) * 1e12; // pJ
+        (e_mac + e_onchip + e_dram + e_static) * 1e-9 // pJ -> mJ
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> DeviceSpec {
+        DeviceSpec {
+            name: "toy",
+            macs_per_cycle: 100.0,
+            clock_mhz: 100.0,
+            dram_gbps: 1.0,
+            layer_overhead_us: 10.0,
+            e_mac_pj: 1.0,
+            e_onchip_pj_byte: 1.0,
+            e_dram_pj_byte: 100.0,
+            static_mw: 10.0,
+            util_conv: 0.8,
+            util_dense: 0.4,
+            onchip_traffic_per_mac: 2.0,
+        }
+    }
+
+    fn unit(kind: &str, macs: u64, bytes: u64) -> UnitCost {
+        UnitCost {
+            name: "u".into(),
+            kind: kind.into(),
+            macs,
+            w_params: bytes,
+            w_bytes: bytes,
+            in_bytes: bytes,
+            out_bytes: bytes,
+            out_shape: vec![1],
+        }
+    }
+
+    #[test]
+    fn latency_scales_with_macs() {
+        let s = spec();
+        let a = s.latency_ms(&unit("conv", 1_000_000, 10));
+        let b = s.latency_ms(&unit("conv", 10_000_000, 10));
+        assert!(b > a * 5.0);
+    }
+
+    #[test]
+    fn dense_utilization_penalty() {
+        let s = spec();
+        let c = s.latency_ms(&unit("conv", 5_000_000, 10));
+        let d = s.latency_ms(&unit("dense", 5_000_000, 10));
+        assert!(d > c);
+    }
+
+    #[test]
+    fn memory_bound_layers_hit_bandwidth_roof() {
+        let s = spec();
+        // tiny compute, huge weights: latency ~ bytes / bw
+        let u = unit("conv", 1_000, 3_000_000);
+        let t = s.latency_ms(&u);
+        let t_mem_ms = 9_000_000.0 / 1e9 * 1e3;
+        assert!((t - t_mem_ms - 0.01).abs() < 0.5);
+    }
+
+    #[test]
+    fn energy_positive_and_dram_dominated_for_fat_layers() {
+        let s = spec();
+        let lean = s.energy_mj(&unit("conv", 1_000_000, 100));
+        let fat = s.energy_mj(&unit("conv", 1_000_000, 1_000_000));
+        assert!(fat > lean * 2.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Host-CPU fallback accelerator model (third device).
+//!
+//! The paper's introduction targets SoCs mixing "FPGAs, CPUs, and NPUs";
+//! this models the applications-class core with ECC-protected caches that
+//! such SoCs keep as a fallback: one-to-two orders of magnitude slower
+//! than the accelerators on MAC-heavy layers and energy-hungry per MAC,
+//! but *fault-immune* (ECC + mature voltage margins — its
+//! DeviceFaultProfile multiplier is 0). It stretches the Pareto front:
+//! mapping a tiny, highly fault-sensitive unit to the CPU buys resilience
+//! at almost no latency cost, which the D=3 experiments exercise.
+
+use super::accel::{Accelerator, DeviceSpec};
+use crate::model::UnitCost;
+
+/// ECC-protected host core (e.g. Cortex-A with NEON).
+#[derive(Clone, Debug)]
+pub struct HostCpu {
+    spec: DeviceSpec,
+}
+
+impl Default for HostCpu {
+    fn default() -> Self {
+        HostCpu {
+            spec: DeviceSpec {
+                name: "cpu",
+                macs_per_cycle: 8.0, // 128-bit SIMD int8 dot, pessimistic
+                clock_mhz: 1200.0,
+                dram_gbps: 6.4,
+                layer_overhead_us: 5.0, // no reconfiguration, just a call
+                e_mac_pj: 15.0,         // general-purpose pipeline overhead
+                e_onchip_pj_byte: 4.0,
+                e_dram_pj_byte: 120.0,
+                static_mw: 120.0,
+                util_conv: 0.55,
+                util_dense: 0.70,
+                onchip_traffic_per_mac: 3.0,
+            },
+        }
+    }
+}
+
+impl Accelerator for HostCpu {
+    fn name(&self) -> &str {
+        self.spec.name
+    }
+    fn latency_ms(&self, unit: &UnitCost) -> f64 {
+        self.spec.latency_ms(unit)
+    }
+    fn energy_mj(&self, unit: &UnitCost) -> f64 {
+        self.spec.energy_mj(unit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{Eyeriss, Simba};
+
+    #[test]
+    fn cpu_much_slower_on_big_convs() {
+        let big = UnitCost {
+            name: "c".into(),
+            kind: "conv".into(),
+            macs: 13_000_000,
+            w_params: 50_000,
+            w_bytes: 50_000,
+            in_bytes: 8_192,
+            out_bytes: 16_384,
+            out_shape: vec![16, 16, 64],
+        };
+        let cpu = HostCpu::default();
+        let eye = Eyeriss::default();
+        let simba = Simba::default();
+        assert!(cpu.latency_ms(&big) > 3.0 * eye.latency_ms(&big));
+        assert!(cpu.latency_ms(&big) > 3.0 * simba.latency_ms(&big));
+    }
+
+    #[test]
+    fn cpu_competitive_on_tiny_units() {
+        let tiny = UnitCost {
+            name: "fc3".into(),
+            kind: "dense".into(),
+            macs: 1_280,
+            w_params: 1_280,
+            w_bytes: 1_280,
+            in_bytes: 128,
+            out_bytes: 10,
+            out_shape: vec![10],
+        };
+        let cpu = HostCpu::default();
+        let simba = Simba::default();
+        // the NoP toll makes SIMBA worse than the plain core here
+        assert!(cpu.latency_ms(&tiny) < simba.latency_ms(&tiny));
+    }
+}

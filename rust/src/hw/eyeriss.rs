@@ -1,0 +1,77 @@
+//! Eyeriss(-v2)-style edge accelerator model.
+//!
+//! Row-stationary dataflow on a 12x14 PE array: excellent convolution
+//! reuse (low on-chip traffic per MAC, high conv utilization), weak on
+//! fully-connected layers (little reuse to exploit), modest clock and
+//! DRAM bandwidth, very low energy per event — the "edge, aggressively
+//! voltage-scaled" device of DESIGN.md §7. Constants follow the published
+//! Eyeriss energy hierarchy (RF : GLB : DRAM ≈ 1 : 6 : 200 per access,
+//! INT8/16 MAC well under a pJ).
+
+use super::accel::{Accelerator, DeviceSpec};
+use crate::model::UnitCost;
+
+/// Eyeriss-mini analytical model.
+#[derive(Clone, Debug)]
+pub struct Eyeriss {
+    spec: DeviceSpec,
+}
+
+impl Default for Eyeriss {
+    fn default() -> Self {
+        Eyeriss {
+            spec: DeviceSpec {
+                name: "eyeriss",
+                macs_per_cycle: 168.0, // 12x14 PE array
+                clock_mhz: 200.0,      // aggressively voltage-scaled edge part
+                dram_gbps: 1.6,
+                layer_overhead_us: 20.0,
+                e_mac_pj: 0.4,
+                e_onchip_pj_byte: 0.8, // row-stationary: mostly RF traffic
+                e_dram_pj_byte: 120.0,
+                static_mw: 30.0,
+                util_conv: 0.80, // RS dataflow maps convs well
+                util_dense: 0.25, // ... and FC poorly
+                onchip_traffic_per_mac: 1.2, // high reuse -> little traffic
+            },
+        }
+    }
+}
+
+impl Accelerator for Eyeriss {
+    fn name(&self) -> &str {
+        self.spec.name
+    }
+    fn latency_ms(&self, unit: &UnitCost) -> f64 {
+        self.spec.latency_ms(unit)
+    }
+    fn energy_mj(&self, unit: &UnitCost) -> f64 {
+        self.spec.energy_mj(unit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sane_magnitudes_for_mini_alexnet_conv() {
+        // conv2 of alexnet-mini: ~13.1M MACs, 51KB weights, 8/16KB acts
+        let u = UnitCost {
+            name: "conv2".into(),
+            kind: "conv".into(),
+            macs: 13_107_200,
+            w_params: 51_200,
+            w_bytes: 51_200,
+            in_bytes: 8_192,
+            out_bytes: 16_384,
+            out_shape: vec![16, 16, 64],
+        };
+        let e = Eyeriss::default();
+        let lat = e.latency_ms(&u);
+        let en = e.energy_mj(&u);
+        // ~1ms compute, well under 1 mJ
+        assert!(lat > 0.3 && lat < 10.0, "lat={lat}");
+        assert!(en > 0.001 && en < 1.0, "en={en}");
+    }
+}

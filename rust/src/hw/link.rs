@@ -1,0 +1,56 @@
+//! Inter-device link model: latency + energy of moving a unit's input
+//! activation between accelerators at a partition boundary.
+//!
+//! The paper notes AFarePart *excludes* link cost while CNNParted includes
+//! it (§VI-E); both code paths exist and the evaluator takes a flag —
+//! ablation A3 measures the difference.
+
+/// Point-to-point interconnect between two accelerators.
+#[derive(Clone, Debug)]
+pub struct Link {
+    /// Sustained bandwidth in GB/s.
+    pub bandwidth_gbps: f64,
+    /// Fixed per-transfer setup latency in µs.
+    pub setup_us: f64,
+    /// Energy per byte in pJ.
+    pub e_pj_byte: f64,
+}
+
+impl Default for Link {
+    fn default() -> Self {
+        // PCB-level chip-to-chip interconnect.
+        Link { bandwidth_gbps: 2.0, setup_us: 25.0, e_pj_byte: 40.0 }
+    }
+}
+
+impl Link {
+    /// Transfer latency in ms for `bytes` of activation.
+    pub fn latency_ms(&self, bytes: u64) -> f64 {
+        (self.setup_us * 1e-6 + bytes as f64 / (self.bandwidth_gbps * 1e9)) * 1e3
+    }
+
+    /// Transfer energy in mJ.
+    pub fn energy_mj(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.e_pj_byte * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_has_setup_floor() {
+        let l = Link::default();
+        assert!(l.latency_ms(0) >= 0.025 - 1e-9);
+        assert!(l.latency_ms(1_000_000) > l.latency_ms(1_000));
+    }
+
+    #[test]
+    fn energy_linear_in_bytes() {
+        let l = Link::default();
+        let e1 = l.energy_mj(1000);
+        let e2 = l.energy_mj(2000);
+        assert!((e2 - 2.0 * e1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,125 @@
+//! Analytical accelerator cost models — the Timeloop/Accelergy stand-in
+//! (DESIGN.md §1): dataflow-aware per-unit latency/energy estimation for
+//! Eyeriss-style row-stationary edge accelerators and SIMBA-style
+//! multi-chip-module packages, plus the inter-device link model.
+//!
+//! The partitioner consumes only per-(unit, device) scalars, so what
+//! matters is the *structure* these models give the search space: Eyeriss
+//! is energy-lean and competent on small convolutions, SIMBA wins big
+//! GEMM-heavy layers but pays a fixed chiplet/NoP toll per layer, and the
+//! link makes scattered mappings expensive.
+
+mod accel;
+mod cpu;
+mod eyeriss;
+mod link;
+mod simba;
+
+pub use accel::{Accelerator, DeviceSpec};
+pub use cpu::HostCpu;
+pub use eyeriss::Eyeriss;
+pub use link::Link;
+pub use simba::Simba;
+
+use crate::model::UnitCost;
+
+/// The modeled platform: a set of devices and the link between them.
+pub struct Platform {
+    pub devices: Vec<Box<dyn Accelerator + Send + Sync>>,
+    pub link: Link,
+}
+
+impl Platform {
+    /// The paper's default two-device platform (Eyeriss + SIMBA).
+    pub fn default_two_device() -> Platform {
+        Platform {
+            devices: vec![Box::new(Eyeriss::default()), Box::new(Simba::default())],
+            link: Link::default(),
+        }
+    }
+
+    /// Extended three-device platform (paper §I: FPGAs, CPUs, NPUs on one
+    /// SoC): Eyeriss + SIMBA + an ECC-protected host core that is slow but
+    /// fault-immune (its fault multiplier is zero — see
+    /// DeviceFaultProfile::default_three_device).
+    pub fn default_three_device() -> Platform {
+        Platform {
+            devices: vec![
+                Box::new(Eyeriss::default()),
+                Box::new(Simba::default()),
+                Box::new(HostCpu::default()),
+            ],
+            link: Link::default(),
+        }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Per-unit latency on each device (ms), precomputed for the evaluator.
+    pub fn latency_table(&self, units: &[UnitCost]) -> Vec<Vec<f64>> {
+        units
+            .iter()
+            .map(|u| self.devices.iter().map(|d| d.latency_ms(u)).collect())
+            .collect()
+    }
+
+    /// Per-unit energy on each device (mJ), precomputed for the evaluator.
+    pub fn energy_table(&self, units: &[UnitCost]) -> Vec<Vec<f64>> {
+        units
+            .iter()
+            .map(|u| self.devices.iter().map(|d| d.energy_mj(u)).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(kind: &str, macs: u64, w: u64, inb: u64, outb: u64) -> UnitCost {
+        UnitCost {
+            name: "u".into(),
+            kind: kind.into(),
+            macs,
+            w_params: w,
+            w_bytes: w,
+            in_bytes: inb,
+            out_bytes: outb,
+            out_shape: vec![1],
+        }
+    }
+
+    #[test]
+    fn platform_tables_shape() {
+        let p = Platform::default_two_device();
+        let units = vec![
+            unit("conv", 2_500_000, 2_400, 12_288, 32_768),
+            unit("dense", 262_144, 262_144, 1_024, 256),
+        ];
+        let lat = p.latency_table(&units);
+        let en = p.energy_table(&units);
+        assert_eq!(lat.len(), 2);
+        assert_eq!(lat[0].len(), 2);
+        assert!(lat.iter().flatten().all(|&x| x > 0.0));
+        assert!(en.iter().flatten().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn eyeriss_beats_simba_on_small_conv_energy() {
+        // The structural property the paper's trade-off needs.
+        let e = Eyeriss::default();
+        let s = Simba::default();
+        let small = unit("conv", 500_000, 1_000, 8_192, 8_192);
+        assert!(e.energy_mj(&small) < s.energy_mj(&small));
+    }
+
+    #[test]
+    fn simba_beats_eyeriss_on_big_dense_latency() {
+        let e = Eyeriss::default();
+        let s = Simba::default();
+        let big = unit("dense", 50_000_000, 1_000_000, 4_096, 4_096);
+        assert!(s.latency_ms(&big) < e.latency_ms(&big));
+    }
+}

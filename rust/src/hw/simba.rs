@@ -1,0 +1,76 @@
+//! SIMBA-style multi-chip-module accelerator model.
+//!
+//! A package of PE chiplets connected by a network-on-package: far higher
+//! peak throughput and DRAM bandwidth than the edge part, good utilization
+//! on GEMM-heavy layers, but (a) every layer pays a network-on-package
+//! dispatch toll, (b) per-event energies are higher (inter-chiplet hops),
+//! (c) static power is substantial. The "reliable but costly" device of
+//! the paper's trade-off — its fault multiplier lives in
+//! faults::DeviceFaultProfile, not here.
+
+use super::accel::{Accelerator, DeviceSpec};
+use crate::model::UnitCost;
+
+/// SIMBA-lite analytical model.
+#[derive(Clone, Debug)]
+pub struct Simba {
+    spec: DeviceSpec,
+}
+
+impl Default for Simba {
+    fn default() -> Self {
+        Simba {
+            spec: DeviceSpec {
+                name: "simba",
+                macs_per_cycle: 1024.0, // chiplet array
+                clock_mhz: 400.0,
+                dram_gbps: 12.8,
+                layer_overhead_us: 150.0, // NoP configuration toll per layer
+                e_mac_pj: 0.6,
+                e_onchip_pj_byte: 2.5, // NoC + NoP hops
+                e_dram_pj_byte: 160.0,
+                static_mw: 250.0,
+                util_conv: 0.45, // small spatial convs under-fill chiplets
+                util_dense: 0.70, // GEMMs map well
+                onchip_traffic_per_mac: 2.0,
+            },
+        }
+    }
+}
+
+impl Accelerator for Simba {
+    fn name(&self) -> &str {
+        self.spec.name
+    }
+    fn latency_ms(&self, unit: &UnitCost) -> f64 {
+        self.spec.latency_ms(unit)
+    }
+    fn energy_mj(&self, unit: &UnitCost) -> f64 {
+        self.spec.energy_mj(unit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::Eyeriss;
+
+    #[test]
+    fn fixed_toll_hurts_tiny_layers() {
+        let tiny = UnitCost {
+            name: "t".into(),
+            kind: "conv".into(),
+            macs: 10_000,
+            w_params: 100,
+            w_bytes: 100,
+            in_bytes: 100,
+            out_bytes: 100,
+            out_shape: vec![1],
+        };
+        let s = Simba::default();
+        let e = Eyeriss::default();
+        // on a tiny layer the edge part is both faster and cheaper
+        assert!(e.latency_ms(&tiny) < s.latency_ms(&tiny));
+        assert!(e.energy_mj(&tiny) < s.energy_mj(&tiny));
+    }
+}

@@ -1,0 +1,37 @@
+//! # AFarePart — Accuracy-aware Fault-resilient DNN Partitioner
+//!
+//! Reproduction of *"AFarePart: Accuracy-aware Fault-resilient Partitioner
+//! for DNN Edge Accelerators"* (Debnath et al., 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: NSGA-II multi-objective
+//!   partitioner with fault-injected accuracy as a first-class objective,
+//!   analytical Eyeriss/SIMBA hardware cost models, a drifting fault
+//!   environment, and an online serving loop with θ-triggered dynamic
+//!   repartitioning (paper Algorithm 1).
+//! * **L2 (python/compile, build-time)** — quantized CNN forwards with
+//!   in-graph probabilistic bit-flip fault injection, AOT-lowered to HLO
+//!   text.
+//! * **L1 (python/compile/kernels, build-time)** — Pallas kernels for the
+//!   bit-flip + dequantize hot spot and the dequant-fused matmul.
+//!
+//! The rust binary executes the compiled artifacts through PJRT
+//! ([`runtime`]); python never runs on the request path.
+//!
+//! Quickstart: `make artifacts && cargo run --release -- offline --model alexnet`
+//! (see examples/ for library usage).
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod experiment;
+pub mod faults;
+pub mod hw;
+pub mod model;
+pub mod nsga2;
+pub mod partition;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,298 @@
+//! AFarePart CLI — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   offline   run the offline multi-objective partitioning (Algorithm 1,
+//!             lines 1–12); prints the Pareto front and the deployed P*.
+//!   online    serve inference under a drifting fault environment with
+//!             θ-triggered dynamic repartitioning (lines 13–19).
+//!   sweep     layer-wise fault sensitivity sweep (§V-C methodology).
+//!   compare   run AFarePart vs CNNParted vs fault-unaware on one model
+//!             (one cell group of Table II).
+//!   info      print artifact/platform information.
+//!
+//! Common options: --model, --fault-rate, --scenario, --pop, --gens,
+//! --eval-limit, --surrogate, --link-cost, --seed, --config <json>.
+
+use anyhow::Result;
+
+use afarepart::baselines::{CnnParted, FaultUnaware};
+use afarepart::cli::Args;
+use afarepart::config::ExperimentConfig;
+use afarepart::coordinator::server::InferenceServer;
+use afarepart::coordinator::{OfflineRunner, OnlineConfig, OnlineRunner};
+use afarepart::experiment::Experiment;
+use afarepart::faults::{DriftSchedule, FaultEnv, RateVectors};
+use afarepart::model::Manifest;
+use afarepart::partition::{Mapping, PartitionEvaluator};
+use afarepart::util::fmt::{pct, Table};
+
+const BOOL_FLAGS: &[&str] = &["surrogate", "link-cost", "verbose", "help"];
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, BOOL_FLAGS);
+    if args.has_flag("help") || args.subcommand.is_none() {
+        print_help();
+        return Ok(());
+    }
+    let mut cfg = ExperimentConfig::default();
+    cfg.apply_args(&args)?;
+    cfg.apply_env();
+
+    match args.subcommand.as_deref().unwrap() {
+        "offline" => cmd_offline(&cfg, &args),
+        "online" => cmd_online(&cfg, &args),
+        "sweep" => cmd_sweep(&cfg),
+        "compare" => cmd_compare(&cfg),
+        "info" => cmd_info(&cfg),
+        other => {
+            eprintln!("unknown subcommand {other:?}");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "afarepart — accuracy-aware fault-resilient DNN partitioner\n\n\
+         USAGE: afarepart <offline|online|sweep|compare|info> [options]\n\n\
+         OPTIONS:\n\
+           --model <alexnet|squeezenet|resnet18>   model artifact (default alexnet)\n\
+           --artifacts <dir>        artifacts directory (default ./artifacts)\n\
+           --fault-rate <f>         environment fault rate FR (default 0.2)\n\
+           --scenario <w|a|iw>      weight-only / input-only / input+weight\n\
+           --pop <n> --gens <n>     NSGA-II budget (default 60/60)\n\
+           --eval-limit <n>         eval samples for exact dAcc (default 256)\n\
+           --theta <f>              online accuracy-drop threshold (default 0.05)\n\
+           --ticks <n>              online serving ticks (default 120)\n\
+           --surrogate              use the layer-sensitivity surrogate\n\
+           --link-cost              include link costs in objectives\n\
+           --seed <n>               master seed\n\
+           --config <file.json>     load a config file first"
+    );
+}
+
+fn cmd_info(cfg: &ExperimentConfig) -> Result<()> {
+    let exp = Experiment::load(cfg)?;
+    println!("platform: {}", exp.runtime.platform());
+    println!("model: {} ({} units)", exp.model.manifest.model, exp.model.num_units());
+    println!(
+        "precision: int{}  faulty LSBs: {}  batch: {}",
+        exp.model.manifest.precision, exp.model.manifest.faulty_bits, exp.model.manifest.batch
+    );
+    println!("clean quantized top-1 (eval subset): {}", pct(exp.clean_acc));
+    let mut t = Table::new(&["unit", "kind", "MACs", "w_bytes", "eyeriss ms/mJ", "simba ms/mJ"]);
+    let lat = exp.platform.latency_table(&exp.model.manifest.units);
+    let en = exp.platform.energy_table(&exp.model.manifest.units);
+    for (i, u) in exp.model.manifest.units.iter().enumerate() {
+        t.row(vec![
+            u.name.clone(),
+            u.kind.clone(),
+            u.macs.to_string(),
+            u.w_bytes.to_string(),
+            format!("{:.3}/{:.4}", lat[i][0], en[i][0]),
+            format!("{:.3}/{:.4}", lat[i][1], en[i][1]),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_offline(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
+    let verbose = args.has_flag("verbose");
+    let mut exp = Experiment::load(cfg)?;
+    if cfg.surrogate {
+        exp.measure_sensitivity(&[0.05, 0.1, 0.2, 0.4])?;
+    }
+    println!(
+        "offline: model={} FR={} scenario={} pop={} gens={} mode={}",
+        cfg.model,
+        cfg.fault_rate,
+        cfg.scenario.label(),
+        cfg.nsga2.pop_size,
+        cfg.nsga2.generations,
+        if cfg.surrogate { "surrogate" } else { "exact" }
+    );
+    let mut ev = exp.partition_evaluator(cfg.scenario);
+    let runner = OfflineRunner {
+        nsga2: cfg.nsga2.clone(),
+        lat_budget: cfg.lat_budget,
+        energy_budget: cfg.energy_budget,
+    };
+    let out = runner.run(&mut ev, vec![], |gs| {
+        if verbose {
+            println!(
+                "  gen {:3}  front={}  best: lat={:.2}ms en={:.3}mJ dAcc={}",
+                gs.generation,
+                gs.front_size,
+                gs.best_per_objective[0],
+                gs.best_per_objective[1],
+                pct(gs.best_per_objective[2]),
+            );
+        }
+    })?;
+    let mut t = Table::new(&["mapping", "latency ms", "energy mJ", "dAcc"]);
+    for ind in &out.front {
+        t.row(vec![
+            Mapping(ind.genome.clone()).display(),
+            format!("{:.2}", ind.objectives[0]),
+            format!("{:.3}", ind.objectives[1]),
+            pct(ind.objectives[2]),
+        ]);
+    }
+    println!("\nPareto front ({} solutions):", out.front.len());
+    print!("{}", t.render());
+    println!(
+        "\ndeployed P* = {}  (lat {:.2} ms, energy {:.3} mJ, dAcc {})",
+        out.deployed.display(),
+        out.deployed_objectives[0],
+        out.deployed_objectives[1],
+        pct(out.deployed_objectives[2]),
+    );
+    let (h, m, r) = out.cache;
+    println!("dAcc cache: {h} hits / {m} misses (hit rate {:.1}%)", r * 100.0);
+    Ok(())
+}
+
+fn cmd_sweep(cfg: &ExperimentConfig) -> Result<()> {
+    let exp = Experiment::load(cfg)?;
+    let grid = [0.1f32, 0.2, 0.4];
+    println!(
+        "layer-wise fault sweep: model={} clean={} (eval {} samples)",
+        cfg.model,
+        pct(exp.clean_acc),
+        exp.acc_eval.samples(cfg.dacc_batches),
+    );
+    let l = exp.model.num_units();
+    let mut t = Table::new(&["unit", "FR=0.1 w/a", "FR=0.2 w/a", "FR=0.4 w/a"]);
+    for unit in 0..l {
+        let mut cells = vec![exp.model.manifest.units[unit].name.clone()];
+        for &r in &grid {
+            let mut rv = RateVectors::zeros(l);
+            rv.w_rates[unit] = r;
+            let aw = exp.acc_eval.accuracy(&exp.model, &rv, 1, cfg.dacc_batches)?;
+            let mut rv = RateVectors::zeros(l);
+            rv.a_rates[unit] = r;
+            let aa = exp.acc_eval.accuracy(&exp.model, &rv, 1, cfg.dacc_batches)?;
+            cells.push(format!(
+                "{}/{}",
+                pct((exp.clean_acc - aw).max(0.0)),
+                pct((exp.clean_acc - aa).max(0.0))
+            ));
+        }
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_compare(cfg: &ExperimentConfig) -> Result<()> {
+    let exp = Experiment::load(cfg)?;
+    println!(
+        "compare: model={} FR={} scenario={} (pop {}, gens {})",
+        cfg.model,
+        cfg.fault_rate,
+        cfg.scenario.label(),
+        cfg.nsga2.pop_size,
+        cfg.nsga2.generations
+    );
+    let mut rows = Vec::new();
+
+    // CNNParted
+    let mut ev = exp.partition_evaluator(cfg.scenario);
+    let mapping = CnnParted::new(cfg.nsga2.clone()).partition(&mut ev)?;
+    rows.push(("CNNParted", describe(&mut ev, &mapping)?));
+
+    // Fault-unaware
+    let mut ev = exp.partition_evaluator(cfg.scenario);
+    let mapping = FaultUnaware::new(cfg.nsga2.clone()).partition(&mut ev)?;
+    rows.push(("Flt-unaware", describe(&mut ev, &mapping)?));
+
+    // AFarePart
+    let mut ev = exp.partition_evaluator(cfg.scenario);
+    let runner = OfflineRunner {
+        nsga2: cfg.nsga2.clone(),
+        lat_budget: cfg.lat_budget,
+        energy_budget: cfg.energy_budget,
+    };
+    let out = runner.run(&mut ev, vec![], |_| {})?;
+    rows.push(("AFarePart", describe(&mut ev, &out.deployed)?));
+
+    let mut t = Table::new(&["tool", "mapping", "acc (faulty)", "latency ms", "energy mJ"]);
+    for (name, (m, acc, lat, en)) in rows {
+        t.row(vec![name.to_string(), m, pct(acc), format!("{lat:.2}"), format!("{en:.3}")]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn describe(ev: &mut PartitionEvaluator, mapping: &Mapping) -> Result<(String, f64, f64, f64)> {
+    Ok((
+        mapping.display(),
+        ev.faulty_accuracy(mapping)?,
+        ev.latency_ms(mapping),
+        ev.energy_mj(mapping),
+    ))
+}
+
+fn cmd_online(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
+    let ticks = args.get_usize("ticks", 120);
+    let exp = Experiment::load(cfg)?;
+    println!(
+        "online: model={} base FR={} θ={} ticks={ticks} (EM step attack on dev0 at t=30s)",
+        cfg.model, cfg.fault_rate, cfg.theta
+    );
+
+    // offline phase first for the initial P*
+    let mut ev = exp.partition_evaluator(cfg.scenario);
+    let runner = OfflineRunner {
+        nsga2: cfg.nsga2.clone(),
+        lat_budget: cfg.lat_budget,
+        energy_budget: cfg.energy_budget,
+    };
+    let initial = runner.run(&mut ev, vec![], |_| {})?.deployed;
+    println!("initial P* = {}", initial.display());
+
+    let manifest = Manifest::load(&exp.index.manifest_path(&cfg.model))?;
+    let server = InferenceServer::spawn(cfg.artifacts_dir.clone(), manifest, exp.img_dims())?;
+    let env = FaultEnv {
+        base_rate: cfg.fault_rate,
+        profiles: exp.profiles.clone(),
+        drift: DriftSchedule::StepAttack { device: 0, at_s: 30.0, factor: 2.0 },
+    };
+    // exact-mode re-optimization (see examples/online_reconfig.rs for why
+    // the surrogate is not enough); use --surrogate to override.
+    let mut reopt_ev = exp.partition_evaluator(cfg.scenario);
+
+    let online_cfg = OnlineConfig { theta: cfg.theta, ticks, ..Default::default() };
+    let mut runner = OnlineRunner {
+        cfg: online_cfg,
+        server: &server,
+        evaluator: &mut reopt_ev,
+        clean_acc: exp.clean_acc,
+    };
+    let out = runner.run(&exp.eval_set, &env, initial, |p| {
+        if p.tick % 10 == 0 || p.reconfigured {
+            println!(
+                "  t={:5.1}s FR(dev0)={:.2} acc={} rolling={} map={}{}",
+                p.sim_time_s,
+                p.env_rate_dev0,
+                pct(p.batch_accuracy),
+                pct(p.rolling_accuracy),
+                p.mapping.display(),
+                if p.reconfigured { "  <-- REPARTITIONED" } else { "" }
+            );
+        }
+    })?;
+    println!(
+        "\nserved {} batches; {} reconfigurations; final mapping {}",
+        out.metrics.batches_served,
+        out.metrics.reconfigurations,
+        out.final_mapping.display()
+    );
+    if let Some(s) = out.metrics.exec_summary() {
+        println!("PJRT exec: mean {:.2} ms  p95 {:.2} ms", s.mean, s.p95);
+    }
+    Ok(())
+}

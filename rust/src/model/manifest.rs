@@ -1,0 +1,265 @@
+//! Manifest parsing (`<model>_manifest.json`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Cost descriptor of one partitioning unit (per single sample), the input
+/// of the Eyeriss/SIMBA analytical models and the link cost model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnitCost {
+    pub name: String,
+    pub kind: String,
+    /// Multiply-accumulates per sample.
+    pub macs: u64,
+    /// Quantized weight parameter count.
+    pub w_params: u64,
+    /// Weight bytes at deployment precision.
+    pub w_bytes: u64,
+    /// Input activation bytes (quantized) — also the link transfer size
+    /// when the previous unit lives on a different device.
+    pub in_bytes: u64,
+    /// Output activation bytes (quantized).
+    pub out_bytes: u64,
+    pub out_shape: Vec<usize>,
+}
+
+/// One quantized weight tensor in HLO-parameter / weights.bin order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeightTensor {
+    /// Owning unit name (faults on this tensor follow the unit's device).
+    pub unit: String,
+    /// Conv sub-name within the unit ("", "s", "e1", "c1", "p", ...).
+    pub prefix: String,
+    pub shape: Vec<usize>,
+    pub scale: f64,
+}
+
+/// Parsed `<model>_manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub num_units: usize,
+    pub num_classes: usize,
+    pub precision: u32,
+    pub faulty_bits: u32,
+    /// Export batch size of the HLO artifact.
+    pub batch: usize,
+    pub hlo_file: String,
+    pub weights_file: String,
+    pub clean_acc_f32: f64,
+    pub clean_acc_quant: f64,
+    pub weight_scale: f64,
+    pub units: Vec<UnitCost>,
+    pub weight_tensors: Vec<WeightTensor>,
+    /// Per-unit input-activation dequantization scales.
+    pub act_scales: Vec<f64>,
+}
+
+fn need<'v>(v: &'v Value, key: &str) -> Result<&'v Value> {
+    v.get(key).with_context(|| format!("manifest: missing key {key:?}"))
+}
+
+fn need_f64(v: &Value, key: &str) -> Result<f64> {
+    need(v, key)?.as_f64().with_context(|| format!("manifest: {key:?} not a number"))
+}
+
+fn need_str(v: &Value, key: &str) -> Result<String> {
+    Ok(need(v, key)?
+        .as_str()
+        .with_context(|| format!("manifest: {key:?} not a string"))?
+        .to_string())
+}
+
+impl Manifest {
+    /// Parse and validate a manifest JSON document.
+    pub fn from_json(text: &str) -> Result<Manifest> {
+        let v = json::parse(text).context("manifest: invalid json")?;
+        let units_v = need(&v, "units")?
+            .as_arr()
+            .context("manifest: units not an array")?;
+        let mut units = Vec::with_capacity(units_v.len());
+        for u in units_v {
+            units.push(UnitCost {
+                name: need_str(u, "name")?,
+                kind: need_str(u, "kind")?,
+                macs: need_f64(u, "macs")? as u64,
+                w_params: need_f64(u, "w_params")? as u64,
+                w_bytes: need_f64(u, "w_bytes")? as u64,
+                in_bytes: need_f64(u, "in_bytes")? as u64,
+                out_bytes: need_f64(u, "out_bytes")? as u64,
+                out_shape: need(u, "out_shape")?
+                    .as_arr()
+                    .context("out_shape not array")?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+            });
+        }
+        let wts_v = need(&v, "weight_tensors")?
+            .as_arr()
+            .context("manifest: weight_tensors not an array")?;
+        let mut weight_tensors = Vec::with_capacity(wts_v.len());
+        for w in wts_v {
+            weight_tensors.push(WeightTensor {
+                unit: need_str(w, "unit")?,
+                prefix: need_str(w, "prefix")?,
+                shape: need(w, "shape")?
+                    .as_arr()
+                    .context("shape not array")?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                scale: need_f64(w, "scale")?,
+            });
+        }
+        let act_obj = need(&v, "act_scales")?
+            .as_obj()
+            .context("manifest: act_scales not an object")?;
+        let mut act_scales = Vec::with_capacity(units.len());
+        for u in &units {
+            let s = act_obj
+                .get(&u.name)
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("manifest: act_scale missing for {}", u.name))?;
+            act_scales.push(s);
+        }
+
+        let m = Manifest {
+            model: need_str(&v, "model")?,
+            num_units: need_f64(&v, "num_units")? as usize,
+            num_classes: need_f64(&v, "num_classes")? as usize,
+            precision: need_f64(&v, "precision")? as u32,
+            faulty_bits: need_f64(&v, "faulty_bits")? as u32,
+            batch: need_f64(&v, "batch")? as usize,
+            hlo_file: need_str(&v, "hlo")?,
+            weights_file: need_str(&v, "weights")?,
+            clean_acc_f32: need_f64(&v, "clean_acc_f32")?,
+            clean_acc_quant: need_f64(&v, "clean_acc_quant")?,
+            weight_scale: need_f64(&v, "weight_scale")?,
+            units,
+            weight_tensors,
+            act_scales,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Manifest::from_json(&text)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.units.len() != self.num_units {
+            bail!(
+                "manifest {}: num_units {} != units.len() {}",
+                self.model,
+                self.num_units,
+                self.units.len()
+            );
+        }
+        if !(1..=32).contains(&self.precision) || self.faulty_bits > self.precision {
+            bail!("manifest {}: bad precision/faulty_bits", self.model);
+        }
+        let unit_names: Vec<&str> = self.units.iter().map(|u| u.name.as_str()).collect();
+        for wt in &self.weight_tensors {
+            if !unit_names.contains(&wt.unit.as_str()) {
+                bail!("manifest {}: weight tensor for unknown unit {}", self.model, wt.unit);
+            }
+            if wt.shape.iter().product::<usize>() == 0 {
+                bail!("manifest {}: empty weight tensor {}/{}", self.model, wt.unit, wt.prefix);
+            }
+        }
+        // activation chain consistency (unit i out == unit i+1 in)
+        for (a, b) in self.units.iter().zip(self.units.iter().skip(1)) {
+            if a.out_bytes != b.in_bytes {
+                bail!("manifest {}: broken activation chain {} -> {}", self.model, a.name, b.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Index of a unit by name.
+    pub fn unit_index(&self, name: &str) -> Option<usize> {
+        self.units.iter().position(|u| u.name == name)
+    }
+
+    /// Map each weight tensor to its owning unit index (for rate vectors).
+    pub fn weight_tensor_units(&self) -> Vec<usize> {
+        self.weight_tensors
+            .iter()
+            .map(|wt| self.unit_index(&wt.unit).expect("validated"))
+            .collect()
+    }
+
+    /// Total MACs per sample (for throughput estimates).
+    pub fn total_macs(&self) -> u64 {
+        self.units.iter().map(|u| u.macs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn toy_manifest_json() -> String {
+        r#"{
+          "model": "toy", "num_units": 2, "num_classes": 10,
+          "precision": 8, "faulty_bits": 4, "batch": 4,
+          "hlo": "toy.hlo.txt", "weights": "toy_weights.bin",
+          "clean_acc_f32": 0.9, "clean_acc_quant": 0.88, "weight_scale": 0.0078125,
+          "units": [
+            {"name": "conv1", "kind": "conv", "macs": 1000, "w_params": 10,
+             "w_bytes": 10, "in_bytes": 100, "out_bytes": 50, "out_shape": [4,4,2]},
+            {"name": "fc", "kind": "dense", "macs": 320, "w_params": 320,
+             "w_bytes": 320, "in_bytes": 50, "out_bytes": 10, "out_shape": [10]}
+          ],
+          "weight_tensors": [
+            {"unit": "conv1", "prefix": "", "shape": [3,3,1,2], "scale": 0.0078125},
+            {"unit": "fc", "prefix": "", "shape": [32,10], "scale": 0.0078125}
+          ],
+          "act_scales": {"conv1": 0.0078125, "fc": 0.25}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let m = Manifest::from_json(&toy_manifest_json()).unwrap();
+        assert_eq!(m.model, "toy");
+        assert_eq!(m.units.len(), 2);
+        assert_eq!(m.weight_tensors.len(), 2);
+        assert_eq!(m.act_scales, vec![0.0078125, 0.25]);
+        assert_eq!(m.weight_tensor_units(), vec![0, 1]);
+        assert_eq!(m.total_macs(), 1320);
+        assert_eq!(m.unit_index("fc"), Some(1));
+    }
+
+    #[test]
+    fn rejects_unit_count_mismatch() {
+        let bad = toy_manifest_json().replace("\"num_units\": 2", "\"num_units\": 3");
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_broken_activation_chain() {
+        let bad = toy_manifest_json().replace("\"in_bytes\": 50", "\"in_bytes\": 51");
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_weight_unit() {
+        let bad = toy_manifest_json().replace("{\"unit\": \"fc\"", "{\"unit\": \"nope\"");
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_act_scale() {
+        let bad = toy_manifest_json().replace("\"fc\": 0.25", "\"other\": 0.25");
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+}

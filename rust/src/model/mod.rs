@@ -1,0 +1,12 @@
+//! Model artifact manifests: the L3 view of an AOT-compiled model.
+//!
+//! python/compile/aot.py emits `<model>_manifest.json` describing the
+//! partitioning units (cost descriptors for the hardware models), the
+//! quantized weight tensor order (mirroring the HLO parameter order), and
+//! quantization metadata. This module parses and validates it.
+
+mod manifest;
+mod weights;
+
+pub use manifest::{Manifest, UnitCost, WeightTensor};
+pub use weights::load_weights;

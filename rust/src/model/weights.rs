@@ -1,0 +1,132 @@
+//! AFWB weight blob loader (`<model>_weights.bin`).
+//!
+//! Layout (little-endian), produced by python/compile/aot.py:
+//!   magic "AFWB" | u32 version=1 | u32 n_tensors
+//!   per tensor: u32 ndim | u32 dims[ndim] | i32 data[prod(dims)]
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One quantized weight tensor (int32 lanes holding fixed-point values).
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+fn read_u32(buf: &[u8], off: &mut usize) -> Result<u32> {
+    if *off + 4 > buf.len() {
+        bail!("weights blob truncated at offset {}", off);
+    }
+    let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+/// Load all tensors from an AFWB blob.
+pub fn load_weights(path: &Path) -> Result<Vec<QTensor>> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading weights {}", path.display()))?;
+    parse_weights(&buf)
+}
+
+/// Parse an AFWB blob from memory (separated for tests).
+pub fn parse_weights(buf: &[u8]) -> Result<Vec<QTensor>> {
+    if buf.len() < 12 || &buf[..4] != b"AFWB" {
+        bail!("not an AFWB weights blob");
+    }
+    let mut off = 4usize;
+    let version = read_u32(buf, &mut off)?;
+    if version != 1 {
+        bail!("unsupported AFWB version {version}");
+    }
+    let n = read_u32(buf, &mut off)? as usize;
+    let mut tensors = Vec::with_capacity(n);
+    for t in 0..n {
+        let ndim = read_u32(buf, &mut off)? as usize;
+        if ndim > 8 {
+            bail!("tensor {t}: implausible ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(buf, &mut off)? as usize);
+        }
+        let count: usize = shape.iter().product();
+        let bytes = count
+            .checked_mul(4)
+            .context("tensor size overflow")?;
+        if off + bytes > buf.len() {
+            bail!("tensor {t}: data truncated");
+        }
+        let mut data = vec![0i32; count];
+        for (i, ch) in buf[off..off + bytes].chunks_exact(4).enumerate() {
+            data[i] = i32::from_le_bytes(ch.try_into().unwrap());
+        }
+        off += bytes;
+        tensors.push(QTensor { shape, data });
+    }
+    if off != buf.len() {
+        bail!("trailing bytes in weights blob ({} extra)", buf.len() - off);
+    }
+    Ok(tensors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(tensors: &[(&[u32], &[i32])]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"AFWB");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (shape, data) in tensors {
+            b.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+            for d in *shape {
+                b.extend_from_slice(&d.to_le_bytes());
+            }
+            for x in *data {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let b = blob(&[(&[2, 3], &[1, -2, 3, -4, 5, -6]), (&[4], &[7, 8, 9, 10])]);
+        let ts = parse_weights(&b).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].shape, vec![2, 3]);
+        assert_eq!(ts[0].data, vec![1, -2, 3, -4, 5, -6]);
+        assert_eq!(ts[1].shape, vec![4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = blob(&[(&[1], &[1])]);
+        b[0] = b'X';
+        assert!(parse_weights(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let b = blob(&[(&[4], &[1, 2, 3, 4])]);
+        assert!(parse_weights(&b[..b.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut b = blob(&[(&[1], &[1])]);
+        b.push(0);
+        assert!(parse_weights(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let mut b = blob(&[(&[1], &[1])]);
+        b[4] = 2;
+        assert!(parse_weights(&b).is_err());
+    }
+}

@@ -1,0 +1,79 @@
+//! Crowding distance (Deb et al. 2002, §III-B): diversity preservation
+//! within a front; boundary solutions get +∞ so extremes always survive.
+
+/// Crowding distance of each member of one front (same index order).
+pub fn crowding_distance(objs: &[&[f64]]) -> Vec<f64> {
+    let n = objs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n <= 2 {
+        return vec![f64::INFINITY; n];
+    }
+    let m = objs[0].len();
+    let mut dist = vec![0.0f64; n];
+    let mut idx: Vec<usize> = (0..n).collect();
+    for k in 0..m {
+        idx.sort_by(|&a, &b| objs[a][k].partial_cmp(&objs[b][k]).unwrap());
+        let lo = objs[idx[0]][k];
+        let hi = objs[idx[n - 1]][k];
+        dist[idx[0]] = f64::INFINITY;
+        dist[idx[n - 1]] = f64::INFINITY;
+        let range = hi - lo;
+        if range <= 0.0 {
+            continue; // degenerate objective: contributes nothing
+        }
+        for w in 1..n - 1 {
+            let prev = objs[idx[w - 1]][k];
+            let next = objs[idx[w + 1]][k];
+            if dist[idx[w]].is_finite() {
+                dist[idx[w]] += (next - prev) / range;
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundaries_are_infinite() {
+        let pts: Vec<&[f64]> = vec![&[0.0, 3.0], &[1.0, 2.0], &[2.0, 1.0], &[3.0, 0.0]];
+        let d = crowding_distance(&pts);
+        assert!(d[0].is_infinite());
+        assert!(d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn sparser_point_has_larger_distance() {
+        // middle points: one crowded pair, one isolated
+        let pts: Vec<&[f64]> =
+            vec![&[0.0, 10.0], &[1.0, 8.9], &[1.2, 8.7], &[5.0, 2.0], &[10.0, 0.0]];
+        let d = crowding_distance(&pts);
+        assert!(d[3] > d[1], "isolated {} vs crowded {}", d[3], d[2]);
+    }
+
+    #[test]
+    fn small_fronts_all_infinite() {
+        let pts: Vec<&[f64]> = vec![&[1.0, 2.0]];
+        assert!(crowding_distance(&pts)[0].is_infinite());
+        let two: Vec<&[f64]> = vec![&[1.0, 2.0], &[2.0, 1.0]];
+        assert!(crowding_distance(&two).iter().all(|d| d.is_infinite()));
+    }
+
+    #[test]
+    fn degenerate_objective_no_nan() {
+        let pts: Vec<&[f64]> = vec![&[1.0, 5.0], &[1.0, 3.0], &[1.0, 1.0]];
+        let d = crowding_distance(&pts);
+        assert!(d.iter().all(|x| !x.is_nan()));
+    }
+
+    #[test]
+    fn empty_front() {
+        let pts: Vec<&[f64]> = vec![];
+        assert!(crowding_distance(&pts).is_empty());
+    }
+}

@@ -1,0 +1,147 @@
+//! Hypervolume indicator (S-metric): the volume of objective space
+//! dominated by a front, bounded by a reference point. The standard
+//! front-quality measure for comparing multi-objective optimizers
+//! (used by bench_ablation A4 to compare NSGA-II against random search
+//! beyond single-point scalarization).
+//!
+//! Implementation: WFG-style recursive slicing — exact, fine for the 2-3
+//! objective fronts and <100-point sets this project produces.
+
+/// Hypervolume of `front` (minimization) w.r.t. `reference`.
+///
+/// Points not strictly dominating the reference contribute nothing.
+/// Complexity is fine for small fronts (exponential in objectives,
+/// ~quadratic in points for m <= 3).
+pub fn hypervolume(front: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let m = reference.len();
+    // keep only points that dominate the reference box
+    let pts: Vec<Vec<f64>> = front
+        .iter()
+        .filter(|p| p.len() == m && p.iter().zip(reference).all(|(a, r)| a < r))
+        .cloned()
+        .collect();
+    hv_rec(&pts, reference)
+}
+
+fn hv_rec(pts: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let m = reference.len();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    if m == 1 {
+        let best = pts.iter().map(|p| p[0]).fold(f64::INFINITY, f64::min);
+        return (reference[0] - best).max(0.0);
+    }
+    // sort by the last objective ascending; sweep slices
+    let mut sorted = pts.to_vec();
+    sorted.sort_by(|a, b| a[m - 1].partial_cmp(&b[m - 1]).unwrap());
+    let mut volume = 0.0;
+    for i in 0..sorted.len() {
+        let z_lo = sorted[i][m - 1];
+        let z_hi = if i + 1 < sorted.len() { sorted[i + 1][m - 1] } else { reference[m - 1] };
+        let depth = (z_hi - z_lo).max(0.0);
+        if depth <= 0.0 {
+            continue;
+        }
+        // points active in this slice: those with last objective <= z_lo
+        let slice: Vec<Vec<f64>> = sorted[..=i]
+            .iter()
+            .map(|p| p[..m - 1].to_vec())
+            .collect();
+        let slice_refs = &reference[..m - 1];
+        volume += depth * hv_rec(&nondominated(&slice), slice_refs);
+    }
+    volume
+}
+
+/// Filter to the non-dominated subset (minimization).
+fn nondominated(pts: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let mut keep = Vec::new();
+    'outer: for (i, p) in pts.iter().enumerate() {
+        for (j, q) in pts.iter().enumerate() {
+            if i != j && super::dominates(q, p) {
+                continue 'outer;
+            }
+        }
+        keep.push(p.clone());
+    }
+    keep
+}
+
+/// Normalized hypervolume of a set of Individuals against a reference
+/// derived from the worst observed value per objective (times a margin).
+pub fn front_hypervolume(front: &[crate::nsga2::Individual], margin: f64) -> f64 {
+    if front.is_empty() {
+        return 0.0;
+    }
+    let m = front[0].objectives.len();
+    let reference: Vec<f64> = (0..m)
+        .map(|k| {
+            front
+                .iter()
+                .map(|i| i.objectives[k])
+                .fold(f64::NEG_INFINITY, f64::max)
+                * margin
+                + 1e-9
+        })
+        .collect();
+    let pts: Vec<Vec<f64>> = front.iter().map(|i| i.objectives.clone()).collect();
+    hypervolume(&pts, &reference)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point_box() {
+        // point (1,1), ref (3,4): dominated box is 2x3 = 6
+        assert!((hypervolume(&[vec![1.0, 1.0]], &[3.0, 4.0]) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_disjoint_staircase() {
+        // (1,3) and (3,1) with ref (4,4): union = 3*1 + 1*3 - overlap 1*1 = 5
+        let hv = hypervolume(&[vec![1.0, 3.0], vec![3.0, 1.0]], &[4.0, 4.0]);
+        assert!((hv - 5.0).abs() < 1e-9, "{hv}");
+    }
+
+    #[test]
+    fn dominated_point_adds_nothing() {
+        let base = hypervolume(&[vec![1.0, 1.0]], &[4.0, 4.0]);
+        let with_dup = hypervolume(&[vec![1.0, 1.0], vec![2.0, 2.0]], &[4.0, 4.0]);
+        assert!((base - with_dup).abs() < 1e-9);
+    }
+
+    #[test]
+    fn point_outside_reference_ignored() {
+        assert_eq!(hypervolume(&[vec![5.0, 5.0]], &[4.0, 4.0]), 0.0);
+    }
+
+    #[test]
+    fn three_objectives_unit_cube() {
+        // point at origin with ref (1,1,1): volume 1
+        let hv = hypervolume(&[vec![0.0, 0.0, 0.0]], &[1.0, 1.0, 1.0]);
+        assert!((hv - 1.0).abs() < 1e-9);
+        // two points carving an L-shape
+        let hv2 = hypervolume(
+            &[vec![0.0, 0.5, 0.0], vec![0.5, 0.0, 0.0]],
+            &[1.0, 1.0, 1.0],
+        );
+        // union = 0.5 + 0.5 - 0.25 = 0.75
+        assert!((hv2 - 0.75).abs() < 1e-9, "{hv2}");
+    }
+
+    #[test]
+    fn monotone_in_front_quality() {
+        // a strictly better front has strictly larger hypervolume
+        let worse = hypervolume(&[vec![2.0, 2.0]], &[4.0, 4.0]);
+        let better = hypervolume(&[vec![1.0, 1.0]], &[4.0, 4.0]);
+        assert!(better > worse);
+    }
+
+    #[test]
+    fn empty_front_zero() {
+        assert_eq!(hypervolume(&[], &[1.0, 1.0]), 0.0);
+    }
+}

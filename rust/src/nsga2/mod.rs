@@ -1,0 +1,382 @@
+//! NSGA-II multi-objective evolutionary optimizer (Deb et al. 2002),
+//! implemented from scratch for integer genomes with a fixed per-gene
+//! alphabet — the layer→device mapping P : {1..L} → {0..D-1} of the paper
+//! (§IV), but generic enough to drive the fault-unaware baselines too.
+//!
+//! Components: fast non-dominated sorting, crowding distance, binary
+//! tournament on (rank, crowding), uniform + two-point crossover,
+//! per-gene reset mutation, elitist (μ+λ) environmental selection.
+
+mod crowding;
+mod hypervolume;
+mod sort;
+
+pub use crowding::crowding_distance;
+pub use hypervolume::{front_hypervolume, hypervolume};
+pub use sort::{dominates, fast_non_dominated_sort};
+
+use crate::util::prng::Rng;
+
+/// One candidate solution with its evaluated objective vector (minimized).
+#[derive(Clone, Debug)]
+pub struct Individual {
+    pub genome: Vec<usize>,
+    pub objectives: Vec<f64>,
+    pub rank: usize,
+    pub crowding: f64,
+}
+
+/// Optimizer configuration (paper §VI-A: population 60, generations 60).
+#[derive(Clone, Debug)]
+pub struct Nsga2Config {
+    pub pop_size: usize,
+    pub generations: usize,
+    pub crossover_prob: f64,
+    pub mutation_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for Nsga2Config {
+    fn default() -> Self {
+        Nsga2Config {
+            pop_size: 60,
+            generations: 60,
+            crossover_prob: 0.9,
+            mutation_prob: 0.08,
+            seed: 7,
+        }
+    }
+}
+
+/// The optimization problem: genome shape + objective evaluation.
+pub trait Problem {
+    /// Number of genes (L, the number of partitionable units).
+    fn genome_len(&self) -> usize;
+    /// Per-gene alphabet size (D, the number of devices).
+    fn alphabet(&self) -> usize;
+    /// Evaluate a genome to an objective vector (all minimized).
+    fn evaluate(&mut self, genome: &[usize]) -> Vec<f64>;
+    /// Optional: seed individuals injected into the initial population.
+    fn seeds(&self) -> Vec<Vec<usize>> {
+        Vec::new()
+    }
+}
+
+/// Per-generation statistics handed to the progress callback.
+#[derive(Clone, Debug)]
+pub struct GenStats {
+    pub generation: usize,
+    pub front_size: usize,
+    pub best_per_objective: Vec<f64>,
+    pub evaluations: usize,
+}
+
+/// The optimizer.
+pub struct Nsga2 {
+    cfg: Nsga2Config,
+    rng: Rng,
+    evaluations: usize,
+}
+
+impl Nsga2 {
+    pub fn new(cfg: Nsga2Config) -> Self {
+        let rng = Rng::new(cfg.seed);
+        Nsga2 { cfg, rng, evaluations: 0 }
+    }
+
+    pub fn evaluations(&self) -> usize {
+        self.evaluations
+    }
+
+    fn random_genome(&mut self, len: usize, alphabet: usize) -> Vec<usize> {
+        (0..len).map(|_| self.rng.below(alphabet)).collect()
+    }
+
+    fn evaluate<P: Problem>(&mut self, problem: &mut P, genome: Vec<usize>) -> Individual {
+        self.evaluations += 1;
+        let objectives = problem.evaluate(&genome);
+        Individual { genome, objectives, rank: usize::MAX, crowding: 0.0 }
+    }
+
+    /// Assign ranks + crowding in place; returns the fronts (index lists).
+    fn rank_population(pop: &mut [Individual]) -> Vec<Vec<usize>> {
+        let fronts = {
+            let objs: Vec<&[f64]> = pop.iter().map(|i| i.objectives.as_slice()).collect();
+            fast_non_dominated_sort(&objs)
+        };
+        for (rank, front) in fronts.iter().enumerate() {
+            let crowd = {
+                let front_objs: Vec<&[f64]> =
+                    front.iter().map(|&i| pop[i].objectives.as_slice()).collect();
+                crowding_distance(&front_objs)
+            };
+            for (k, &i) in front.iter().enumerate() {
+                pop[i].rank = rank;
+                pop[i].crowding = crowd[k];
+            }
+        }
+        fronts
+    }
+
+    /// Binary tournament: lower rank wins; ties broken by larger crowding.
+    fn tournament<'a>(&mut self, pop: &'a [Individual]) -> &'a Individual {
+        let a = &pop[self.rng.below(pop.len())];
+        let b = &pop[self.rng.below(pop.len())];
+        if a.rank < b.rank || (a.rank == b.rank && a.crowding > b.crowding) {
+            a
+        } else {
+            b
+        }
+    }
+
+    fn crossover(&mut self, a: &[usize], b: &[usize]) -> (Vec<usize>, Vec<usize>) {
+        let n = a.len();
+        if !self.rng.chance(self.cfg.crossover_prob) || n < 2 {
+            return (a.to_vec(), b.to_vec());
+        }
+        if self.rng.chance(0.5) {
+            // uniform
+            let mut c = a.to_vec();
+            let mut d = b.to_vec();
+            for i in 0..n {
+                if self.rng.chance(0.5) {
+                    std::mem::swap(&mut c[i], &mut d[i]);
+                }
+            }
+            (c, d)
+        } else {
+            // two-point
+            let (mut i, mut j) = (self.rng.below(n), self.rng.below(n));
+            if i > j {
+                std::mem::swap(&mut i, &mut j);
+            }
+            let mut c = a.to_vec();
+            let mut d = b.to_vec();
+            for k in i..=j {
+                std::mem::swap(&mut c[k], &mut d[k]);
+            }
+            (c, d)
+        }
+    }
+
+    fn mutate(&mut self, genome: &mut [usize], alphabet: usize) {
+        for g in genome.iter_mut() {
+            if self.rng.chance(self.cfg.mutation_prob) {
+                *g = self.rng.below(alphabet);
+            }
+        }
+    }
+
+    /// Run the full loop; returns the final first front (Pareto set).
+    pub fn run<P: Problem>(
+        &mut self,
+        problem: &mut P,
+        mut on_generation: impl FnMut(&GenStats),
+    ) -> Vec<Individual> {
+        let len = problem.genome_len();
+        let alphabet = problem.alphabet();
+        assert!(alphabet >= 1 && len >= 1);
+
+        // initial population: seeds first, then random fill
+        let mut genomes: Vec<Vec<usize>> = problem
+            .seeds()
+            .into_iter()
+            .filter(|g| g.len() == len && g.iter().all(|&x| x < alphabet))
+            .take(self.cfg.pop_size)
+            .collect();
+        while genomes.len() < self.cfg.pop_size {
+            genomes.push(self.random_genome(len, alphabet));
+        }
+        let mut pop: Vec<Individual> =
+            genomes.into_iter().map(|g| self.evaluate(problem, g)).collect();
+        Self::rank_population(&mut pop);
+
+        for generation in 0..self.cfg.generations {
+            // variation: offspring of size pop_size
+            let mut offspring = Vec::with_capacity(self.cfg.pop_size);
+            while offspring.len() < self.cfg.pop_size {
+                let pa = self.tournament(&pop).genome.clone();
+                let pb = self.tournament(&pop).genome.clone();
+                let (mut c, mut d) = self.crossover(&pa, &pb);
+                self.mutate(&mut c, alphabet);
+                self.mutate(&mut d, alphabet);
+                offspring.push(self.evaluate(problem, c));
+                if offspring.len() < self.cfg.pop_size {
+                    offspring.push(self.evaluate(problem, d));
+                }
+            }
+
+            // elitist environmental selection over parents + offspring
+            pop.extend(offspring);
+            let fronts = Self::rank_population(&mut pop);
+            let mut next: Vec<Individual> = Vec::with_capacity(self.cfg.pop_size);
+            for front in &fronts {
+                if next.len() + front.len() <= self.cfg.pop_size {
+                    for &i in front {
+                        next.push(pop[i].clone());
+                    }
+                } else {
+                    // fill by descending crowding distance
+                    let mut rest: Vec<usize> = front.clone();
+                    rest.sort_by(|&a, &b| {
+                        pop[b]
+                            .crowding
+                            .partial_cmp(&pop[a].crowding)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    for &i in rest.iter().take(self.cfg.pop_size - next.len()) {
+                        next.push(pop[i].clone());
+                    }
+                    break;
+                }
+            }
+            pop = next;
+            Self::rank_population(&mut pop);
+
+            let nobj = pop[0].objectives.len();
+            let best: Vec<f64> = (0..nobj)
+                .map(|k| {
+                    pop.iter().map(|i| i.objectives[k]).fold(f64::INFINITY, f64::min)
+                })
+                .collect();
+            on_generation(&GenStats {
+                generation,
+                front_size: pop.iter().filter(|i| i.rank == 0).count(),
+                best_per_objective: best,
+                evaluations: self.evaluations,
+            });
+        }
+
+        let mut front: Vec<Individual> =
+            pop.into_iter().filter(|i| i.rank == 0).collect();
+        // dedup identical genomes for a clean returned front
+        front.sort_by(|a, b| a.genome.cmp(&b.genome));
+        front.dedup_by(|a, b| a.genome == b.genome);
+        front
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two-objective toy: minimize (#ones, #zeros). Every genome is
+    /// Pareto-optimal on the count trade-off; extremes must be found.
+    struct OnesZeros {
+        len: usize,
+    }
+
+    impl Problem for OnesZeros {
+        fn genome_len(&self) -> usize {
+            self.len
+        }
+        fn alphabet(&self) -> usize {
+            2
+        }
+        fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+            let ones = g.iter().filter(|&&x| x == 1).count() as f64;
+            vec![ones, self.len as f64 - ones]
+        }
+    }
+
+    #[test]
+    fn finds_extremes_of_tradeoff() {
+        let mut p = OnesZeros { len: 12 };
+        let mut opt = Nsga2::new(Nsga2Config {
+            pop_size: 40,
+            generations: 30,
+            ..Default::default()
+        });
+        let front = opt.run(&mut p, |_| {});
+        let ones: Vec<f64> = front.iter().map(|i| i.objectives[0]).collect();
+        assert!(ones.iter().any(|&o| o == 0.0), "all-zeros not found");
+        assert!(ones.iter().any(|&o| o == 12.0), "all-ones not found");
+        // front covers a range of trade-offs
+        assert!(front.len() >= 8, "front too small: {}", front.len());
+    }
+
+    /// Single-objective sanity: NSGA-II degenerates to elitist GA.
+    struct SumMin;
+    impl Problem for SumMin {
+        fn genome_len(&self) -> usize {
+            16
+        }
+        fn alphabet(&self) -> usize {
+            4
+        }
+        fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+            vec![g.iter().sum::<usize>() as f64]
+        }
+    }
+
+    #[test]
+    fn minimizes_single_objective() {
+        let mut opt = Nsga2::new(Nsga2Config {
+            pop_size: 30,
+            generations: 40,
+            ..Default::default()
+        });
+        let front = opt.run(&mut SumMin, |_| {});
+        assert!(front.iter().any(|i| i.objectives[0] == 0.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut opt = Nsga2::new(Nsga2Config {
+                pop_size: 20,
+                generations: 10,
+                seed,
+                ..Default::default()
+            });
+            opt.run(&mut OnesZeros { len: 8 }, |_| {})
+                .iter()
+                .map(|i| i.genome.clone())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn seeds_are_injected() {
+        struct Seeded;
+        impl Problem for Seeded {
+            fn genome_len(&self) -> usize {
+                6
+            }
+            fn alphabet(&self) -> usize {
+                2
+            }
+            fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+                // strongly reward the seeded genome so it must survive
+                let target = [1, 0, 1, 0, 1, 0];
+                let d = g.iter().zip(&target).filter(|(a, b)| a != b).count();
+                vec![d as f64]
+            }
+            fn seeds(&self) -> Vec<Vec<usize>> {
+                vec![vec![1, 0, 1, 0, 1, 0]]
+            }
+        }
+        let mut opt = Nsga2::new(Nsga2Config {
+            pop_size: 10,
+            generations: 1,
+            ..Default::default()
+        });
+        let front = opt.run(&mut Seeded, |_| {});
+        assert!(front.iter().any(|i| i.objectives[0] == 0.0));
+    }
+
+    #[test]
+    fn callback_reports_progress() {
+        let mut gens = Vec::new();
+        let mut opt = Nsga2::new(Nsga2Config {
+            pop_size: 10,
+            generations: 5,
+            ..Default::default()
+        });
+        opt.run(&mut OnesZeros { len: 8 }, |s| gens.push(s.generation));
+        assert_eq!(gens, vec![0, 1, 2, 3, 4]);
+        assert_eq!(opt.evaluations(), 10 + 5 * 10);
+    }
+}

@@ -1,0 +1,115 @@
+//! Fast non-dominated sorting (Deb et al. 2002, §III-A).
+
+/// True iff `a` Pareto-dominates `b` (all objectives <=, at least one <).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Partition a population (objective vectors) into non-dominated fronts.
+/// Returns index lists; front 0 is the Pareto set. O(M·N²).
+pub fn fast_non_dominated_sort(objs: &[&[f64]]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // S_p
+    let mut domination_count = vec![0usize; n]; // n_p
+    let mut fronts: Vec<Vec<usize>> = vec![Vec::new()];
+
+    for p in 0..n {
+        for q in (p + 1)..n {
+            if dominates(objs[p], objs[q]) {
+                dominated_by[p].push(q);
+                domination_count[q] += 1;
+            } else if dominates(objs[q], objs[p]) {
+                dominated_by[q].push(p);
+                domination_count[p] += 1;
+            }
+        }
+    }
+    for p in 0..n {
+        if domination_count[p] == 0 {
+            fronts[0].push(p);
+        }
+    }
+
+    let mut i = 0;
+    while !fronts[i].is_empty() {
+        let mut next = Vec::new();
+        for &p in &fronts[i] {
+            for &q in &dominated_by[p] {
+                domination_count[q] -= 1;
+                if domination_count[q] == 0 {
+                    next.push(q);
+                }
+            }
+        }
+        i += 1;
+        fronts.push(next);
+    }
+    fronts.pop(); // drop trailing empty front
+    fronts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominates_basic() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal: no strict
+    }
+
+    #[test]
+    fn sorts_into_layers() {
+        // points: A(0,0) dominates everything; B(1,2)/C(2,1) mutually
+        // non-dominated; D(3,3) dominated by all.
+        let pts: Vec<&[f64]> = vec![&[0.0, 0.0], &[1.0, 2.0], &[2.0, 1.0], &[3.0, 3.0]];
+        let fronts = fast_non_dominated_sort(&pts);
+        assert_eq!(fronts.len(), 3);
+        assert_eq!(fronts[0], vec![0]);
+        assert_eq!(fronts[1], vec![1, 2]);
+        assert_eq!(fronts[2], vec![3]);
+    }
+
+    #[test]
+    fn all_non_dominated_single_front() {
+        let pts: Vec<&[f64]> = vec![&[0.0, 3.0], &[1.0, 2.0], &[2.0, 1.0], &[3.0, 0.0]];
+        let fronts = fast_non_dominated_sort(&pts);
+        assert_eq!(fronts.len(), 1);
+        assert_eq!(fronts[0].len(), 4);
+    }
+
+    #[test]
+    fn duplicates_share_front() {
+        let pts: Vec<&[f64]> = vec![&[1.0, 1.0], &[1.0, 1.0]];
+        let fronts = fast_non_dominated_sort(&pts);
+        assert_eq!(fronts.len(), 1);
+        assert_eq!(fronts[0].len(), 2);
+    }
+
+    #[test]
+    fn empty_population() {
+        let pts: Vec<&[f64]> = vec![];
+        assert!(fast_non_dominated_sort(&pts).is_empty());
+    }
+
+    #[test]
+    fn three_objectives() {
+        let pts: Vec<&[f64]> =
+            vec![&[1.0, 2.0, 3.0], &[3.0, 2.0, 1.0], &[2.0, 2.0, 2.0], &[3.0, 3.0, 3.0]];
+        let fronts = fast_non_dominated_sort(&pts);
+        assert_eq!(fronts[0].len(), 3);
+        assert_eq!(fronts[1], vec![3]);
+    }
+}

@@ -1,0 +1,115 @@
+//! ΔAcc memoization (DESIGN.md §4.2, ablation A2).
+//!
+//! ΔAcc(P) depends on P only through the per-unit rate vectors, and the
+//! bit-flip kernel quantizes rates to 1/256 granularity — so caching on
+//! the quantized rate-vector key is *exact*, not approximate. NSGA-II
+//! revisits equivalent mappings constantly (D^L is small at L ≈ 6–10,
+//! D = 2), so hit rates above 90% are typical after the first generations.
+
+use std::collections::HashMap;
+
+use crate::faults::RateVectors;
+
+/// Exact memo cache for fault-injected accuracy.
+#[derive(Debug, Default)]
+pub struct DaccCache {
+    map: HashMap<Vec<u16>, f64>,
+    hits: usize,
+    misses: usize,
+}
+
+impl DaccCache {
+    pub fn new() -> DaccCache {
+        DaccCache::default()
+    }
+
+    pub fn get(&mut self, rates: &RateVectors) -> Option<f64> {
+        match self.map.get(&rates.cache_key()) {
+            Some(&v) => {
+                self.hits += 1;
+                Some(v)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&mut self, rates: &RateVectors, acc: f64) {
+        self.map.insert(rates.cache_key(), acc);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.hits + self.misses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / (self.hits + self.misses) as f64
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rv(w: f32, a: f32) -> RateVectors {
+        RateVectors { w_rates: vec![w, w], a_rates: vec![a, a] }
+    }
+
+    #[test]
+    fn hit_after_put() {
+        let mut c = DaccCache::new();
+        assert_eq!(c.get(&rv(0.2, 0.1)), None);
+        c.put(&rv(0.2, 0.1), 0.85);
+        assert_eq!(c.get(&rv(0.2, 0.1)), Some(0.85));
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sub_granularity_rates_collide_exactly() {
+        let mut c = DaccCache::new();
+        c.put(&rv(0.2, 0.1), 0.9);
+        // 0.2001 quantizes to the same kernel threshold -> same accuracy
+        assert_eq!(c.get(&rv(0.2001, 0.1)), Some(0.9));
+    }
+
+    #[test]
+    fn distinct_rates_miss() {
+        let mut c = DaccCache::new();
+        c.put(&rv(0.2, 0.1), 0.9);
+        assert_eq!(c.get(&rv(0.25, 0.1)), None);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = DaccCache::new();
+        c.put(&rv(0.2, 0.1), 0.9);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.hits(), 0);
+    }
+}

@@ -1,0 +1,344 @@
+//! The three-objective partition evaluator (paper Eq. 2):
+//! minimize [Latency(P), Energy(P), ΔAcc(P)].
+//!
+//! Latency/energy come from the analytical hardware models (per-unit
+//! tables precomputed once); ΔAcc comes from the compiled fault-injected
+//! model (exact mode, Algorithm 1) or the sensitivity surrogate, with
+//! exact memoization on quantized rate vectors in between.
+
+use anyhow::Result;
+
+use super::cache::DaccCache;
+use super::genome::Mapping;
+use super::sensitivity::SensitivityTable;
+use crate::faults::{FaultScenario, RateVectors};
+use crate::hw::Platform;
+use crate::model::Manifest;
+use crate::runtime::{AccuracyEvaluator, CompiledModel};
+
+/// How ΔAcc(P) is obtained.
+pub enum DaccMode<'a> {
+    /// Run the compiled fault-injected forward (the paper's method).
+    Exact { model: &'a CompiledModel, eval: &'a AccuracyEvaluator, key_seed: u32, n_batches: usize },
+    /// Compose the measured layer-sensitivity table (cheap; online phase).
+    Surrogate(&'a SensitivityTable),
+    /// ΔAcc not evaluated (2-objective fault-unaware baselines).
+    None,
+}
+
+/// Evaluation-effort counters (reported by benches / EXPERIMENTS.md).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalCounters {
+    pub exact_evals: usize,
+    pub surrogate_evals: usize,
+}
+
+/// Bound evaluator for one (model, platform, fault-environment) triple.
+pub struct PartitionEvaluator<'a> {
+    lat_table: Vec<Vec<f64>>, // [unit][device] ms
+    en_table: Vec<Vec<f64>>,  // [unit][device] mJ
+    in_bytes: Vec<u64>,       // per-unit input activation bytes
+    platform: &'a Platform,
+    /// Per-device fault rates (weights / activations) of the environment.
+    pub dev_w_rates: Vec<f32>,
+    pub dev_a_rates: Vec<f32>,
+    pub scenario: FaultScenario,
+    pub clean_acc: f64,
+    /// CNNParted models link costs; AFarePart excludes them (§VI-E).
+    pub include_link_cost: bool,
+    dacc: DaccMode<'a>,
+    cache: DaccCache,
+    pub counters: EvalCounters,
+}
+
+impl<'a> PartitionEvaluator<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        manifest: &Manifest,
+        platform: &'a Platform,
+        dev_w_rates: Vec<f32>,
+        dev_a_rates: Vec<f32>,
+        scenario: FaultScenario,
+        clean_acc: f64,
+        include_link_cost: bool,
+        dacc: DaccMode<'a>,
+    ) -> Self {
+        assert_eq!(dev_w_rates.len(), platform.num_devices());
+        PartitionEvaluator {
+            lat_table: platform.latency_table(&manifest.units),
+            en_table: platform.energy_table(&manifest.units),
+            in_bytes: manifest.units.iter().map(|u| u.in_bytes).collect(),
+            platform,
+            dev_w_rates,
+            dev_a_rates,
+            scenario,
+            clean_acc,
+            include_link_cost,
+            dacc,
+            cache: DaccCache::new(),
+            counters: EvalCounters::default(),
+        }
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.lat_table.len()
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.platform.num_devices()
+    }
+
+    /// Update the environment rates (online phase re-optimization) and
+    /// drop the now-stale ΔAcc cache.
+    pub fn set_env_rates(&mut self, dev_w: Vec<f32>, dev_a: Vec<f32>) {
+        self.dev_w_rates = dev_w;
+        self.dev_a_rates = dev_a;
+        self.cache.clear();
+    }
+
+    pub fn cache_stats(&self) -> (usize, usize, f64) {
+        (self.cache.hits(), self.cache.misses(), self.cache.hit_rate())
+    }
+
+    /// Per-unit rate vectors induced by a mapping under this environment.
+    pub fn rates_for(&self, mapping: &Mapping) -> RateVectors {
+        RateVectors::from_mapping(&mapping.0, &self.dev_w_rates, &self.dev_a_rates, self.scenario)
+    }
+
+    /// End-to-end latency in ms (sequential layer execution, as in the
+    /// paper's per-sample inference latency).
+    pub fn latency_ms(&self, mapping: &Mapping) -> f64 {
+        let mut total = 0.0;
+        for (l, &d) in mapping.0.iter().enumerate() {
+            total += self.lat_table[l][d];
+        }
+        if self.include_link_cost {
+            for w in 0..mapping.0.len().saturating_sub(1) {
+                if mapping.0[w] != mapping.0[w + 1] {
+                    total += self.platform.link.latency_ms(self.in_bytes[w + 1]);
+                }
+            }
+        }
+        total
+    }
+
+    /// End-to-end energy in mJ.
+    pub fn energy_mj(&self, mapping: &Mapping) -> f64 {
+        let mut total = 0.0;
+        for (l, &d) in mapping.0.iter().enumerate() {
+            total += self.en_table[l][d];
+        }
+        if self.include_link_cost {
+            for w in 0..mapping.0.len().saturating_sub(1) {
+                if mapping.0[w] != mapping.0[w + 1] {
+                    total += self.platform.link.energy_mj(self.in_bytes[w + 1]);
+                }
+            }
+        }
+        total
+    }
+
+    /// Fault-injected accuracy A_faulty(P) (memoized).
+    pub fn faulty_accuracy(&mut self, mapping: &Mapping) -> Result<f64> {
+        let rates = self.rates_for(mapping);
+        if let Some(acc) = self.cache.get(&rates) {
+            return Ok(acc);
+        }
+        let acc = match &self.dacc {
+            DaccMode::Exact { model, eval, key_seed, n_batches } => {
+                self.counters.exact_evals += 1;
+                eval.accuracy(model, &rates, *key_seed, *n_batches)?
+            }
+            DaccMode::Surrogate(table) => {
+                self.counters.surrogate_evals += 1;
+                (table.clean_acc - table.estimate_dacc(&rates)).max(0.0)
+            }
+            DaccMode::None => self.clean_acc,
+        };
+        self.cache.put(&rates, acc);
+        Ok(acc)
+    }
+
+    /// ΔAcc(P) = A_clean − A_faulty(P) (paper Eq. 1), clamped at 0.
+    pub fn dacc(&mut self, mapping: &Mapping) -> Result<f64> {
+        Ok((self.clean_acc - self.faulty_accuracy(mapping)?).max(0.0))
+    }
+
+    /// Three-objective vector (AFarePart).
+    pub fn objectives3(&mut self, mapping: &Mapping) -> Result<Vec<f64>> {
+        Ok(vec![self.latency_ms(mapping), self.energy_mj(mapping), self.dacc(mapping)?])
+    }
+
+    /// Two-objective vector (fault-unaware baselines).
+    pub fn objectives2(&self, mapping: &Mapping) -> Vec<f64> {
+        vec![self.latency_ms(mapping), self.energy_mj(mapping)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::UnitCost;
+
+    fn manifest2() -> Manifest {
+        let mk = |name: &str, kind: &str, macs: u64, w: u64, i: u64, o: u64| UnitCost {
+            name: name.into(),
+            kind: kind.into(),
+            macs,
+            w_params: w,
+            w_bytes: w,
+            in_bytes: i,
+            out_bytes: o,
+            out_shape: vec![1],
+        };
+        Manifest {
+            model: "toy".into(),
+            num_units: 3,
+            num_classes: 10,
+            precision: 8,
+            faulty_bits: 4,
+            batch: 4,
+            hlo_file: "x".into(),
+            weights_file: "x".into(),
+            clean_acc_f32: 0.95,
+            clean_acc_quant: 0.9,
+            weight_scale: 0.0078,
+            units: vec![
+                mk("c1", "conv", 2_000_000, 2_000, 3_072, 8_192),
+                mk("c2", "conv", 8_000_000, 50_000, 8_192, 4_096),
+                mk("fc", "dense", 300_000, 300_000, 4_096, 10),
+            ],
+            weight_tensors: vec![],
+            act_scales: vec![0.01, 0.01, 0.01],
+        }
+    }
+
+    fn eval<'a>(platform: &'a Platform, link: bool) -> PartitionEvaluator<'a> {
+        PartitionEvaluator::new(
+            &manifest2(),
+            platform,
+            vec![0.2, 0.03],
+            vec![0.2, 0.03],
+            FaultScenario::InputWeight,
+            0.9,
+            link,
+            DaccMode::None,
+        )
+    }
+
+    #[test]
+    fn latency_additive_over_units() {
+        let p = Platform::default_two_device();
+        let ev = eval(&p, false);
+        let m0 = Mapping::all_on(0, 3);
+        let lat = ev.latency_ms(&m0);
+        let per_unit: f64 = (0..3).map(|l| ev.lat_table[l][0]).sum();
+        assert!((lat - per_unit).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_cost_only_at_boundaries() {
+        let p = Platform::default_two_device();
+        let ev_nolink = eval(&p, false);
+        let ev_link = eval(&p, true);
+        let same = Mapping(vec![0, 0, 0]);
+        assert_eq!(ev_nolink.latency_ms(&same), ev_link.latency_ms(&same));
+        let split = Mapping(vec![0, 1, 1]);
+        assert!(ev_link.latency_ms(&split) > ev_nolink.latency_ms(&split));
+        assert!(ev_link.energy_mj(&split) > ev_nolink.energy_mj(&split));
+    }
+
+    #[test]
+    fn rates_follow_mapping() {
+        let p = Platform::default_two_device();
+        let ev = eval(&p, false);
+        let rv = ev.rates_for(&Mapping(vec![0, 1, 0]));
+        assert_eq!(rv.w_rates, vec![0.2, 0.03, 0.2]);
+    }
+
+    #[test]
+    fn dacc_none_mode_returns_zero_drop() {
+        let p = Platform::default_two_device();
+        let mut ev = eval(&p, false);
+        assert_eq!(ev.dacc(&Mapping(vec![0, 0, 0])).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn surrogate_mode_prefers_shielded_device_for_sensitive_unit() {
+        let p = Platform::default_two_device();
+        let table = SensitivityTable {
+            rate_grid: vec![0.1, 0.2, 0.4],
+            // unit 0 is very weight-sensitive; others not at all
+            w_drop: vec![vec![0.1, 0.3, 0.5], vec![0.0; 3], vec![0.0; 3]],
+            a_drop: vec![vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]],
+            clean_acc: 0.9,
+        };
+        let m = manifest2();
+        let mut ev = PartitionEvaluator::new(
+            &m,
+            &p,
+            vec![0.2, 0.03],
+            vec![0.2, 0.03],
+            FaultScenario::WeightOnly,
+            0.9,
+            false,
+            DaccMode::Surrogate(&table),
+        );
+        let risky = ev.dacc(&Mapping(vec![0, 0, 0])).unwrap();
+        let safe = ev.dacc(&Mapping(vec![1, 0, 0])).unwrap();
+        assert!(safe < risky, "safe={safe} risky={risky}");
+    }
+
+    #[test]
+    fn cache_hits_on_equivalent_mappings() {
+        let p = Platform::default_two_device();
+        let table = SensitivityTable {
+            rate_grid: vec![0.2],
+            w_drop: vec![vec![0.1], vec![0.1], vec![0.1]],
+            a_drop: vec![vec![0.1], vec![0.1], vec![0.1]],
+            clean_acc: 0.9,
+        };
+        let m = manifest2();
+        let mut ev = PartitionEvaluator::new(
+            &m,
+            &p,
+            vec![0.2, 0.2], // identical devices -> all mappings equivalent
+            vec![0.2, 0.2],
+            FaultScenario::InputWeight,
+            0.9,
+            false,
+            DaccMode::Surrogate(&table),
+        );
+        ev.dacc(&Mapping(vec![0, 0, 0])).unwrap();
+        ev.dacc(&Mapping(vec![1, 1, 1])).unwrap(); // same rates -> cache hit
+        let (hits, misses, _) = ev.cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+        assert_eq!(ev.counters.surrogate_evals, 1);
+    }
+
+    #[test]
+    fn set_env_rates_invalidates_cache() {
+        let p = Platform::default_two_device();
+        let table = SensitivityTable {
+            rate_grid: vec![0.2, 0.4],
+            w_drop: vec![vec![0.1, 0.3], vec![0.1, 0.3], vec![0.1, 0.3]],
+            a_drop: vec![vec![0.1, 0.3], vec![0.1, 0.3], vec![0.1, 0.3]],
+            clean_acc: 0.9,
+        };
+        let m = manifest2();
+        let mut ev = PartitionEvaluator::new(
+            &m,
+            &p,
+            vec![0.2, 0.03],
+            vec![0.2, 0.03],
+            FaultScenario::InputWeight,
+            0.9,
+            false,
+            DaccMode::Surrogate(&table),
+        );
+        let d1 = ev.dacc(&Mapping(vec![0, 0, 0])).unwrap();
+        ev.set_env_rates(vec![0.4, 0.03], vec![0.4, 0.03]);
+        let d2 = ev.dacc(&Mapping(vec![0, 0, 0])).unwrap();
+        assert!(d2 > d1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Pareto-front selection policies: how the coordinator picks the deployed
+//! partition P* from the offline front (paper §V-B: "the most robust
+//! partition ... ensuring an initial balance").
+
+use crate::nsga2::Individual;
+
+/// The most fault-resilient solution: minimum ΔAcc (objective index 2),
+/// ties broken by latency.
+pub fn select_min_dacc(front: &[Individual]) -> Option<&Individual> {
+    front.iter().min_by(|a, b| {
+        (a.objectives[2], a.objectives[0])
+            .partial_cmp(&(b.objectives[2], b.objectives[0]))
+            .unwrap()
+    })
+}
+
+/// Minimum ΔAcc among solutions within latency/energy budget factors of
+/// the front's best latency/energy (the paper's "keeping latency and
+/// energy within acceptable limits", §V-B).
+pub fn select_min_dacc_within_budget(
+    front: &[Individual],
+    lat_budget: f64,
+    energy_budget: f64,
+) -> Option<&Individual> {
+    let best_lat = front.iter().map(|i| i.objectives[0]).fold(f64::INFINITY, f64::min);
+    let best_en = front.iter().map(|i| i.objectives[1]).fold(f64::INFINITY, f64::min);
+    let eligible: Vec<&Individual> = front
+        .iter()
+        .filter(|i| {
+            i.objectives[0] <= best_lat * lat_budget && i.objectives[1] <= best_en * energy_budget
+        })
+        .collect();
+    let pool: Vec<&Individual> =
+        if eligible.is_empty() { front.iter().collect() } else { eligible };
+    pool.into_iter().min_by(|a, b| {
+        (a.objectives[2], a.objectives[0])
+            .partial_cmp(&(b.objectives[2], b.objectives[0]))
+            .unwrap()
+    })
+}
+
+/// Knee point: minimum Euclidean distance to the ideal point after
+/// per-objective min-max normalization.
+pub fn select_knee(front: &[Individual]) -> Option<&Individual> {
+    if front.is_empty() {
+        return None;
+    }
+    let nobj = front[0].objectives.len();
+    let mut lo = vec![f64::INFINITY; nobj];
+    let mut hi = vec![f64::NEG_INFINITY; nobj];
+    for i in front {
+        for k in 0..nobj {
+            lo[k] = lo[k].min(i.objectives[k]);
+            hi[k] = hi[k].max(i.objectives[k]);
+        }
+    }
+    front.iter().min_by(|a, b| {
+        let dist = |ind: &Individual| -> f64 {
+            (0..nobj)
+                .map(|k| {
+                    let range = hi[k] - lo[k];
+                    if range <= 0.0 {
+                        0.0
+                    } else {
+                        let t = (ind.objectives[k] - lo[k]) / range;
+                        t * t
+                    }
+                })
+                .sum()
+        };
+        dist(a).partial_cmp(&dist(b)).unwrap()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ind(objs: &[f64]) -> Individual {
+        Individual { genome: vec![0], objectives: objs.to_vec(), rank: 0, crowding: 0.0 }
+    }
+
+    fn front() -> Vec<Individual> {
+        vec![
+            ind(&[10.0, 5.0, 0.30]), // fast, cheap, fragile
+            ind(&[12.0, 6.0, 0.10]), // balanced
+            ind(&[20.0, 9.0, 0.02]), // slow, robust
+        ]
+    }
+
+    #[test]
+    fn min_dacc_picks_most_robust() {
+        let f = front();
+        assert_eq!(select_min_dacc(&f).unwrap().objectives[2], 0.02);
+    }
+
+    #[test]
+    fn budget_constrains_selection() {
+        let f = front();
+        // within 1.3x latency and energy of best: excludes the slow one
+        let sel = select_min_dacc_within_budget(&f, 1.3, 1.3).unwrap();
+        assert_eq!(sel.objectives[2], 0.10);
+        // generous budget: picks the most robust
+        let sel = select_min_dacc_within_budget(&f, 10.0, 10.0).unwrap();
+        assert_eq!(sel.objectives[2], 0.02);
+    }
+
+    #[test]
+    fn budget_falls_back_when_infeasible() {
+        let f = front();
+        let sel = select_min_dacc_within_budget(&f, 0.5, 0.5).unwrap();
+        // nothing fits an impossible budget; falls back to the full front
+        assert_eq!(sel.objectives[2], 0.02);
+    }
+
+    #[test]
+    fn knee_prefers_balanced() {
+        let f = front();
+        assert_eq!(select_knee(&f).unwrap().objectives[0], 12.0);
+    }
+
+    #[test]
+    fn empty_front_is_none() {
+        assert!(select_min_dacc(&[]).is_none());
+        assert!(select_knee(&[]).is_none());
+    }
+}

@@ -1,0 +1,81 @@
+//! The partition genome: the paper's mapping P : {1..L} → {0..D-1}.
+
+use crate::util::prng::Rng;
+
+/// A layer→device mapping (one gene per partitionable unit).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Mapping(pub Vec<usize>);
+
+impl Mapping {
+    pub fn all_on(device: usize, len: usize) -> Mapping {
+        Mapping(vec![device; len])
+    }
+
+    pub fn random(rng: &mut Rng, len: usize, devices: usize) -> Mapping {
+        Mapping((0..len).map(|_| rng.below(devices)).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Number of device boundaries (consecutive units on different devices)
+    /// — each one is a link transfer in the CNNParted cost model.
+    pub fn boundaries(&self) -> usize {
+        self.0.windows(2).filter(|w| w[0] != w[1]).count()
+    }
+
+    /// Units mapped to `device`.
+    pub fn units_on(&self, device: usize) -> Vec<usize> {
+        self.0
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == device)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Compact display, e.g. "01100" for 5 units on 2 devices.
+    pub fn display(&self) -> String {
+        self.0.iter().map(|d| std::char::from_digit(*d as u32 % 36, 36).unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundaries_counted() {
+        assert_eq!(Mapping(vec![0, 0, 1, 1, 0]).boundaries(), 2);
+        assert_eq!(Mapping(vec![0, 0, 0]).boundaries(), 0);
+        assert_eq!(Mapping(vec![0, 1, 0, 1]).boundaries(), 3);
+    }
+
+    #[test]
+    fn units_on_device() {
+        let m = Mapping(vec![0, 1, 0, 1]);
+        assert_eq!(m.units_on(0), vec![0, 2]);
+        assert_eq!(m.units_on(1), vec![1, 3]);
+    }
+
+    #[test]
+    fn random_in_alphabet() {
+        let mut rng = Rng::new(1);
+        let m = Mapping::random(&mut rng, 100, 3);
+        assert!(m.0.iter().all(|&d| d < 3));
+        // uses all devices with overwhelming probability
+        for d in 0..3 {
+            assert!(!m.units_on(d).is_empty());
+        }
+    }
+
+    #[test]
+    fn display_compact() {
+        assert_eq!(Mapping(vec![0, 1, 1, 0]).display(), "0110");
+    }
+}

@@ -1,0 +1,171 @@
+//! Layer-wise fault-sensitivity surrogate (DESIGN.md §4.1, ablation A1).
+//!
+//! The paper's "layer-wise fault sweeping" (§V-C) measured once up front:
+//! for each unit l and each rate r on a grid, run the compiled model with
+//! faults in unit l only and record the accuracy drop. A candidate
+//! mapping's ΔAcc is then *estimated* by composing per-unit survival
+//! fractions:
+//!
+//!   ΔAcc(P) ≈ A_clean · (1 − Π_l (1 − d_l(r_l)))
+//!   with d_l(r) = ΔAcc_l(r) / A_clean, linearly interpolated on the grid.
+//!
+//! This is the cheap mode the online phase can afford; the exact mode
+//! (paper's Algorithm 1) runs the real fault-injected forward per
+//! candidate. bench_ablation quantifies the fidelity gap.
+
+use anyhow::Result;
+
+use crate::faults::RateVectors;
+use crate::runtime::{AccuracyEvaluator, CompiledModel};
+
+/// Per-unit, per-rate measured accuracy drops.
+#[derive(Clone, Debug)]
+pub struct SensitivityTable {
+    pub rate_grid: Vec<f32>,
+    /// [unit][grid] accuracy drop when only that unit's WEIGHTS are faulted.
+    pub w_drop: Vec<Vec<f64>>,
+    /// [unit][grid] accuracy drop when only that unit's ACTIVATIONS are faulted.
+    pub a_drop: Vec<Vec<f64>>,
+    pub clean_acc: f64,
+}
+
+impl SensitivityTable {
+    /// Measure the table with the real compiled model (one-time cost:
+    /// 2 · L · |grid| fault-injected accuracy evaluations).
+    pub fn measure(
+        model: &CompiledModel,
+        eval: &AccuracyEvaluator,
+        rate_grid: &[f32],
+        n_batches: usize,
+        key_seed: u32,
+    ) -> Result<SensitivityTable> {
+        let l = model.num_units();
+        let clean_acc = eval.clean_accuracy(model, n_batches)?;
+        let mut w_drop = vec![vec![0.0; rate_grid.len()]; l];
+        let mut a_drop = vec![vec![0.0; rate_grid.len()]; l];
+        for unit in 0..l {
+            for (gi, &r) in rate_grid.iter().enumerate() {
+                let mut rv = RateVectors::zeros(l);
+                rv.w_rates[unit] = r;
+                let acc = eval.accuracy(model, &rv, key_seed, n_batches)?;
+                w_drop[unit][gi] = (clean_acc - acc).max(0.0);
+
+                let mut rv = RateVectors::zeros(l);
+                rv.a_rates[unit] = r;
+                let acc = eval.accuracy(model, &rv, key_seed, n_batches)?;
+                a_drop[unit][gi] = (clean_acc - acc).max(0.0);
+            }
+        }
+        Ok(SensitivityTable {
+            rate_grid: rate_grid.to_vec(),
+            w_drop,
+            a_drop,
+            clean_acc,
+        })
+    }
+
+    /// Linear interpolation of a drop curve at rate r (clamped to grid).
+    fn interp(grid: &[f32], drops: &[f64], r: f32) -> f64 {
+        if r <= 0.0 {
+            return 0.0;
+        }
+        if r <= grid[0] {
+            // linear from (0, 0) to the first grid point
+            return drops[0] * (r / grid[0]) as f64;
+        }
+        for w in grid.windows(2).zip(drops.windows(2)) {
+            let (g, d) = w;
+            if r <= g[1] {
+                let t = ((r - g[0]) / (g[1] - g[0])) as f64;
+                return d[0] * (1.0 - t) + d[1] * t;
+            }
+        }
+        *drops.last().unwrap()
+    }
+
+    /// Estimated ΔAcc for full per-unit rate vectors.
+    pub fn estimate_dacc(&self, rates: &RateVectors) -> f64 {
+        if self.clean_acc <= 0.0 {
+            return 0.0;
+        }
+        let mut survival = 1.0f64;
+        for unit in 0..rates.w_rates.len() {
+            let dw = Self::interp(&self.rate_grid, &self.w_drop[unit], rates.w_rates[unit]);
+            let da = Self::interp(&self.rate_grid, &self.a_drop[unit], rates.a_rates[unit]);
+            survival *= (1.0 - (dw / self.clean_acc).clamp(0.0, 1.0))
+                * (1.0 - (da / self.clean_acc).clamp(0.0, 1.0));
+        }
+        self.clean_acc * (1.0 - survival)
+    }
+
+    /// Most weight-fault-sensitive unit at the top grid rate (diagnostics).
+    pub fn most_sensitive_unit(&self) -> usize {
+        let gi = self.rate_grid.len() - 1;
+        (0..self.w_drop.len())
+            .max_by(|&a, &b| {
+                (self.w_drop[a][gi] + self.a_drop[a][gi])
+                    .partial_cmp(&(self.w_drop[b][gi] + self.a_drop[b][gi]))
+                    .unwrap()
+            })
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SensitivityTable {
+        SensitivityTable {
+            rate_grid: vec![0.1, 0.2, 0.4],
+            w_drop: vec![vec![0.05, 0.10, 0.20], vec![0.0, 0.01, 0.02]],
+            a_drop: vec![vec![0.10, 0.20, 0.40], vec![0.01, 0.02, 0.04]],
+            clean_acc: 0.9,
+        }
+    }
+
+    #[test]
+    fn zero_rates_zero_drop() {
+        let t = table();
+        assert_eq!(t.estimate_dacc(&RateVectors::zeros(2)), 0.0);
+    }
+
+    #[test]
+    fn interpolates_between_grid_points() {
+        let t = table();
+        let rv = RateVectors { w_rates: vec![0.15, 0.0], a_rates: vec![0.0, 0.0] };
+        let est = t.estimate_dacc(&rv);
+        assert!(est > 0.05 && est < 0.10, "est={est}");
+    }
+
+    #[test]
+    fn extrapolation_clamps_to_last() {
+        let t = table();
+        let rv = RateVectors { w_rates: vec![0.9, 0.0], a_rates: vec![0.0, 0.0] };
+        assert!((t.estimate_dacc(&rv) - 0.20).abs() < 1e-9);
+    }
+
+    #[test]
+    fn composition_le_clean_and_monotone() {
+        let t = table();
+        let one = RateVectors { w_rates: vec![0.4, 0.0], a_rates: vec![0.0, 0.0] };
+        let both = RateVectors { w_rates: vec![0.4, 0.4], a_rates: vec![0.4, 0.4] };
+        let d1 = t.estimate_dacc(&one);
+        let d2 = t.estimate_dacc(&both);
+        assert!(d2 >= d1);
+        assert!(d2 <= t.clean_acc + 1e-9);
+    }
+
+    #[test]
+    fn most_sensitive_unit_is_unit0() {
+        assert_eq!(table().most_sensitive_unit(), 0);
+    }
+
+    #[test]
+    fn below_first_grid_point_scales_linearly() {
+        let t = table();
+        let rv = RateVectors { w_rates: vec![0.05, 0.0], a_rates: vec![0.0, 0.0] };
+        let est = t.estimate_dacc(&rv);
+        assert!((est - 0.025).abs() < 1e-6, "est={est}");
+    }
+}

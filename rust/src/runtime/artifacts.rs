@@ -1,0 +1,91 @@
+//! Artifact directory discovery: `artifacts/index.json` written by aot.py.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Parsed `index.json`: which models exist and the global export config.
+#[derive(Clone, Debug)]
+pub struct ArtifactIndex {
+    pub dir: PathBuf,
+    pub models: Vec<String>,
+    pub eval_data: String,
+    pub batch: usize,
+    pub precision: u32,
+    pub faulty_bits: u32,
+    pub n_eval: usize,
+}
+
+impl ArtifactIndex {
+    /// Load from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<ArtifactIndex> {
+        let text = std::fs::read_to_string(dir.join("index.json"))
+            .with_context(|| format!("reading {}/index.json — run `make artifacts`", dir.display()))?;
+        let v = json::parse(&text).context("index.json: invalid json")?;
+        let models = v
+            .get("models")
+            .and_then(Value::as_arr)
+            .context("index.json: missing models")?
+            .iter()
+            .filter_map(|m| m.as_str().map(str::to_string))
+            .collect();
+        Ok(ArtifactIndex {
+            dir: dir.to_path_buf(),
+            models,
+            eval_data: v
+                .get("eval_data")
+                .and_then(Value::as_str)
+                .unwrap_or("eval_data.bin")
+                .to_string(),
+            batch: v.get("batch").and_then(Value::as_usize).unwrap_or(64),
+            precision: v.get("precision").and_then(Value::as_u64).unwrap_or(8) as u32,
+            faulty_bits: v.get("faulty_bits").and_then(Value::as_u64).unwrap_or(4) as u32,
+            n_eval: v.get("n_eval").and_then(Value::as_usize).unwrap_or(512),
+        })
+    }
+
+    /// Default artifacts dir: $AFARE_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("AFARE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest_path(&self, model: &str) -> PathBuf {
+        self.dir.join(format!("{model}_manifest.json"))
+    }
+
+    pub fn eval_data_path(&self) -> PathBuf {
+        self.dir.join(&self.eval_data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_index_from_tempdir() {
+        let dir = std::env::temp_dir().join(format!("afare_idx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("index.json"),
+            r#"{"models": ["a", "b"], "eval_data": "e.bin", "batch": 32,
+                "precision": 8, "faulty_bits": 4, "n_eval": 128}"#,
+        )
+        .unwrap();
+        let idx = ArtifactIndex::load(&dir).unwrap();
+        assert_eq!(idx.models, vec!["a", "b"]);
+        assert_eq!(idx.batch, 32);
+        assert!(idx.manifest_path("a").ends_with("a_manifest.json"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_informative() {
+        let err = ArtifactIndex::load(Path::new("/nonexistent_xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

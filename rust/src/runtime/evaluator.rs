@@ -1,0 +1,74 @@
+//! Batched top-1 accuracy under fault injection — the paper's
+//! EvaluateAccuracy(M, P, F) primitive (Algorithm 1, lines 5–6).
+//!
+//! Image literals are materialized once per batch and cached; the
+//! per-evaluation cost is just the rate-vector/key literals and the PJRT
+//! execution itself.
+
+use anyhow::Result;
+
+use super::client::CompiledModel;
+use crate::dataset::EvalSet;
+use crate::faults::RateVectors;
+
+/// Accuracy evaluator bound to a compiled model and an eval subset.
+pub struct AccuracyEvaluator {
+    image_batches: Vec<xla::Literal>,
+    label_batches: Vec<Vec<i32>>,
+    batch: usize,
+    pub num_batches: usize,
+}
+
+impl AccuracyEvaluator {
+    /// Prepare literals for the first `limit` samples (0 = all), in full
+    /// batches of the model's export batch size.
+    pub fn new(model: &CompiledModel, eval: &EvalSet, limit: usize) -> Result<AccuracyEvaluator> {
+        let b = model.batch();
+        let num_batches = eval.full_batches(b, limit);
+        let mut image_batches = Vec::with_capacity(num_batches);
+        let mut label_batches = Vec::with_capacity(num_batches);
+        for i in 0..num_batches {
+            let imgs = eval.batch_images(i * b, b);
+            image_batches.push(model.image_literal(imgs, eval.h, eval.w, eval.c)?);
+            label_batches.push(eval.batch_labels(i * b, b).to_vec());
+        }
+        Ok(AccuracyEvaluator { image_batches, label_batches, batch: b, num_batches })
+    }
+
+    /// Number of samples covered by `n_batches` (0 = all prepared).
+    pub fn samples(&self, n_batches: usize) -> usize {
+        let nb = if n_batches == 0 { self.num_batches } else { n_batches.min(self.num_batches) };
+        nb * self.batch
+    }
+
+    /// Top-1 accuracy under the given per-unit fault rates.
+    ///
+    /// `key_seed` decorrelates fault draws across calls; each batch uses
+    /// key (key_seed, batch_index).
+    pub fn accuracy(
+        &self,
+        model: &CompiledModel,
+        rates: &RateVectors,
+        key_seed: u32,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let nb = if n_batches == 0 { self.num_batches } else { n_batches.min(self.num_batches) };
+        assert!(nb > 0, "no eval batches prepared");
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for i in 0..nb {
+            let logits = model.run_batch(&self.image_batches[i], rates, [key_seed, i as u32])?;
+            let preds = model.argmax_predictions(&logits);
+            for (p, &l) in preds.iter().zip(&self.label_batches[i]) {
+                hits += (*p as i32 == l) as usize;
+                total += 1;
+            }
+        }
+        Ok(hits as f64 / total as f64)
+    }
+
+    /// Clean (zero-rate) accuracy — A_clean of ΔAcc.
+    pub fn clean_accuracy(&self, model: &CompiledModel, n_batches: usize) -> Result<f64> {
+        self.accuracy(model, &RateVectors::zeros(model.num_units()), 0, n_batches)
+    }
+}

@@ -1,0 +1,56 @@
+//! Typed literal constructors over the xla crate's untyped-byte API.
+
+use anyhow::{Context, Result};
+use xla::{ElementType, Literal};
+
+fn bytes_of<T: Copy>(xs: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data scalars (f32/i32/u32), little-endian host.
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+    }
+}
+
+/// f32 literal with the given dims.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes_of(data))
+        .context("creating f32 literal")
+}
+
+/// i32 literal with the given dims.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes_of(data))
+        .context("creating i32 literal")
+}
+
+/// u32 literal with the given dims.
+pub fn literal_u32(data: &[u32], dims: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    Literal::create_from_shape_and_untyped_data(ElementType::U32, dims, bytes_of(data))
+        .context("creating u32 literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let l = literal_i32(&[-1, 2, -3], &[3]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![-1, 2, -3]);
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let l = literal_u32(&[7, 0xFFFF_FFFF], &[2]).unwrap();
+        assert_eq!(l.to_vec::<u32>().unwrap(), vec![7, 0xFFFF_FFFF]);
+    }
+}

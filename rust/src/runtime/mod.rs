@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! request path. Python is never involved here (DESIGN.md dataflow).
+//!
+//! * `client` — PJRT CPU client wrapper + compiled-model handle.
+//! * `literals` — byte-level literal construction helpers.
+//! * `artifacts` — artifact directory discovery (index.json).
+//! * `evaluator` — batched top-1 accuracy under fault-rate vectors, the
+//!   EvaluateAccuracy(M, P, F) primitive of the paper's Algorithm 1.
+
+mod artifacts;
+mod client;
+mod evaluator;
+mod literals;
+
+pub use artifacts::ArtifactIndex;
+pub use client::{CompiledModel, Runtime};
+pub use evaluator::AccuracyEvaluator;
+pub use literals::{literal_f32, literal_i32, literal_u32};

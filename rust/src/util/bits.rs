@@ -1,0 +1,114 @@
+//! Rust mirror of the paper's Algorithm 2 (probabilistic LSB bit-flip).
+//!
+//! Bit-exact with the L1 Pallas kernel and ref.py: bit i of an element
+//! flips iff the i-th 8-bit slice of its uint32 random draw is below
+//! round(rate * 256). The cross-language contract is pinned by
+//! rust/tests/data/bitflip_golden.json (generated from ref.py and asserted
+//! on both sides).
+//!
+//! Used by the L3 simulation-only paths (fault environment tests, the
+//! surrogate sanity checks); the production inference path injects faults
+//! inside the compiled HLO.
+
+/// Threshold an FR in [0,1] to the shared 1/256-granularity contract.
+#[inline]
+pub fn rate_threshold(rate: f32) -> u32 {
+    (rate * 256.0).round().max(0.0).min(256.0) as u32
+}
+
+/// Flip mask for one element given its random draw.
+#[inline]
+pub fn flip_mask(rnd: u32, thr: u32, bits: u32) -> i32 {
+    let mut mask = 0i32;
+    for i in 0..bits {
+        let slice = (rnd >> (8 * i)) & 0xFF;
+        if slice < thr {
+            mask |= 1 << i;
+        }
+    }
+    mask
+}
+
+/// Apply Algorithm 2 to a quantized tensor (int32 lanes).
+pub fn bitflip(q: &[i32], rnd: &[u32], rate: f32, bits: u32) -> Vec<i32> {
+    assert_eq!(q.len(), rnd.len());
+    let thr = rate_threshold(rate);
+    q.iter()
+        .zip(rnd)
+        .map(|(&x, &r)| x ^ flip_mask(r, thr, bits))
+        .collect()
+}
+
+/// Expected fraction of *elements* altered at per-bit rate `rate`:
+/// 1 - (1 - p)^bits with p quantized to the contract granularity.
+pub fn expected_element_flip_fraction(rate: f32, bits: u32) -> f64 {
+    let p = rate_threshold(rate) as f64 / 256.0;
+    1.0 - (1.0 - p).powi(bits as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn zero_rate_never_flips() {
+        let q = vec![1, -5, 127, -128];
+        let rnd = vec![0u32; 4]; // slices of 0 would flip at any thr > 0
+        assert_eq!(bitflip(&q, &rnd, 0.0, 4), q);
+    }
+
+    #[test]
+    fn rate_one_flips_all_lsbs() {
+        let q = vec![0, -1, 100, -37];
+        let rnd = vec![0xFFFF_FFFFu32; 4];
+        let out = bitflip(&q, &rnd, 1.0, 4);
+        assert_eq!(out, q.iter().map(|x| x ^ 0xF).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn flips_limited_to_lsb_window() {
+        let mut rng = Rng::new(1);
+        let q: Vec<i32> = (0..4096).map(|_| rng.range(0, 255) as i32 - 128).collect();
+        let rnd: Vec<u32> = (0..4096).map(|_| rng.next_u32()).collect();
+        for bits in 1..=4u32 {
+            let out = bitflip(&q, &rnd, 1.0, bits);
+            for (a, b) in q.iter().zip(&out) {
+                assert_eq!((a ^ b) & !((1 << bits) - 1), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn empirical_rate_matches_threshold() {
+        let mut rng = Rng::new(2);
+        let n = 200_000;
+        let q = vec![0i32; n];
+        let rnd: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let out = bitflip(&q, &rnd, 0.2, 4);
+        let expect = rate_threshold(0.2) as f64 / 256.0;
+        for bit in 0..4 {
+            let freq =
+                out.iter().filter(|&&x| (x >> bit) & 1 == 1).count() as f64 / n as f64;
+            assert!((freq - expect).abs() < 0.005, "bit {bit}: {freq} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn expected_fraction_formula() {
+        assert!((expected_element_flip_fraction(0.0, 4) - 0.0).abs() < 1e-12);
+        assert!((expected_element_flip_fraction(1.0, 4) - 1.0).abs() < 1e-12);
+        let p: f64 = 51.0 / 256.0; // rate 0.2
+        let want = 1.0 - (1.0 - p).powi(4);
+        assert!((expected_element_flip_fraction(0.2, 4) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_rounding() {
+        assert_eq!(rate_threshold(0.0), 0);
+        assert_eq!(rate_threshold(0.2), 51);
+        assert_eq!(rate_threshold(1.0), 256);
+        assert_eq!(rate_threshold(-0.5), 0);
+        assert_eq!(rate_threshold(2.0), 256);
+    }
+}

@@ -1,0 +1,8 @@
+//! Foundation utilities built in-tree (offline environment — DESIGN.md §9):
+//! PRNG, JSON, statistics, bit-flip mirror, table formatting.
+
+pub mod bits;
+pub mod fmt;
+pub mod json;
+pub mod prng;
+pub mod stats;

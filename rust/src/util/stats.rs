@@ -1,0 +1,148 @@
+//! Descriptive statistics for bench results and the online accuracy monitor.
+
+/// Summary of a sample of f64 measurements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Compute a summary; panics on an empty sample.
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize: empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: percentile_sorted(&sorted, 50.0),
+        p95: percentile_sorted(&sorted, 95.0),
+        p99: percentile_sorted(&sorted, 99.0),
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Rolling window mean used by the online accuracy monitor.
+#[derive(Clone, Debug)]
+pub struct RollingMean {
+    window: usize,
+    buf: Vec<f64>,
+    next: usize,
+    filled: bool,
+}
+
+impl RollingMean {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        RollingMean { window, buf: Vec::with_capacity(window), next: 0, filled: false }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() < self.window {
+            self.buf.push(x);
+            if self.buf.len() == self.window {
+                self.filled = true;
+            }
+        } else {
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % self.window;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// True once the window has seen `window` samples.
+    pub fn is_warm(&self) -> bool {
+        self.filled
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.buf.is_empty() {
+            None
+        } else {
+            Some(self.buf.iter().sum::<f64>() / self.buf.len() as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let sorted = vec![0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&sorted, 95.0) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn std_of_constant_is_zero() {
+        let s = summarize(&[2.0; 10]);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn rolling_mean_window() {
+        let mut r = RollingMean::new(3);
+        assert!(r.mean().is_none());
+        r.push(1.0);
+        r.push(2.0);
+        assert!(!r.is_warm());
+        assert!((r.mean().unwrap() - 1.5).abs() < 1e-12);
+        r.push(3.0);
+        assert!(r.is_warm());
+        r.push(10.0); // evicts 1.0
+        assert!((r.mean().unwrap() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rolling_mean_evicts_in_order() {
+        let mut r = RollingMean::new(2);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            r.push(x);
+        }
+        assert!((r.mean().unwrap() - 3.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,223 @@
+//! Randomized property tests (proptest is unavailable offline; these use
+//! the in-tree PRNG with fixed seeds — failures print the seed so cases
+//! are reproducible).
+
+use afarepart::faults::{FaultScenario, RateVectors};
+use afarepart::nsga2::{dominates, fast_non_dominated_sort, Nsga2, Nsga2Config, Problem};
+use afarepart::partition::Mapping;
+use afarepart::util::bits;
+use afarepart::util::json;
+use afarepart::util::prng::Rng;
+
+const TRIALS: usize = 50;
+
+/// Non-dominated sorting invariants on random objective sets.
+#[test]
+fn prop_front0_is_mutually_non_dominated() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(seed);
+        let n = rng.range(2, 40);
+        let m = rng.range(2, 4);
+        let objs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..m).map(|_| (rng.below(6)) as f64).collect()).collect();
+        let refs: Vec<&[f64]> = objs.iter().map(|o| o.as_slice()).collect();
+        let fronts = fast_non_dominated_sort(&refs);
+        // every point appears exactly once
+        let total: usize = fronts.iter().map(|f| f.len()).sum();
+        assert_eq!(total, n, "seed {seed}");
+        // front 0: no member dominates another
+        for &a in &fronts[0] {
+            for &b in &fronts[0] {
+                assert!(!dominates(&objs[a], &objs[b]), "seed {seed}: {a} dominates {b}");
+            }
+        }
+        // every member of front k>0 is dominated by someone in front k-1
+        for k in 1..fronts.len() {
+            for &q in &fronts[k] {
+                assert!(
+                    fronts[k - 1].iter().any(|&p| dominates(&objs[p], &objs[q])),
+                    "seed {seed}: front {k} member {q} not dominated by front {}",
+                    k - 1
+                );
+            }
+        }
+    }
+}
+
+/// The returned NSGA-II front is internally non-dominated, genomes valid.
+#[test]
+fn prop_nsga2_front_valid() {
+    struct P {
+        len: usize,
+        alpha: usize,
+    }
+    impl Problem for P {
+        fn genome_len(&self) -> usize {
+            self.len
+        }
+        fn alphabet(&self) -> usize {
+            self.alpha
+        }
+        fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+            // two lumpy objectives
+            let a: usize = g.iter().sum();
+            let b: usize = g.iter().enumerate().map(|(i, &x)| (i + 1) * (self.alpha - 1 - x)).sum();
+            vec![a as f64, b as f64]
+        }
+    }
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed + 100);
+        let len = rng.range(3, 12);
+        let alpha = rng.range(2, 4);
+        let mut opt = Nsga2::new(Nsga2Config {
+            pop_size: 16,
+            generations: 8,
+            seed,
+            ..Default::default()
+        });
+        let front = opt.run(&mut P { len, alpha }, |_| {});
+        assert!(!front.is_empty(), "seed {seed}");
+        for ind in &front {
+            assert_eq!(ind.genome.len(), len);
+            assert!(ind.genome.iter().all(|&g| g < alpha), "seed {seed}");
+        }
+        for a in &front {
+            for b in &front {
+                assert!(
+                    !dominates(&a.objectives, &b.objectives),
+                    "seed {seed}: returned front not mutually non-dominated"
+                );
+            }
+        }
+    }
+}
+
+/// Rust bit-flip mirror matches the golden vectors generated from ref.py
+/// (the Pallas/jnp/rust three-way contract).
+#[test]
+fn prop_bitflip_matches_python_golden() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/bitflip_golden.json");
+    let text = std::fs::read_to_string(path).expect("golden vectors present");
+    let v = json::parse(&text).unwrap();
+    let cases = v.as_arr().unwrap();
+    assert!(cases.len() >= 18);
+    for c in cases {
+        let rate = c.get("rate").unwrap().as_f64().unwrap() as f32;
+        let nbits = c.get("bits").unwrap().as_u64().unwrap() as u32;
+        let q: Vec<i32> = c
+            .get("q")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as i32)
+            .collect();
+        let rnd: Vec<u32> = c
+            .get("rnd")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as u32)
+            .collect();
+        let expected: Vec<i32> = c
+            .get("expected")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(
+            bits::bitflip(&q, &rnd, rate, nbits),
+            expected,
+            "rate={rate} bits={nbits}"
+        );
+    }
+}
+
+/// JSON writer/parser round-trip on random documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_value(rng: &mut Rng, depth: usize) -> json::Value {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.chance(0.5)),
+            2 => json::Value::Num((rng.below(2000) as f64 - 1000.0) / 8.0),
+            3 => json::Value::Str(format!("s{}\"\\\n{}", rng.below(100), rng.below(10))),
+            4 => json::Value::Arr((0..rng.below(4)).map(|_| random_value(rng, depth + 1)).collect()),
+            _ => json::Value::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(seed + 500);
+        let v = random_value(&mut rng, 0);
+        let text = json::to_string(&v);
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+/// RateVectors invariants: mapping-driven rates pick exactly the mapped
+/// device's rate; cache keys are permutation-sensitive.
+#[test]
+fn prop_rate_vectors_follow_mapping() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(seed + 900);
+        let l = rng.range(2, 12);
+        let d = rng.range(2, 4);
+        let mapping = Mapping::random(&mut rng, l, d);
+        let dev_w: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        let dev_a: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        let rv = RateVectors::from_mapping(&mapping.0, &dev_w, &dev_a, FaultScenario::InputWeight);
+        for (l_i, &dev) in mapping.0.iter().enumerate() {
+            assert_eq!(rv.w_rates[l_i], dev_w[dev], "seed {seed}");
+            assert_eq!(rv.a_rates[l_i], dev_a[dev], "seed {seed}");
+        }
+        // scenario masks zero the right domain
+        let w_only = RateVectors::from_mapping(&mapping.0, &dev_w, &dev_a, FaultScenario::WeightOnly);
+        assert!(w_only.a_rates.iter().all(|&r| r == 0.0));
+        let a_only = RateVectors::from_mapping(&mapping.0, &dev_w, &dev_a, FaultScenario::InputOnly);
+        assert!(a_only.w_rates.iter().all(|&r| r == 0.0));
+    }
+}
+
+/// Expected element-flip fraction formula matches a Monte-Carlo estimate
+/// of the actual bit-flip implementation.
+#[test]
+fn prop_flip_fraction_formula_matches_simulation() {
+    let mut rng = Rng::new(4242);
+    for &rate in &[0.05f32, 0.2, 0.5] {
+        for bits_n in 1..=4u32 {
+            let n = 40_000;
+            let q = vec![0i32; n];
+            let rnd: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            let out = bits::bitflip(&q, &rnd, rate, bits_n);
+            let frac = out.iter().filter(|&&x| x != 0).count() as f64 / n as f64;
+            let expect = bits::expected_element_flip_fraction(rate, bits_n);
+            assert!(
+                (frac - expect).abs() < 0.015,
+                "rate={rate} bits={bits_n}: {frac} vs {expect}"
+            );
+        }
+    }
+}
+
+/// Mapping display/boundaries invariants.
+#[test]
+fn prop_mapping_boundaries_bounds() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(seed + 1300);
+        let l = rng.range(1, 16);
+        let d = rng.range(1, 4);
+        let m = Mapping::random(&mut rng, l, d);
+        assert!(m.boundaries() < l.max(1));
+        assert_eq!(m.display().len(), l);
+        let on_devices: usize = (0..d).map(|dev| m.units_on(dev).len()).sum();
+        assert_eq!(on_devices, l, "every unit on exactly one device");
+    }
+}

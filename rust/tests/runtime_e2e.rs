@@ -1,0 +1,166 @@
+//! PJRT end-to-end tests: load every compiled artifact and execute it.
+//! These are the tests that prove the three-layer stack composes:
+//! Pallas kernel (L1) → jax model (L2) → HLO text → rust PJRT (L3).
+//!
+//! Skipped politely when `make artifacts` hasn't run. One shared PJRT
+//! client per test process; tests are combined to amortize compile time.
+
+use std::path::Path;
+
+use afarepart::config::ExperimentConfig;
+use afarepart::coordinator::server::InferenceServer;
+use afarepart::dataset::EvalSet;
+use afarepart::experiment::Experiment;
+use afarepart::faults::{FaultScenario, RateVectors};
+use afarepart::model::Manifest;
+use afarepart::runtime::{AccuracyEvaluator, ArtifactIndex, Runtime};
+
+fn have_artifacts() -> bool {
+    let ok = Path::new("artifacts/index.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    ok
+}
+
+/// Everything about one model in a single test (compile once):
+/// clean accuracy, fault degradation, determinism, per-layer effects.
+fn exercise_model(model: &str, min_clean: f64) {
+    let idx = ArtifactIndex::load(Path::new("artifacts")).unwrap();
+    let manifest = Manifest::load(&idx.manifest_path(model)).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let compiled = rt.load_model(Path::new("artifacts"), manifest).unwrap();
+    let eval = EvalSet::load(&idx.eval_data_path()).unwrap();
+    let acc_eval = AccuracyEvaluator::new(&compiled, &eval, 128).unwrap();
+    let l = compiled.num_units();
+
+    // (1) clean accuracy matches the python-side export measurement
+    let clean = acc_eval.clean_accuracy(&compiled, 0).unwrap();
+    assert!(
+        (clean - compiled.manifest.clean_acc_quant).abs() < 0.08,
+        "{model}: rust clean {clean} vs python {}",
+        compiled.manifest.clean_acc_quant
+    );
+    assert!(clean >= min_clean, "{model}: clean {clean}");
+
+    // (2) clean accuracy is key-independent (rates = 0)
+    let zero = RateVectors::zeros(l);
+    let a = acc_eval.accuracy(&compiled, &zero, 1, 1).unwrap();
+    let b = acc_eval.accuracy(&compiled, &zero, 999, 1).unwrap();
+    assert_eq!(a, b, "{model}: clean accuracy depends on PRNG key");
+
+    // (3) same key → same faulty accuracy; different keys may differ
+    let faulty = RateVectors { w_rates: vec![0.3; l], a_rates: vec![0.3; l] };
+    let f1 = acc_eval.accuracy(&compiled, &faulty, 7, 1).unwrap();
+    let f2 = acc_eval.accuracy(&compiled, &faulty, 7, 1).unwrap();
+    assert_eq!(f1, f2, "{model}: faulty eval not deterministic");
+
+    // (4) heavy combined faults must degrade accuracy well below clean
+    let heavy = acc_eval.accuracy(&compiled, &faulty, 3, 0).unwrap();
+    assert!(
+        heavy < clean - 0.1,
+        "{model}: FR=0.3 input+weight barely degrades ({clean} -> {heavy})"
+    );
+
+    // (5) per-unit rates matter: faulting only the last unit differs from
+    // faulting only the first (both domains)
+    let mut first = RateVectors::zeros(l);
+    first.a_rates[0] = 0.4;
+    let mut last = RateVectors::zeros(l);
+    last.a_rates[l - 1] = 0.4;
+    let acc_first = acc_eval.accuracy(&compiled, &first, 5, 0).unwrap();
+    let acc_last = acc_eval.accuracy(&compiled, &last, 5, 0).unwrap();
+    // they *can* coincide by luck on tiny eval sets, but the big spatial
+    // input vs the 10-class logits input should behave very differently
+    assert!(
+        (acc_first - acc_last).abs() > 1e-9 || acc_first == clean,
+        "{model}: unit-local faults indistinguishable"
+    );
+}
+
+#[test]
+fn alexnet_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    exercise_model("alexnet", 0.9);
+}
+
+#[test]
+fn squeezenet_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    exercise_model("squeezenet", 0.75);
+}
+
+#[test]
+fn resnet18_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    exercise_model("resnet18", 0.9);
+}
+
+/// The experiment harness + threaded inference server compose: spawn the
+/// server, push two batches through it, check predictions arrive.
+#[test]
+fn inference_server_round_trip() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = ExperimentConfig { model: "squeezenet".into(), eval_limit: 64, ..Default::default() };
+    let exp = Experiment::load(&cfg).unwrap();
+    let manifest = Manifest::load(&exp.index.manifest_path("squeezenet")).unwrap();
+    let server =
+        InferenceServer::spawn("artifacts".into(), manifest, exp.img_dims()).unwrap();
+    let b = server.batch;
+    let l = server.num_units;
+
+    let images = exp.eval_set.batch_images(0, b).to_vec();
+    let clean = server
+        .infer_blocking(images.clone(), b, RateVectors::zeros(l), [1, 2])
+        .unwrap();
+    assert_eq!(clean.preds.len(), b);
+    assert!(clean.exec_ms > 0.0);
+
+    // same batch under heavy faults: different predictions expected
+    let heavy = RateVectors { w_rates: vec![0.4; l], a_rates: vec![0.4; l] };
+    let noisy = server.infer_blocking(images, b, heavy, [3, 4]).unwrap();
+    assert_eq!(noisy.preds.len(), b);
+    let diff = clean.preds.iter().zip(&noisy.preds).filter(|(a, b)| a != b).count();
+    assert!(diff > 0, "heavy faults changed no predictions");
+
+    // clean accuracy through the server matches the direct evaluator path
+    let labels = exp.eval_set.batch_labels(0, b);
+    let hits = clean.preds.iter().zip(labels).filter(|(p, &l)| **p as i32 == l).count();
+    assert!(hits as f64 / b as f64 > 0.6);
+}
+
+/// Exact-mode partition evaluation works against the real runtime and
+/// produces device-placement-dependent ΔAcc.
+#[test]
+fn exact_dacc_depends_on_mapping() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = ExperimentConfig {
+        model: "alexnet".into(),
+        fault_rate: 0.3,
+        eval_limit: 64,
+        dacc_batches: 1,
+        ..Default::default()
+    };
+    let exp = Experiment::load(&cfg).unwrap();
+    let mut ev = exp.partition_evaluator(FaultScenario::InputWeight);
+    let n = exp.model.num_units();
+    let all_risky = afarepart::partition::Mapping::all_on(0, n);
+    let all_safe = afarepart::partition::Mapping::all_on(1, n);
+    let d_risky = ev.dacc(&all_risky).unwrap();
+    let d_safe = ev.dacc(&all_safe).unwrap();
+    assert!(
+        d_safe < d_risky,
+        "shielded device should preserve accuracy: risky {d_risky} vs safe {d_safe}"
+    );
+    assert!(d_risky > 0.1, "FR=0.3 on the fault-prone device must hurt");
+}
