@@ -1,0 +1,59 @@
+"""Generate rust/tests/data/bitflip_golden.json from the ref.py oracle.
+
+The golden vectors pin the Algorithm-2 randomness contract across the three
+implementations (Pallas kernel, jnp reference, rust mirror). They are
+deterministic: a fixed numpy seed drives the draws, and the expected
+outputs come straight from ref.flip_mask. Regenerate only when the
+*contract* intentionally changes (see python/tests/test_cross_vectors.py):
+
+    python python/compile/gen_cross_vectors.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+from compile.kernels import ref  # noqa: E402
+
+OUT = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "data", "bitflip_golden.json"
+)
+
+RATES = [0.0, 0.05, 0.1, 0.2, 0.4, 0.6, 1.0]
+BITS = [1, 2, 4]
+N = 64
+
+
+def main() -> None:
+    rng = np.random.RandomState(20250728)
+    cases = []
+    for rate in RATES:
+        for bits in BITS:
+            q = rng.randint(-128, 128, size=N).astype(np.int32)
+            rnd = rng.randint(0, 2**32, size=N, dtype=np.uint64).astype(np.uint32)
+            mask = np.asarray(ref.flip_mask(jnp.asarray(rnd), rate, bits))
+            expected = (q ^ mask).astype(np.int32)
+            cases.append(
+                {
+                    "rate": rate,
+                    "bits": bits,
+                    "q": q.tolist(),
+                    "rnd": rnd.tolist(),
+                    "expected": expected.tolist(),
+                }
+            )
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(cases, f)
+    print(f"wrote {len(cases)} cases to {os.path.normpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,10 +37,11 @@ fn main() -> anyhow::Result<()> {
         for tool in Tool::all() {
             let cell = run_cell(&exp, FaultScenario::WeightOnly, &nsga2, tool)?;
             println!(
-                "  {model:10} {:10} -> map {} acc {}",
+                "  {model:10} {:10} -> map {} acc {} ({} evals)",
                 tool.label(),
                 cell.mapping.display(),
-                pct(cell.acc)
+                pct(cell.acc),
+                cell.evaluations
             );
             accs.push(cell.acc);
         }

@@ -1,23 +1,167 @@
 //! Performance benches (EXPERIMENTS.md §Perf): the L3 hot paths.
 //!
+//! * **Evaluation engine** (artifact-free): offline optimization
+//!   wall-clock and evals/second at 1, 2 and N worker threads with an
+//!   exact-cost-shaped ΔAcc backend, plus the surrogate fast path —
+//!   results land in `BENCH_eval_engine.json` so future PRs can track
+//!   the perf trajectory. Asserts thread-count determinism as it goes.
 //! * PJRT batched execution latency (clean + faulty) per model.
 //! * NSGA-II optimizer throughput on the analytical objectives (no PJRT).
 //! * ΔAcc cache effect: NSGA-II wall time with and without memoization.
-//! * Evaluator scalar costs (latency/energy models, rate-vector build).
+//!
+//! The PJRT sections skip politely when `make artifacts` hasn't run; the
+//! eval-engine section always runs.
 //!
 //! Run: `cargo bench --bench bench_perf`.
 
-use afarepart::bench::suite::bench_budget;
-use afarepart::bench::{bench_header, bench_ms, BenchConfig, BenchReport, Stopwatch};
-use afarepart::coordinator::offline::optimize_partitions;
+use std::time::Duration;
+
+use afarepart::bench::suite::{
+    bench_budget, front_fingerprint, synthetic_manifest, synthetic_sensitivity,
+};
+use afarepart::bench::{
+    bench_header, bench_ms, write_json_result, BenchConfig, BenchReport, Stopwatch,
+};
+use afarepart::coordinator::offline::{optimize_partitions, optimize_partitions_counted};
 use afarepart::experiment::Experiment;
 use afarepart::faults::{FaultScenario, RateVectors};
+use afarepart::hw::Platform;
 use afarepart::nsga2::Nsga2Config;
-use afarepart::partition::{DaccMode, Mapping, PartitionEvaluator};
+use afarepart::partition::{DaccMode, Mapping, PartitionEvaluator, SensitivityTable};
+use afarepart::util::fmt::Table;
+use afarepart::util::json::{arr, num, obj, s, Value};
 use afarepart::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let fast = bench_header("Perf — runtime exec, optimizer throughput, cache effect");
+/// One timed offline optimization at a given engine thread count.
+fn timed_run(
+    manifest_units: usize,
+    table: &SensitivityTable,
+    platform: &Platform,
+    nsga2: &Nsga2Config,
+    dacc_cost: Duration,
+    threads: usize,
+) -> (f64, usize, Vec<(Vec<usize>, Vec<u64>)>, (usize, usize)) {
+    let manifest = synthetic_manifest(manifest_units);
+    let mut ev = PartitionEvaluator::new(
+        &manifest,
+        platform,
+        vec![0.25, 0.04],
+        vec![0.25, 0.04],
+        FaultScenario::InputWeight,
+        0.9,
+        false,
+        DaccMode::SyntheticExact { table, cost: dacc_cost },
+    )
+    .with_parallelism(threads);
+    let sw = Stopwatch::start();
+    let (front, evals) = optimize_partitions_counted(&mut ev, nsga2, true, vec![], |_| {});
+    let wall_ms = sw.ms();
+    let (h, m, _) = ev.cache_stats();
+    (wall_ms, evals, front_fingerprint(&front), (h, m))
+}
+
+fn bench_eval_engine(fast: bool) {
+    println!("\n-- evaluation engine (synthetic exact backend, no artifacts needed) --");
+    let l = 10;
+    let table = synthetic_sensitivity(l);
+    let platform = Platform::default_two_device();
+    let nsga2 = if fast {
+        Nsga2Config { pop_size: 12, generations: 4, ..Default::default() }
+    } else {
+        Nsga2Config { pop_size: 24, generations: 8, ..Default::default() }
+    };
+    // Emulated PJRT cost per unique ΔAcc evaluation: a blocking ~1.5 ms
+    // call, the measured small-model batch execution order of magnitude.
+    let dacc_cost = Duration::from_micros(1500);
+
+    let thread_counts = [1usize, 2, 4];
+    let mut rows = Vec::new();
+    let mut reference: Option<Vec<(Vec<usize>, Vec<u64>)>> = None;
+    let mut wall_by_threads = Vec::new();
+    for &t in &thread_counts {
+        let (wall_ms, evals, key, (hits, misses)) =
+            timed_run(l, &table, &platform, &nsga2, dacc_cost, t);
+        if reference.is_none() {
+            reference = Some(key);
+        } else {
+            assert_eq!(
+                reference.as_ref().unwrap(),
+                &key,
+                "DETERMINISM VIOLATION: front at {t} threads differs from 1 thread"
+            );
+        }
+        wall_by_threads.push((t, wall_ms));
+        rows.push((t, wall_ms, evals, hits, misses));
+    }
+    let wall_1t = wall_by_threads[0].1;
+
+    let mut t = Table::new(&["threads", "wall ms", "evals", "evals/s", "cache h/m", "speedup"]);
+    let mut thread_objs = Vec::new();
+    for (threads, wall_ms, evals, hits, misses) in &rows {
+        let evals_per_s = *evals as f64 / (wall_ms / 1e3);
+        let speedup = wall_1t / wall_ms;
+        t.row(vec![
+            threads.to_string(),
+            format!("{wall_ms:.1}"),
+            evals.to_string(),
+            format!("{evals_per_s:.0}"),
+            format!("{hits}/{misses}"),
+            format!("{speedup:.2}x"),
+        ]);
+        thread_objs.push(obj(vec![
+            ("threads", num(*threads as f64)),
+            ("wall_ms", num(*wall_ms)),
+            ("evals", num(*evals as f64)),
+            ("evals_per_s", num(evals_per_s)),
+            ("cache_hits", num(*hits as f64)),
+            ("cache_misses", num(*misses as f64)),
+            ("speedup_vs_1t", num(speedup)),
+        ]));
+    }
+    print!("{}", t.render());
+    println!("fronts identical across all thread counts (bitwise) ✓");
+
+    // surrogate fast path: misses are sub-microsecond, the engine must
+    // stay serial and the whole optimization is pure optimizer overhead
+    let manifest = synthetic_manifest(l);
+    let mut sur_ev = PartitionEvaluator::new(
+        &manifest,
+        &platform,
+        vec![0.25, 0.04],
+        vec![0.25, 0.04],
+        FaultScenario::InputWeight,
+        0.9,
+        false,
+        DaccMode::Surrogate(&table),
+    )
+    .with_parallelism(4);
+    let sw = Stopwatch::start();
+    let (sur_front, _) = optimize_partitions_counted(&mut sur_ev, &nsga2, true, vec![], |_| {});
+    let surrogate_wall_ms = sw.ms();
+    println!("surrogate mode (4 threads configured, serial fast path): {surrogate_wall_ms:.1} ms");
+    assert_eq!(
+        reference.as_ref().unwrap(),
+        &front_fingerprint(&sur_front),
+        "synthetic-exact and surrogate backends disagree (same table => same front)"
+    );
+
+    let speedup_4t = wall_1t / wall_by_threads.last().unwrap().1;
+    println!("speedup at 4 threads vs 1: {speedup_4t:.2}x");
+    let doc: Value = obj(vec![
+        ("bench", s("eval_engine")),
+        ("model", s(&format!("synthetic-L{l}"))),
+        ("pop_size", num(nsga2.pop_size as f64)),
+        ("generations", num(nsga2.generations as f64)),
+        ("dacc_cost_us", num(dacc_cost.as_micros() as f64)),
+        ("threads", arr(thread_objs)),
+        ("speedup_4t_vs_1t", num(speedup_4t)),
+        ("surrogate_wall_ms", num(surrogate_wall_ms)),
+        ("deterministic_across_threads", Value::Bool(true)),
+    ]);
+    write_json_result("BENCH_eval_engine.json", &doc);
+}
+
+fn bench_pjrt_sections(fast: bool) -> anyhow::Result<()> {
     let (mut cfg, _) = bench_budget(fast);
     let mut report = BenchReport::new();
     let bc = BenchConfig { warmup_iters: 2, sample_iters: if fast { 5 } else { 10 } };
@@ -93,22 +237,36 @@ fn main() -> anyhow::Result<()> {
         }),
     );
 
-    // cache effect on a real exact-mode optimization (small budget)
-    let sw = Stopwatch::start();
-    let mut ev = exp.partition_evaluator(FaultScenario::InputWeight);
+    // cache effect + engine threads on a real exact-mode optimization
     let small = Nsga2Config { pop_size: 12, generations: 4, ..Default::default() };
-    optimize_partitions(&mut ev, &small, true, vec![], |_| {});
-    let (hits, misses, rate) = ev.cache_stats();
-    println!(
-        "exact-mode NSGA-II 12x4 [resnet18]: {:.1}s wall, cache {hits} hits / {misses} misses ({:.0}% hit rate)",
-        sw.s(),
-        rate * 100.0
-    );
-    println!(
-        "  -> without memoization this run would cost ~{:.0}x more PJRT executions",
-        (hits + misses) as f64 / misses.max(1) as f64
-    );
+    for threads in [1usize, 4] {
+        let sw = Stopwatch::start();
+        let mut ev = exp.partition_evaluator(FaultScenario::InputWeight).with_parallelism(threads);
+        optimize_partitions(&mut ev, &small, true, vec![], |_| {});
+        let (hits, misses, rate) = ev.cache_stats();
+        println!(
+            "exact-mode NSGA-II 12x4 [resnet18] @{threads}T: {:.1}s wall, cache {hits} hits / {misses} misses ({:.0}% hit rate)",
+            sw.s(),
+            rate * 100.0
+        );
+        println!(
+            "  -> without memoization this run would cost ~{:.0}x more PJRT executions",
+            (hits + misses) as f64 / misses.max(1) as f64
+        );
+    }
 
     println!("\n{}", report.render());
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = bench_header("Perf — eval engine, runtime exec, optimizer throughput, cache effect");
+
+    bench_eval_engine(fast);
+
+    if let Err(e) = bench_pjrt_sections(fast) {
+        println!("\nskipping PJRT-backed sections: {e:#}");
+        println!("(run `make artifacts` with a real xla backend to enable them)");
+    }
     Ok(())
 }

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::offline::optimize_partitions;
+use crate::coordinator::offline::optimize_partitions_counted;
 use crate::nsga2::{Individual, Nsga2Config};
 use crate::partition::{Mapping, PartitionEvaluator};
 
@@ -43,13 +43,21 @@ impl CnnParted {
 
     /// Run the CNNParted flow; link costs are enabled for the duration of
     /// the optimization (CNNParted models them; AFarePart doesn't — §VI-E).
+    /// Two-objective batches skip the ΔAcc engine entirely, so the
+    /// baseline rides the same batched NSGA-II loop at zero fault cost.
     pub fn partition(&self, ev: &mut PartitionEvaluator) -> Result<Mapping> {
+        Ok(self.partition_counted(ev)?.0)
+    }
+
+    /// [`CnnParted::partition`] plus the submitted evaluation count
+    /// (effort-parity reporting — see `bench::suite::run_cell`).
+    pub fn partition_counted(&self, ev: &mut PartitionEvaluator) -> Result<(Mapping, usize)> {
         let saved_link = ev.include_link_cost;
         ev.include_link_cost = true;
-        let front = optimize_partitions(ev, &self.nsga2, false, vec![], |_| {});
+        let (front, evals) = optimize_partitions_counted(ev, &self.nsga2, false, vec![], |_| {});
         ev.include_link_cost = saved_link;
         let chosen = Self::select(&front).expect("empty CNNParted front");
-        Ok(Mapping(chosen.genome.clone()))
+        Ok((Mapping(chosen.genome.clone()), evals))
     }
 }
 

@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::offline::optimize_partitions;
+use crate::coordinator::offline::optimize_partitions_counted;
 use crate::nsga2::{Individual, Nsga2Config};
 use crate::partition::{select_knee, Mapping, PartitionEvaluator};
 
@@ -29,12 +29,18 @@ impl FaultUnaware {
     }
 
     pub fn partition(&self, ev: &mut PartitionEvaluator) -> Result<Mapping> {
+        Ok(self.partition_counted(ev)?.0)
+    }
+
+    /// [`FaultUnaware::partition`] plus the submitted evaluation count
+    /// (effort-parity reporting — see `bench::suite::run_cell`).
+    pub fn partition_counted(&self, ev: &mut PartitionEvaluator) -> Result<(Mapping, usize)> {
         let saved_link = ev.include_link_cost;
         ev.include_link_cost = false;
-        let front = optimize_partitions(ev, &self.nsga2, false, vec![], |_| {});
+        let (front, evals) = optimize_partitions_counted(ev, &self.nsga2, false, vec![], |_| {});
         ev.include_link_cost = saved_link;
         let chosen = Self::select(&front).expect("empty fault-unaware front");
-        Ok(Mapping(chosen.genome.clone()))
+        Ok((Mapping(chosen.genome.clone()), evals))
     }
 }
 

@@ -5,25 +5,33 @@ use crate::partition::{Mapping, PartitionEvaluator};
 
 /// Assign each unit to the device minimizing
 /// `alpha * latency + (1-alpha) * energy` for that unit alone.
+///
+/// Without link costs (the common case) each candidate device for unit
+/// `l` is scored via the evaluator's O(changed-genes) incremental update
+/// ([`PartitionEvaluator::lat_en_delta`]) against a shared base mapping,
+/// making the sweep O(L·D) instead of the former O(L²·D) full
+/// re-evaluations; additivity of the cost model makes the delta exact.
+/// With link costs enabled the incremental path is invalid (a gene change
+/// perturbs boundary terms), so the sweep falls back to full evaluations
+/// of single-gene variants — the pre-engine behavior.
 pub fn greedy_latency_mapping(ev: &PartitionEvaluator, alpha: f64) -> Mapping {
     let n = ev.num_units();
     let d = ev.num_devices();
+    let base = Mapping::all_on(0, n);
+    let score = |(lat, en): (f64, f64)| alpha * lat + (1.0 - alpha) * en;
+    let base_cost = ev.lat_en(&base);
     let mut genes = Vec::with_capacity(n);
     for l in 0..n {
         let mut best = 0;
         let mut best_cost = f64::INFINITY;
         for dev in 0..d {
-            // per-unit single-device cost: evaluate unit in isolation by
-            // constructing a mapping that only differs at l — additivity of
-            // the cost model makes the delta exact.
-            let mut m = Mapping::all_on(0, n);
-            m.0[l] = dev;
-            let base = {
-                let mut m0 = Mapping::all_on(0, n);
-                m0.0[l] = 0;
-                alpha * ev.latency_ms(&m0) + (1.0 - alpha) * ev.energy_mj(&m0)
+            let cost = if ev.include_link_cost {
+                let mut m = base.clone();
+                m.0[l] = dev;
+                score(ev.lat_en(&m))
+            } else {
+                score(ev.lat_en_delta(&base, base_cost, &[(l, dev)]))
             };
-            let cost = alpha * ev.latency_ms(&m) + (1.0 - alpha) * ev.energy_mj(&m) - base;
             if cost < best_cost {
                 best_cost = cost;
                 best = dev;

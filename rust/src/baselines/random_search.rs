@@ -10,6 +10,13 @@ use crate::util::prng::Rng;
 /// Sample `budget` random mappings; return the one minimizing
 /// `w_lat*lat + w_en*energy + w_dacc*dacc` (a scalarization — random
 /// search has no Pareto machinery).
+///
+/// All samples are drawn up front and scored through the batched
+/// evaluation engine (`objectives_batch`): duplicate and rate-equivalent
+/// samples — common at small D^L — are deduplicated against the ΔAcc
+/// cache, and residual exact evaluations fan out across the evaluator's
+/// worker threads. Sampling order (and thus the PRNG stream and the
+/// selected mapping) is identical to the former one-at-a-time loop.
 pub fn random_search_mapping(
     ev: &mut PartitionEvaluator,
     budget: usize,
@@ -18,18 +25,18 @@ pub fn random_search_mapping(
 ) -> Result<Mapping> {
     let mut rng = Rng::new(seed);
     let (n, d) = (ev.num_units(), ev.num_devices());
-    let mut best: Option<(f64, Mapping)> = None;
-    for _ in 0..budget {
-        let m = Mapping::random(&mut rng, n, d);
-        let lat = ev.latency_ms(&m);
-        let en = ev.energy_mj(&m);
-        let da = ev.dacc(&m)?;
-        let score = weights.0 * lat + weights.1 * en + weights.2 * da;
-        if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
-            best = Some((score, m));
+    let mappings: Vec<Mapping> =
+        (0..budget).map(|_| Mapping::random(&mut rng, n, d)).collect();
+    let objectives = ev.objectives_batch(&mappings, true)?;
+    let mut best: Option<(f64, usize)> = None;
+    for (i, objs) in objectives.iter().enumerate() {
+        let score = weights.0 * objs[0] + weights.1 * objs[1] + weights.2 * objs[2];
+        if best.map(|(s, _)| score < s).unwrap_or(true) {
+            best = Some((score, i));
         }
     }
-    Ok(best.expect("budget > 0").1)
+    let (_, i) = best.expect("budget > 0");
+    Ok(mappings.into_iter().nth(i).expect("index in range"))
 }
 
 #[cfg(test)]

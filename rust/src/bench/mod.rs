@@ -92,6 +92,18 @@ pub fn bench_header(name: &str) -> bool {
     fast
 }
 
+/// Write a machine-readable bench result next to the repo root (e.g.
+/// `BENCH_eval_engine.json`) so later PRs can track perf trajectories.
+/// Prints the destination; errors are reported, not fatal — a read-only
+/// checkout shouldn't kill a bench run.
+pub fn write_json_result(path: &str, value: &crate::util::json::Value) {
+    let text = crate::util::json::to_string(value);
+    match std::fs::write(path, &text) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,5 +1,7 @@
 //! Shared experiment cells for the paper-reproduction benches: run one
-//! (model, strategy, scenario, FR) cell and report the Table-II metrics.
+//! (model, strategy, scenario, FR) cell and report the Table-II metrics —
+//! plus synthetic (artifact-free) fixtures for the eval-engine perf bench
+//! and the determinism/concurrency test suite.
 
 use anyhow::Result;
 
@@ -8,8 +10,9 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::OfflineRunner;
 use crate::experiment::Experiment;
 use crate::faults::FaultScenario;
-use crate::nsga2::Nsga2Config;
-use crate::partition::Mapping;
+use crate::model::{Manifest, UnitCost};
+use crate::nsga2::{Individual, Nsga2Config};
+use crate::partition::{Mapping, SensitivityTable};
 
 /// The three strategies of Fig. 3 / Fig. 4 / Table II.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,6 +46,9 @@ pub struct CellResult {
     pub dacc: f64,
     pub latency_ms: f64,
     pub energy_mj: f64,
+    /// Fitness evaluations the strategy submitted to find the mapping
+    /// (effort parity across tools; 0 when scoring a precomputed mapping).
+    pub evaluations: usize,
 }
 
 /// Run one strategy under one scenario and score its deployed mapping.
@@ -55,14 +61,14 @@ pub fn run_cell(
     nsga2: &Nsga2Config,
     tool: Tool,
 ) -> Result<CellResult> {
-    let mapping = match tool {
+    let (mapping, evaluations) = match tool {
         Tool::CnnParted => {
             let mut ev = exp.partition_evaluator(scenario);
-            CnnParted::new(nsga2.clone()).partition(&mut ev)?
+            CnnParted::new(nsga2.clone()).partition_counted(&mut ev)?
         }
         Tool::FaultUnaware => {
             let mut ev = exp.partition_evaluator(scenario);
-            FaultUnaware::new(nsga2.clone()).partition(&mut ev)?
+            FaultUnaware::new(nsga2.clone()).partition_counted(&mut ev)?
         }
         Tool::AFarePart => {
             let mut ev = exp.partition_evaluator(scenario);
@@ -76,10 +82,13 @@ pub fn run_cell(
                 lat_budget: f64::INFINITY,
                 energy_budget: f64::INFINITY,
             };
-            runner.run(&mut ev, vec![], |_| {})?.deployed
+            let out = runner.run(&mut ev, vec![], |_| {})?;
+            (out.deployed, out.evaluations)
         }
     };
-    score_mapping(exp, scenario, tool, mapping)
+    let mut cell = score_mapping(exp, scenario, tool, mapping)?;
+    cell.evaluations = evaluations;
+    Ok(cell)
 }
 
 /// Score an existing mapping under a scenario (shared fault draws).
@@ -98,7 +107,68 @@ pub fn score_mapping(
         latency_ms: scorer.latency_ms(&mapping),
         energy_mj: scorer.energy_mj(&mapping),
         mapping,
+        evaluations: 0,
     })
+}
+
+/// Synthetic manifest for artifact-free benching and testing: `n` units
+/// with varied MAC/weight mixes so mappings have real cost trade-offs.
+pub fn synthetic_manifest(n: usize) -> Manifest {
+    let units = (0..n)
+        .map(|i| UnitCost {
+            name: format!("u{i}"),
+            kind: if i % 3 == 2 { "dense".into() } else { "conv".into() },
+            macs: 800_000 * (i as u64 % 5 + 1),
+            w_params: 15_000 * (i as u64 % 3 + 1),
+            w_bytes: 15_000 * (i as u64 % 3 + 1),
+            in_bytes: 4_096,
+            out_bytes: 4_096,
+            out_shape: vec![1],
+        })
+        .collect();
+    Manifest {
+        model: format!("synthetic-L{n}"),
+        num_units: n,
+        num_classes: 10,
+        precision: 8,
+        faulty_bits: 4,
+        batch: 8,
+        hlo_file: "x".into(),
+        weights_file: "x".into(),
+        clean_acc_f32: 0.95,
+        clean_acc_quant: 0.9,
+        weight_scale: 0.01,
+        units,
+        weight_tensors: vec![],
+        act_scales: vec![0.01; n],
+    }
+}
+
+/// Synthetic layer-sensitivity table matching [`synthetic_manifest`]:
+/// early units are markedly more fault-sensitive, so robust mappings are
+/// non-trivial.
+pub fn synthetic_sensitivity(n: usize) -> SensitivityTable {
+    SensitivityTable {
+        rate_grid: vec![0.1, 0.2, 0.4],
+        w_drop: (0..n)
+            .map(|i| {
+                let s = 0.3 / (1.0 + i as f64);
+                vec![0.5 * s, s, 1.5 * s]
+            })
+            .collect(),
+        a_drop: (0..n).map(|i| vec![0.02 / (1.0 + i as f64); 3]).collect(),
+        clean_acc: 0.9,
+    }
+}
+
+/// Bitwise fingerprint of a Pareto front (genomes + exact objective
+/// bits) — the comparison key of every determinism check (parallel vs
+/// serial engine paths, thread-count sweeps).
+pub fn front_fingerprint(front: &[Individual]) -> Vec<(Vec<usize>, Vec<u64>)> {
+    front
+        .iter()
+        .map(|i| (i.genome.clone(), i.objectives.iter().map(|o| o.to_bits()).collect()))
+        .collect()
 }
 
 /// Standard bench budget: full-fidelity by default, shrunk under
@@ -125,6 +195,15 @@ mod tests {
     fn tool_labels() {
         assert_eq!(Tool::all().len(), 3);
         assert_eq!(Tool::AFarePart.label(), "AFarePart");
+    }
+
+    #[test]
+    fn synthetic_fixtures_are_consistent() {
+        let m = synthetic_manifest(10);
+        let t = synthetic_sensitivity(10);
+        assert_eq!(m.units.len(), 10);
+        assert_eq!(t.w_drop.len(), 10);
+        assert_eq!(t.most_sensitive_unit(), 0);
     }
 
     #[test]

@@ -31,6 +31,9 @@ pub struct ExperimentConfig {
     pub dacc_batches: usize,
     /// Use the sensitivity surrogate instead of exact injection.
     pub surrogate: bool,
+    /// Worker threads for batched ΔAcc evaluation (0 = auto-detect from
+    /// the machine; 1 = serial). Results are identical at any setting.
+    pub eval_threads: usize,
     /// Include link latency/energy in the objectives (CNNParted mode).
     pub link_cost: bool,
     /// Budget factors for P* selection.
@@ -52,6 +55,7 @@ impl Default for ExperimentConfig {
             eval_limit: 256,
             dacc_batches: 0,
             surrogate: false,
+            eval_threads: 0,
             link_cost: false,
             lat_budget: 2.0,
             energy_budget: 3.0,
@@ -109,6 +113,9 @@ impl ExperimentConfig {
         if let Some(b) = v.get("surrogate").and_then(Value::as_bool) {
             self.surrogate = b;
         }
+        if let Some(x) = v.get("eval_threads").and_then(Value::as_usize) {
+            self.eval_threads = x;
+        }
         if let Some(b) = v.get("link_cost").and_then(Value::as_bool) {
             self.link_cost = b;
         }
@@ -138,6 +145,9 @@ impl ExperimentConfig {
         if let Some(v) = getenv("AFARE_EVAL_LIMIT").and_then(|v| v.parse().ok()) {
             self.eval_limit = v;
         }
+        if let Some(v) = getenv("AFARE_EVAL_THREADS").and_then(|v| v.parse().ok()) {
+            self.eval_threads = v;
+        }
     }
 
     /// Apply CLI overrides.
@@ -162,6 +172,7 @@ impl ExperimentConfig {
         self.theta = args.get_f64("theta", self.theta);
         self.eval_limit = args.get_usize("eval-limit", self.eval_limit);
         self.dacc_batches = args.get_usize("dacc-batches", self.dacc_batches);
+        self.eval_threads = args.get_usize("eval-threads", self.eval_threads);
         if args.has_flag("surrogate") {
             self.surrogate = true;
         }
@@ -184,7 +195,8 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         let v = json::parse(
             r#"{"model": "resnet18", "fault_rate": 0.3, "scenario": "weight-only",
-                "pop_size": 24, "generations": 12, "surrogate": true, "seed": 99}"#,
+                "pop_size": 24, "generations": 12, "surrogate": true, "seed": 99,
+                "eval_threads": 4}"#,
         )
         .unwrap();
         cfg.apply_json(&v).unwrap();
@@ -194,6 +206,7 @@ mod tests {
         assert_eq!(cfg.nsga2.pop_size, 24);
         assert!(cfg.surrogate);
         assert_eq!(cfg.nsga2.seed, 99);
+        assert_eq!(cfg.eval_threads, 4);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Coordinator metrics: counters + latency samples exported by both phases.
 
+use crate::partition::CacheStats;
 use crate::util::stats::{summarize, Summary};
 
 /// Accumulated metrics of a serving run.
@@ -9,6 +10,10 @@ pub struct Metrics {
     pub samples_served: usize,
     pub reconfigurations: usize,
     pub reopt_evaluations: usize,
+    /// ΔAcc-cache epochs closed by environment rollovers, with their
+    /// summed traffic (the lifetime view the per-epoch counters lose).
+    pub cache_epochs_closed: usize,
+    pub closed_epoch_cache: CacheStats,
     exec_ms: Vec<f64>,
     reopt_ms: Vec<f64>,
 }
@@ -24,6 +29,14 @@ impl Metrics {
         self.reconfigurations += 1;
         self.reopt_evaluations += evals;
         self.reopt_ms.push(wall_ms);
+    }
+
+    /// Fold a closed cache epoch (see `PartitionEvaluator::set_env_rates`)
+    /// into the run totals.
+    pub fn record_cache_epoch(&mut self, epoch: CacheStats) {
+        self.cache_epochs_closed += 1;
+        self.closed_epoch_cache.hits += epoch.hits;
+        self.closed_epoch_cache.misses += epoch.misses;
     }
 
     pub fn exec_summary(&self) -> Option<Summary> {
@@ -62,9 +75,13 @@ mod tests {
         m.record_batch(64, 5.0);
         m.record_batch(32, 7.0);
         m.record_reconfiguration(120, 300.0);
+        m.record_cache_epoch(CacheStats { hits: 30, misses: 10 });
+        m.record_cache_epoch(CacheStats { hits: 5, misses: 5 });
         assert_eq!(m.batches_served, 2);
         assert_eq!(m.samples_served, 96);
         assert_eq!(m.reconfigurations, 1);
+        assert_eq!(m.cache_epochs_closed, 2);
+        assert_eq!(m.closed_epoch_cache, CacheStats { hits: 35, misses: 15 });
         let s = m.exec_summary().unwrap();
         assert_eq!(s.n, 2);
         assert!((m.throughput(2.0) - 48.0).abs() < 1e-12);

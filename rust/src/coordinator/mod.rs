@@ -15,5 +15,7 @@ pub mod offline;
 pub mod online;
 pub mod server;
 
-pub use offline::{optimize_partitions, OfflineOutcome, OfflineRunner};
+pub use offline::{
+    optimize_partitions, optimize_partitions_counted, OfflineOutcome, OfflineRunner,
+};
 pub use online::{OnlineConfig, OnlineOutcome, OnlineRunner, TimelinePoint};

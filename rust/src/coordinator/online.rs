@@ -13,12 +13,14 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::metrics::Metrics;
-use super::offline::optimize_partitions;
+use super::offline::optimize_partitions_counted;
 use super::server::InferenceServer;
 use crate::dataset::EvalSet;
 use crate::faults::FaultEnv;
 use crate::nsga2::Nsga2Config;
-use crate::partition::{select_min_dacc_within_budget, Mapping, PartitionEvaluator};
+use crate::partition::{
+    select_min_dacc_within_budget, CacheStats, Mapping, PartitionEvaluator,
+};
 use crate::util::prng::Rng;
 use crate::util::stats::RollingMean;
 
@@ -84,6 +86,10 @@ pub struct OnlineOutcome {
     pub timeline: Vec<TimelinePoint>,
     pub metrics: Metrics,
     pub final_mapping: Mapping,
+    /// Cumulative ΔAcc-cache statistics across every environment epoch of
+    /// the run (each reconfiguration rolls the cache to a new epoch; the
+    /// lifetime counters keep the history the per-epoch view drops).
+    pub cache_lifetime: CacheStats,
 }
 
 /// The online coordinator.
@@ -153,9 +159,11 @@ impl OnlineRunner<'_, '_> {
             } else if monitor.is_warm() && self.clean_acc - rolling > self.cfg.theta {
                 let t0 = Instant::now();
                 // RunNSGAIIWithCurrentStats: current environment rates,
-                // seeded with the incumbent mapping.
-                self.evaluator.set_env_rates(dev_w.clone(), dev_a.clone());
-                let front = optimize_partitions(
+                // seeded with the incumbent mapping. The rollover keeps
+                // cumulative cache telemetry even though the per-epoch
+                // view (correctly) starts from zero under the new rates.
+                let rollover = self.evaluator.set_env_rates(dev_w.clone(), dev_a.clone());
+                let (front, reopt_evals) = optimize_partitions_counted(
                     self.evaluator,
                     &self.cfg.reopt,
                     true,
@@ -172,9 +180,10 @@ impl OnlineRunner<'_, '_> {
                     mapping = new_mapping;
                 }
                 metrics.record_reconfiguration(
-                    front.len(),
+                    reopt_evals,
                     t0.elapsed().as_secs_f64() * 1e3,
                 );
+                metrics.record_cache_epoch(rollover.ended_epoch);
                 // reset the monitor so stale pre-reconfig samples don't
                 // immediately re-trigger
                 monitor = RollingMean::new(self.cfg.window);
@@ -194,6 +203,11 @@ impl OnlineRunner<'_, '_> {
             timeline.push(point);
         }
 
-        Ok(OnlineOutcome { timeline, metrics, final_mapping: mapping })
+        Ok(OnlineOutcome {
+            timeline,
+            metrics,
+            final_mapping: mapping,
+            cache_lifetime: self.evaluator.cache_lifetime_stats(),
+        })
     }
 }

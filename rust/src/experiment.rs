@@ -9,7 +9,7 @@ use crate::dataset::EvalSet;
 use crate::faults::{DeviceFaultProfile, FaultEnv, FaultScenario};
 use crate::hw::Platform;
 use crate::model::Manifest;
-use crate::partition::{DaccMode, PartitionEvaluator, SensitivityTable};
+use crate::partition::{DaccMode, EngineConfig, PartitionEvaluator, SensitivityTable};
 use crate::runtime::{AccuracyEvaluator, ArtifactIndex, CompiledModel, Runtime};
 
 /// A fully-loaded experiment: compiled model, eval data, platform.
@@ -80,9 +80,21 @@ impl Experiment {
         Ok(self.sensitivity.as_ref().unwrap())
     }
 
+    /// Resolved evaluation-engine worker count: `eval_threads` from the
+    /// config, with 0 meaning auto-detect ([`EngineConfig::auto`]).
+    pub fn eval_threads(&self) -> usize {
+        if self.cfg.eval_threads == 0 {
+            EngineConfig::auto().threads
+        } else {
+            self.cfg.eval_threads
+        }
+    }
+
     /// Build a partition evaluator for `scenario` under the *current*
     /// (t = 0) environment rates. Uses surrogate mode if configured (and
-    /// measured), exact in-graph fault injection otherwise.
+    /// measured), exact in-graph fault injection otherwise. The batched
+    /// evaluation engine is enabled with the configured thread budget —
+    /// results are identical at any thread count.
     pub fn partition_evaluator(&self, scenario: FaultScenario) -> PartitionEvaluator<'_> {
         let env = self.fault_env();
         let dacc = match (&self.cfg.surrogate, &self.sensitivity) {
@@ -104,6 +116,7 @@ impl Experiment {
             self.cfg.link_cost,
             dacc,
         )
+        .with_parallelism(self.eval_threads())
     }
 
     /// Image dims of the eval set (h, w, c).

@@ -64,6 +64,7 @@ fn print_help() {
            --scenario <w|a|iw>      weight-only / input-only / input+weight\n\
            --pop <n> --gens <n>     NSGA-II budget (default 60/60)\n\
            --eval-limit <n>         eval samples for exact dAcc (default 256)\n\
+           --eval-threads <n>       ΔAcc eval engine workers (0 = auto; same results at any n)\n\
            --theta <f>              online accuracy-drop threshold (default 0.05)\n\
            --ticks <n>              online serving ticks (default 120)\n\
            --surrogate              use the layer-sensitivity surrogate\n\
@@ -106,13 +107,14 @@ fn cmd_offline(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         exp.measure_sensitivity(&[0.05, 0.1, 0.2, 0.4])?;
     }
     println!(
-        "offline: model={} FR={} scenario={} pop={} gens={} mode={}",
+        "offline: model={} FR={} scenario={} pop={} gens={} mode={} eval-threads={}",
         cfg.model,
         cfg.fault_rate,
         cfg.scenario.label(),
         cfg.nsga2.pop_size,
         cfg.nsga2.generations,
-        if cfg.surrogate { "surrogate" } else { "exact" }
+        if cfg.surrogate { "surrogate" } else { "exact" },
+        exp.eval_threads(),
     );
     let mut ev = exp.partition_evaluator(cfg.scenario);
     let runner = OfflineRunner {
@@ -151,7 +153,11 @@ fn cmd_offline(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         pct(out.deployed_objectives[2]),
     );
     let (h, m, r) = out.cache;
-    println!("dAcc cache: {h} hits / {m} misses (hit rate {:.1}%)", r * 100.0);
+    println!(
+        "dAcc cache: {h} hits / {m} misses (hit rate {:.1}%) over {} evaluations",
+        r * 100.0,
+        out.evaluations
+    );
     Ok(())
 }
 
@@ -290,6 +296,12 @@ fn cmd_online(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         out.metrics.batches_served,
         out.metrics.reconfigurations,
         out.final_mapping.display()
+    );
+    println!(
+        "dAcc cache lifetime: {} hits / {} misses across {} environment epoch(s)",
+        out.cache_lifetime.hits,
+        out.cache_lifetime.misses,
+        out.metrics.cache_epochs_closed + 1,
     );
     if let Some(s) = out.metrics.exec_summary() {
         println!("PJRT exec: mean {:.2} ms  p95 {:.2} ms", s.mean, s.p95);

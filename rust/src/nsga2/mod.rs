@@ -6,6 +6,23 @@
 //! Components: fast non-dominated sorting, crowding distance, binary
 //! tournament on (rank, crowding), uniform + two-point crossover,
 //! per-gene reset mutation, elitist (μ+λ) environmental selection.
+//!
+//! # Evaluation engine
+//!
+//! Fitness evaluation is *batched*: the optimizer collects each
+//! generation's offspring genomes first (variation consumes the PRNG in
+//! exactly the legacy order) and then hands the whole generation to
+//! [`Problem::evaluate_batch`] in one call. The default implementation
+//! falls back to a serial [`Problem::evaluate`] loop, so simple problems
+//! are unaffected; expensive problems (fault-injected accuracy — see
+//! `partition::PartitionEvaluator::objectives_batch`) override it to
+//! deduplicate equivalent genomes and fan residual work across threads.
+//!
+//! Determinism contract: the optimizer's PRNG is only consumed by
+//! variation and never crosses into evaluation, and batch results are
+//! consumed in submission order — so for a fixed seed the population
+//! trajectory (and final front) is bitwise identical whether a problem
+//! evaluates serially or in parallel.
 
 mod crowding;
 mod hypervolume;
@@ -56,6 +73,15 @@ pub trait Problem {
     fn alphabet(&self) -> usize;
     /// Evaluate a genome to an objective vector (all minimized).
     fn evaluate(&mut self, genome: &[usize]) -> Vec<f64>;
+    /// Evaluate a whole generation at once. The returned vectors must be
+    /// in submission order, one per genome. The default delegates to
+    /// [`Problem::evaluate`] serially; override for batched backends
+    /// (dedup, caching, thread fan-out). Implementations must stay pure
+    /// per genome: the same genome maps to the same objectives regardless
+    /// of batch composition, or determinism across batch shapes is lost.
+    fn evaluate_batch(&mut self, genomes: &[Vec<usize>]) -> Vec<Vec<f64>> {
+        genomes.iter().map(|g| self.evaluate(g)).collect()
+    }
     /// Optional: seed individuals injected into the initial population.
     fn seeds(&self) -> Vec<Vec<usize>> {
         Vec::new()
@@ -92,10 +118,29 @@ impl Nsga2 {
         (0..len).map(|_| self.rng.below(alphabet)).collect()
     }
 
-    fn evaluate<P: Problem>(&mut self, problem: &mut P, genome: Vec<usize>) -> Individual {
-        self.evaluations += 1;
-        let objectives = problem.evaluate(&genome);
-        Individual { genome, objectives, rank: usize::MAX, crowding: 0.0 }
+    /// Evaluate one generation's worth of genomes as a single batch.
+    fn evaluate_all<P: Problem>(
+        &mut self,
+        problem: &mut P,
+        genomes: Vec<Vec<usize>>,
+    ) -> Vec<Individual> {
+        self.evaluations += genomes.len();
+        let objectives = problem.evaluate_batch(&genomes);
+        assert_eq!(
+            objectives.len(),
+            genomes.len(),
+            "evaluate_batch must return one objective vector per genome"
+        );
+        genomes
+            .into_iter()
+            .zip(objectives)
+            .map(|(genome, objectives)| Individual {
+                genome,
+                objectives,
+                rank: usize::MAX,
+                crowding: 0.0,
+            })
+            .collect()
     }
 
     /// Assign ranks + crowding in place; returns the fronts (index lists).
@@ -187,24 +232,27 @@ impl Nsga2 {
         while genomes.len() < self.cfg.pop_size {
             genomes.push(self.random_genome(len, alphabet));
         }
-        let mut pop: Vec<Individual> =
-            genomes.into_iter().map(|g| self.evaluate(problem, g)).collect();
+        let mut pop = self.evaluate_all(problem, genomes);
         Self::rank_population(&mut pop);
 
         for generation in 0..self.cfg.generations {
-            // variation: offspring of size pop_size
-            let mut offspring = Vec::with_capacity(self.cfg.pop_size);
-            while offspring.len() < self.cfg.pop_size {
-                let pa = self.tournament(&pop).genome.clone();
-                let pb = self.tournament(&pop).genome.clone();
-                let (mut c, mut d) = self.crossover(&pa, &pb);
+            // variation first: collect the full offspring generation so it
+            // can be evaluated as one batch. Parents are borrowed from the
+            // population (cloned exactly once, inside crossover); the PRNG
+            // consumption order is identical to the legacy inline loop.
+            let mut offspring_genomes = Vec::with_capacity(self.cfg.pop_size);
+            while offspring_genomes.len() < self.cfg.pop_size {
+                let pa = self.tournament(&pop);
+                let pb = self.tournament(&pop);
+                let (mut c, mut d) = self.crossover(&pa.genome, &pb.genome);
                 self.mutate(&mut c, alphabet);
                 self.mutate(&mut d, alphabet);
-                offspring.push(self.evaluate(problem, c));
-                if offspring.len() < self.cfg.pop_size {
-                    offspring.push(self.evaluate(problem, d));
+                offspring_genomes.push(c);
+                if offspring_genomes.len() < self.cfg.pop_size {
+                    offspring_genomes.push(d);
                 }
             }
+            let offspring = self.evaluate_all(problem, offspring_genomes);
 
             // elitist environmental selection over parents + offspring
             pop.extend(offspring);
@@ -365,6 +413,40 @@ mod tests {
         });
         let front = opt.run(&mut Seeded, |_| {});
         assert!(front.iter().any(|i| i.objectives[0] == 0.0));
+    }
+
+    /// The optimizer submits whole generations to evaluate_batch, and an
+    /// overriding problem produces the same run as the serial default.
+    #[test]
+    fn batch_evaluation_receives_whole_generations() {
+        struct Batched {
+            inner: OnesZeros,
+            batch_sizes: Vec<usize>,
+        }
+        impl Problem for Batched {
+            fn genome_len(&self) -> usize {
+                self.inner.genome_len()
+            }
+            fn alphabet(&self) -> usize {
+                self.inner.alphabet()
+            }
+            fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+                self.inner.evaluate(g)
+            }
+            fn evaluate_batch(&mut self, genomes: &[Vec<usize>]) -> Vec<Vec<f64>> {
+                self.batch_sizes.push(genomes.len());
+                genomes.iter().map(|g| self.inner.evaluate(g)).collect()
+            }
+        }
+        let cfg = Nsga2Config { pop_size: 10, generations: 3, ..Default::default() };
+        let mut batched = Batched { inner: OnesZeros { len: 8 }, batch_sizes: vec![] };
+        let front_batched = Nsga2::new(cfg.clone()).run(&mut batched, |_| {});
+        // initial population + one batch per generation, all full-size
+        assert_eq!(batched.batch_sizes, vec![10; 4]);
+        // identical trajectory to the serial default implementation
+        let front_serial = Nsga2::new(cfg).run(&mut OnesZeros { len: 8 }, |_| {});
+        let key = crate::bench::suite::front_fingerprint;
+        assert_eq!(key(&front_batched), key(&front_serial));
     }
 
     #[test]

@@ -1,73 +1,203 @@
-//! ΔAcc memoization (DESIGN.md §4.2, ablation A2).
+//! ΔAcc memoization (DESIGN.md §4.2, ablation A2) — sharded, lock-striped,
+//! thread-safe.
 //!
 //! ΔAcc(P) depends on P only through the per-unit rate vectors, and the
 //! bit-flip kernel quantizes rates to 1/256 granularity — so caching on
 //! the quantized rate-vector key is *exact*, not approximate. NSGA-II
 //! revisits equivalent mappings constantly (D^L is small at L ≈ 6–10,
 //! D = 2), so hit rates above 90% are typical after the first generations.
+//!
+//! The store is striped across N mutex-guarded shards keyed by a hash of
+//! the rate vector, and every operation takes `&self`: the batched
+//! evaluation engine ([`crate::partition::engine`]) probes and fills the
+//! cache from its scoped worker threads without serializing on one lock,
+//! and the evaluator no longer needs `&mut` for cache access.
+//!
+//! Statistics come in two scopes. *Epoch* counters describe the current
+//! fault environment and reset on [`DaccCache::clear`] (the online phase
+//! clears on every environment change because stale ΔAcc values are
+//! wrong under new rates). *Lifetime* counters accumulate across epochs
+//! so long-running serving loops can report cumulative cache efficiency
+//! instead of silently zeroing history — see [`CacheRollover`].
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::faults::RateVectors;
 
-/// Exact memo cache for fault-injected accuracy.
-#[derive(Debug, Default)]
+/// Shard count: enough stripes that 4–16 eval workers rarely collide,
+/// cheap enough that `len()`/`clear()` stay trivial.
+const NUM_SHARDS: usize = 16;
+
+/// A point-in-time snapshot of cache counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> usize {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// What [`crate::partition::PartitionEvaluator::set_env_rates`] reports
+/// when it rolls the cache over to a new fault environment: the epoch
+/// that just ended, and the lifetime totals including it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheRollover {
+    /// Counters of the epoch that was just closed.
+    pub ended_epoch: CacheStats,
+    /// Cumulative counters across all epochs so far (including the one
+    /// that just ended).
+    pub lifetime: CacheStats,
+    /// Distinct entries dropped by the rollover.
+    pub entries_dropped: usize,
+}
+
+/// Exact memo cache for fault-injected accuracy. Thread-safe: all
+/// operations take `&self`.
+#[derive(Debug)]
 pub struct DaccCache {
-    map: HashMap<Vec<u16>, f64>,
-    hits: usize,
-    misses: usize,
+    shards: Vec<Mutex<HashMap<Vec<u16>, f64>>>,
+    // epoch counters (reset by clear)
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    // lifetime counters (never reset)
+    lifetime_hits: AtomicUsize,
+    lifetime_misses: AtomicUsize,
+}
+
+impl Default for DaccCache {
+    fn default() -> Self {
+        DaccCache::new()
+    }
 }
 
 impl DaccCache {
     pub fn new() -> DaccCache {
-        DaccCache::default()
+        DaccCache {
+            shards: (0..NUM_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            lifetime_hits: AtomicUsize::new(0),
+            lifetime_misses: AtomicUsize::new(0),
+        }
     }
 
-    pub fn get(&mut self, rates: &RateVectors) -> Option<f64> {
-        match self.map.get(&rates.cache_key()) {
-            Some(&v) => {
-                self.hits += 1;
+    fn shard(&self, key: &[u16]) -> &Mutex<HashMap<Vec<u16>, f64>> {
+        // DefaultHasher::new() is deterministic (fixed keys), unlike a
+        // HashMap's per-instance RandomState — shard choice is stable
+        // across runs, though nothing observable depends on it.
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Raw lookup by quantized key with **no** statistics side effects.
+    /// The batch engine uses this so it can attribute hits/misses itself
+    /// (a batch-deduplicated request is a hit even though the store
+    /// doesn't hold the value yet).
+    pub fn probe(&self, key: &[u16]) -> Option<f64> {
+        self.shard(key).lock().unwrap().get(key).copied()
+    }
+
+    /// Counted lookup: records a hit or a miss (both scopes).
+    pub fn get(&self, rates: &RateVectors) -> Option<f64> {
+        let key = rates.cache_key();
+        match self.probe(&key) {
+            Some(v) => {
+                self.record_hits(1);
                 Some(v)
             }
             None => {
-                self.misses += 1;
+                self.record_misses(1);
                 None
             }
         }
     }
 
-    pub fn put(&mut self, rates: &RateVectors, acc: f64) {
-        self.map.insert(rates.cache_key(), acc);
+    pub fn put(&self, rates: &RateVectors, acc: f64) {
+        self.put_key(rates.cache_key(), acc);
+    }
+
+    pub fn put_key(&self, key: Vec<u16>, acc: f64) {
+        self.shard(&key).lock().unwrap().insert(key, acc);
+    }
+
+    /// Attribute `n` hits (used for batch-dedup hits and engine lookups).
+    pub fn record_hits(&self, n: usize) {
+        self.hits.fetch_add(n, Ordering::Relaxed);
+        self.lifetime_hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Attribute `n` misses (engine: unique keys that must be evaluated).
+    pub fn record_misses(&self, n: usize) {
+        self.misses.fetch_add(n, Ordering::Relaxed);
+        self.lifetime_misses.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
     }
 
+    /// Epoch hits (since the last clear).
     pub fn hits(&self) -> usize {
-        self.hits
+        self.hits.load(Ordering::Relaxed)
     }
 
+    /// Epoch misses (since the last clear).
     pub fn misses(&self) -> usize {
-        self.misses
+        self.misses.load(Ordering::Relaxed)
     }
 
     pub fn hit_rate(&self) -> f64 {
-        if self.hits + self.misses == 0 {
-            0.0
-        } else {
-            self.hits as f64 / (self.hits + self.misses) as f64
+        self.stats().hit_rate()
+    }
+
+    /// Epoch counters (reset on [`clear`](DaccCache::clear)).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { hits: self.hits(), misses: self.misses() }
+    }
+
+    /// Cumulative counters across every epoch of this cache's life.
+    pub fn lifetime_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.lifetime_hits.load(Ordering::Relaxed),
+            misses: self.lifetime_misses.load(Ordering::Relaxed),
         }
     }
 
-    pub fn clear(&mut self) {
-        self.map.clear();
-        self.hits = 0;
-        self.misses = 0;
+    /// Drop all entries and close the current stats epoch. Lifetime
+    /// counters are preserved; the returned rollover reports both scopes.
+    pub fn clear(&self) -> CacheRollover {
+        let ended_epoch = self.stats();
+        let lifetime = self.lifetime_stats();
+        let mut entries_dropped = 0;
+        for shard in &self.shards {
+            let mut map = shard.lock().unwrap();
+            entries_dropped += map.len();
+            map.clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        CacheRollover { ended_epoch, lifetime, entries_dropped }
     }
 }
 
@@ -81,7 +211,7 @@ mod tests {
 
     #[test]
     fn hit_after_put() {
-        let mut c = DaccCache::new();
+        let c = DaccCache::new();
         assert_eq!(c.get(&rv(0.2, 0.1)), None);
         c.put(&rv(0.2, 0.1), 0.85);
         assert_eq!(c.get(&rv(0.2, 0.1)), Some(0.85));
@@ -91,7 +221,7 @@ mod tests {
 
     #[test]
     fn sub_granularity_rates_collide_exactly() {
-        let mut c = DaccCache::new();
+        let c = DaccCache::new();
         c.put(&rv(0.2, 0.1), 0.9);
         // 0.2001 quantizes to the same kernel threshold -> same accuracy
         assert_eq!(c.get(&rv(0.2001, 0.1)), Some(0.9));
@@ -99,17 +229,63 @@ mod tests {
 
     #[test]
     fn distinct_rates_miss() {
-        let mut c = DaccCache::new();
+        let c = DaccCache::new();
         c.put(&rv(0.2, 0.1), 0.9);
         assert_eq!(c.get(&rv(0.25, 0.1)), None);
     }
 
     #[test]
-    fn clear_resets() {
-        let mut c = DaccCache::new();
+    fn clear_resets_epoch_but_keeps_lifetime() {
+        let c = DaccCache::new();
+        assert_eq!(c.get(&rv(0.2, 0.1)), None); // miss
         c.put(&rv(0.2, 0.1), 0.9);
-        c.clear();
+        assert_eq!(c.get(&rv(0.2, 0.1)), Some(0.9)); // hit
+        let rollover = c.clear();
         assert!(c.is_empty());
         assert_eq!(c.hits(), 0);
+        assert_eq!(c.misses(), 0);
+        assert_eq!(rollover.ended_epoch, CacheStats { hits: 1, misses: 1 });
+        assert_eq!(rollover.entries_dropped, 1);
+        // lifetime survives the rollover and keeps accumulating
+        assert_eq!(c.lifetime_stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(c.get(&rv(0.3, 0.1)), None);
+        assert_eq!(c.lifetime_stats(), CacheStats { hits: 1, misses: 2 });
+        assert_eq!(c.stats(), CacheStats { hits: 0, misses: 1 });
+    }
+
+    #[test]
+    fn probe_has_no_stat_side_effects() {
+        let c = DaccCache::new();
+        c.put(&rv(0.2, 0.1), 0.9);
+        assert_eq!(c.probe(&rv(0.2, 0.1).cache_key()), Some(0.9));
+        assert_eq!(c.probe(&rv(0.4, 0.1).cache_key()), None);
+        assert_eq!(c.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn len_spans_shards() {
+        let c = DaccCache::new();
+        for i in 0..100 {
+            let r = i as f32 / 100.0;
+            c.put(&rv(r, 0.5), r as f64);
+        }
+        assert_eq!(c.len(), 100);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let c = DaccCache::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let c = &c;
+                s.spawn(move || {
+                    for i in 0..50 {
+                        let r = ((t * 50 + i) % 64) as f32 / 64.0;
+                        c.put(&rv(r, 0.25), r as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.len(), 64);
     }
 }

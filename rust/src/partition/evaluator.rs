@@ -1,14 +1,35 @@
 //! The three-objective partition evaluator (paper Eq. 2):
 //! minimize [Latency(P), Energy(P), ΔAcc(P)].
 //!
-//! Latency/energy come from the analytical hardware models (per-unit
-//! tables precomputed once); ΔAcc comes from the compiled fault-injected
-//! model (exact mode, Algorithm 1) or the sensitivity surrogate, with
-//! exact memoization on quantized rate vectors in between.
+//! Latency/energy come from the analytical hardware models; ΔAcc comes
+//! from the compiled fault-injected model (exact mode, Algorithm 1) or the
+//! sensitivity surrogate, with exact memoization on quantized rate vectors
+//! in between.
+//!
+//! # Evaluation engine
+//!
+//! The evaluator is the backend of the batched evaluation engine
+//! introduced for NSGA-II throughput (see [`crate::partition::engine`] and
+//! the module docs of [`crate::nsga2`]):
+//!
+//! * **Latency/energy fast path** — per-device *prefix sums* over the
+//!   unit cost tables are precomputed once; a mapping's cost is then the
+//!   sum of one prefix difference per contiguous device run (O(runs)
+//!   float work instead of O(L)). [`PartitionEvaluator::lat_en_delta`]
+//!   additionally exposes a true O(changed-genes) incremental update for
+//!   single-gene searches (the greedy baseline uses it).
+//! * **Batched ΔAcc** — [`PartitionEvaluator::objectives_batch`] maps the
+//!   whole batch to quantized rate keys, dedupes within the batch,
+//!   answers known keys from the sharded lock-striped [`DaccCache`], and
+//!   fans residual misses across scoped worker threads
+//!   ([`PartitionEvaluator::with_parallelism`]). Results are bitwise
+//!   identical for any thread count: every ΔAcc backend is a pure
+//!   function of the rate vectors.
 
 use anyhow::Result;
 
-use super::cache::DaccCache;
+use super::cache::{CacheRollover, CacheStats, DaccCache};
+use super::engine::{self, DaccBackend, EngineConfig};
 use super::genome::Mapping;
 use super::sensitivity::SensitivityTable;
 use crate::faults::{FaultScenario, RateVectors};
@@ -22,6 +43,11 @@ pub enum DaccMode<'a> {
     Exact { model: &'a CompiledModel, eval: &'a AccuracyEvaluator, key_seed: u32, n_batches: usize },
     /// Compose the measured layer-sensitivity table (cheap; online phase).
     Surrogate(&'a SensitivityTable),
+    /// Bench/test stand-in for `Exact`: surrogate-valued accuracy plus a
+    /// simulated per-evaluation runtime cost that emulates the blocking
+    /// PJRT call. Used by bench_perf's eval-engine section and the
+    /// determinism/concurrency tests — no artifacts required.
+    SyntheticExact { table: &'a SensitivityTable, cost: std::time::Duration },
     /// ΔAcc not evaluated (2-objective fault-unaware baselines).
     None,
 }
@@ -29,15 +55,26 @@ pub enum DaccMode<'a> {
 /// Evaluation-effort counters (reported by benches / EXPERIMENTS.md).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EvalCounters {
+    /// Unique exact-mode (or synthetic-exact) backend evaluations.
     pub exact_evals: usize,
+    /// Unique surrogate backend evaluations.
     pub surrogate_evals: usize,
+    /// Batched evaluation calls served by the engine.
+    pub batch_calls: usize,
+    /// Total genomes submitted through the batched path.
+    pub batch_genomes: usize,
 }
 
 /// Bound evaluator for one (model, platform, fault-environment) triple.
 pub struct PartitionEvaluator<'a> {
     lat_table: Vec<Vec<f64>>, // [unit][device] ms
     en_table: Vec<Vec<f64>>,  // [unit][device] mJ
-    in_bytes: Vec<u64>,       // per-unit input activation bytes
+    // Device-conditional prefix sums: *_prefix[d][l] = Σ_{i<l} table[i][d]
+    // (length L+1 per device). A contiguous run [i, j) on device d costs
+    // prefix[d][j] − prefix[d][i].
+    lat_prefix: Vec<Vec<f64>>,
+    en_prefix: Vec<Vec<f64>>,
+    in_bytes: Vec<u64>, // per-unit input activation bytes
     platform: &'a Platform,
     /// Per-device fault rates (weights / activations) of the environment.
     pub dev_w_rates: Vec<f32>,
@@ -48,6 +85,7 @@ pub struct PartitionEvaluator<'a> {
     pub include_link_cost: bool,
     dacc: DaccMode<'a>,
     cache: DaccCache,
+    engine: EngineConfig,
     pub counters: EvalCounters,
 }
 
@@ -64,9 +102,14 @@ impl<'a> PartitionEvaluator<'a> {
         dacc: DaccMode<'a>,
     ) -> Self {
         assert_eq!(dev_w_rates.len(), platform.num_devices());
+        let lat_table = platform.latency_table(&manifest.units);
+        let en_table = platform.energy_table(&manifest.units);
+        let (lat_prefix, en_prefix) = (prefix_sums(&lat_table), prefix_sums(&en_table));
         PartitionEvaluator {
-            lat_table: platform.latency_table(&manifest.units),
-            en_table: platform.energy_table(&manifest.units),
+            lat_table,
+            en_table,
+            lat_prefix,
+            en_prefix,
             in_bytes: manifest.units.iter().map(|u| u.in_bytes).collect(),
             platform,
             dev_w_rates,
@@ -76,8 +119,23 @@ impl<'a> PartitionEvaluator<'a> {
             include_link_cost,
             dacc,
             cache: DaccCache::new(),
+            engine: EngineConfig::default(),
             counters: EvalCounters::default(),
         }
+    }
+
+    /// Set the engine's worker-thread budget (builder form).
+    pub fn with_parallelism(mut self, threads: usize) -> Self {
+        self.set_parallelism(threads);
+        self
+    }
+
+    pub fn set_parallelism(&mut self, threads: usize) {
+        self.engine = EngineConfig::with_threads(threads);
+    }
+
+    pub fn parallelism(&self) -> usize {
+        self.engine.threads
     }
 
     pub fn num_units(&self) -> usize {
@@ -89,15 +147,24 @@ impl<'a> PartitionEvaluator<'a> {
     }
 
     /// Update the environment rates (online phase re-optimization) and
-    /// drop the now-stale ΔAcc cache.
-    pub fn set_env_rates(&mut self, dev_w: Vec<f32>, dev_a: Vec<f32>) {
+    /// roll the now-stale ΔAcc cache over to a new epoch. The returned
+    /// rollover carries both the ended epoch's stats and the cumulative
+    /// lifetime stats, so callers can report history instead of losing it.
+    pub fn set_env_rates(&mut self, dev_w: Vec<f32>, dev_a: Vec<f32>) -> CacheRollover {
         self.dev_w_rates = dev_w;
         self.dev_a_rates = dev_a;
-        self.cache.clear();
+        self.cache.clear()
     }
 
+    /// Current-epoch cache statistics as (hits, misses, hit_rate).
     pub fn cache_stats(&self) -> (usize, usize, f64) {
-        (self.cache.hits(), self.cache.misses(), self.cache.hit_rate())
+        let s = self.cache.stats();
+        (s.hits, s.misses, s.hit_rate())
+    }
+
+    /// Cumulative cache statistics across all environment epochs.
+    pub fn cache_lifetime_stats(&self) -> CacheStats {
+        self.cache.lifetime_stats()
     }
 
     /// Per-unit rate vectors induced by a mapping under this environment.
@@ -105,37 +172,97 @@ impl<'a> PartitionEvaluator<'a> {
         RateVectors::from_mapping(&mapping.0, &self.dev_w_rates, &self.dev_a_rates, self.scenario)
     }
 
-    /// End-to-end latency in ms (sequential layer execution, as in the
-    /// paper's per-sample inference latency).
-    pub fn latency_ms(&self, mapping: &Mapping) -> f64 {
-        let mut total = 0.0;
-        for (l, &d) in mapping.0.iter().enumerate() {
-            total += self.lat_table[l][d];
-        }
-        if self.include_link_cost {
-            for w in 0..mapping.0.len().saturating_sub(1) {
-                if mapping.0[w] != mapping.0[w + 1] {
-                    total += self.platform.link.latency_ms(self.in_bytes[w + 1]);
+    /// End-to-end (latency ms, energy mJ) in one pass: prefix-difference
+    /// per contiguous device run, plus link costs at run boundaries when
+    /// modeled.
+    pub fn lat_en(&self, mapping: &Mapping) -> (f64, f64) {
+        let genes = &mapping.0;
+        let (mut lat, mut en) = (0.0, 0.0);
+        let mut start = 0;
+        for l in 1..=genes.len() {
+            if l == genes.len() || genes[l] != genes[start] {
+                let d = genes[start];
+                lat += self.lat_prefix[d][l] - self.lat_prefix[d][start];
+                en += self.en_prefix[d][l] - self.en_prefix[d][start];
+                if l < genes.len() {
+                    if self.include_link_cost {
+                        lat += self.platform.link.latency_ms(self.in_bytes[l]);
+                        en += self.platform.link.energy_mj(self.in_bytes[l]);
+                    }
+                    start = l;
                 }
             }
         }
-        total
+        (lat, en)
+    }
+
+    /// End-to-end latency in ms (sequential layer execution, as in the
+    /// paper's per-sample inference latency).
+    pub fn latency_ms(&self, mapping: &Mapping) -> f64 {
+        self.lat_en(mapping).0
     }
 
     /// End-to-end energy in mJ.
     pub fn energy_mj(&self, mapping: &Mapping) -> f64 {
-        let mut total = 0.0;
-        for (l, &d) in mapping.0.iter().enumerate() {
-            total += self.en_table[l][d];
+        self.lat_en(mapping).1
+    }
+
+    /// Incremental cost update: the (latency, energy) of `base` after
+    /// re-assigning the listed `(unit, device)` genes — O(changed genes),
+    /// not O(L). Only valid without link costs (a gene change perturbs
+    /// link boundaries non-locally); asserts that invariant.
+    ///
+    /// Note the floating-point sums differ from [`Self::lat_en`] in the
+    /// last ulps (different association order), so the batched NSGA-II
+    /// path deliberately does *not* chain deltas — bitwise determinism
+    /// against the serial path outranks the constant-factor win there.
+    /// Single-gene searches (greedy baseline, local refinement) are the
+    /// intended users.
+    pub fn lat_en_delta(
+        &self,
+        base: &Mapping,
+        base_cost: (f64, f64),
+        changes: &[(usize, usize)],
+    ) -> (f64, f64) {
+        assert!(
+            !self.include_link_cost,
+            "lat_en_delta: incremental updates are unavailable with link costs"
+        );
+        let (mut lat, mut en) = base_cost;
+        for &(unit, dev) in changes {
+            let old = base.0[unit];
+            lat += self.lat_table[unit][dev] - self.lat_table[unit][old];
+            en += self.en_table[unit][dev] - self.en_table[unit][old];
         }
-        if self.include_link_cost {
-            for w in 0..mapping.0.len().saturating_sub(1) {
-                if mapping.0[w] != mapping.0[w + 1] {
-                    total += self.platform.link.energy_mj(self.in_bytes[w + 1]);
-                }
+        (lat, en)
+    }
+
+    /// The per-worker ΔAcc backend handle for the current mode.
+    fn backend(&self) -> DaccBackend<'a> {
+        match &self.dacc {
+            DaccMode::Exact { model, eval, key_seed, n_batches } => DaccBackend::Exact {
+                model: *model,
+                eval: *eval,
+                key_seed: *key_seed,
+                n_batches: *n_batches,
+            },
+            DaccMode::Surrogate(table) => DaccBackend::Surrogate { table: *table },
+            DaccMode::SyntheticExact { table, cost } => {
+                DaccBackend::Synthetic { table: *table, cost: *cost }
             }
+            DaccMode::None => DaccBackend::Clean { acc: self.clean_acc },
         }
-        total
+    }
+
+    /// Book unique backend evaluations against the right counter.
+    fn note_backend_evals(&mut self, n: usize) {
+        match &self.dacc {
+            DaccMode::Exact { .. } | DaccMode::SyntheticExact { .. } => {
+                self.counters.exact_evals += n
+            }
+            DaccMode::Surrogate(_) => self.counters.surrogate_evals += n,
+            DaccMode::None => {}
+        }
     }
 
     /// Fault-injected accuracy A_faulty(P) (memoized).
@@ -144,17 +271,8 @@ impl<'a> PartitionEvaluator<'a> {
         if let Some(acc) = self.cache.get(&rates) {
             return Ok(acc);
         }
-        let acc = match &self.dacc {
-            DaccMode::Exact { model, eval, key_seed, n_batches } => {
-                self.counters.exact_evals += 1;
-                eval.accuracy(model, &rates, *key_seed, *n_batches)?
-            }
-            DaccMode::Surrogate(table) => {
-                self.counters.surrogate_evals += 1;
-                (table.clean_acc - table.estimate_dacc(&rates)).max(0.0)
-            }
-            DaccMode::None => self.clean_acc,
-        };
+        let acc = self.backend().eval(&rates)?;
+        self.note_backend_evals(1);
         self.cache.put(&rates, acc);
         Ok(acc)
     }
@@ -166,13 +284,57 @@ impl<'a> PartitionEvaluator<'a> {
 
     /// Three-objective vector (AFarePart).
     pub fn objectives3(&mut self, mapping: &Mapping) -> Result<Vec<f64>> {
-        Ok(vec![self.latency_ms(mapping), self.energy_mj(mapping), self.dacc(mapping)?])
+        let (lat, en) = self.lat_en(mapping);
+        Ok(vec![lat, en, self.dacc(mapping)?])
     }
 
     /// Two-objective vector (fault-unaware baselines).
     pub fn objectives2(&self, mapping: &Mapping) -> Vec<f64> {
-        vec![self.latency_ms(mapping), self.energy_mj(mapping)]
+        let (lat, en) = self.lat_en(mapping);
+        vec![lat, en]
     }
+
+    /// Batched objective evaluation — the engine entry point NSGA-II
+    /// drives once per generation. Deduplicates equivalent rate vectors
+    /// within the batch, serves known keys from the sharded cache, and
+    /// evaluates residual misses on the engine's worker threads. Results
+    /// are returned in submission order and are bitwise identical to
+    /// evaluating each mapping serially via [`Self::objectives3`] /
+    /// [`Self::objectives2`].
+    pub fn objectives_batch(
+        &mut self,
+        mappings: &[Mapping],
+        three_obj: bool,
+    ) -> Result<Vec<Vec<f64>>> {
+        self.counters.batch_calls += 1;
+        self.counters.batch_genomes += mappings.len();
+        let costs: Vec<(f64, f64)> = mappings.iter().map(|m| self.lat_en(m)).collect();
+        if !three_obj {
+            return Ok(costs.into_iter().map(|(l, e)| vec![l, e]).collect());
+        }
+        let rates: Vec<RateVectors> = mappings.iter().map(|m| self.rates_for(m)).collect();
+        let outcome =
+            engine::faulty_accuracy_batch(self.backend(), &self.cache, self.engine, &rates)?;
+        self.note_backend_evals(outcome.unique_misses);
+        Ok(costs
+            .into_iter()
+            .zip(outcome.accs)
+            .map(|((lat, en), acc)| vec![lat, en, (self.clean_acc - acc).max(0.0)])
+            .collect())
+    }
+}
+
+/// Per-device prefix sums of a [unit][device] table: out[d][l] = Σ_{i<l}
+/// table[i][d], with out[d].len() == L + 1.
+fn prefix_sums(table: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let devices = table.first().map(|row| row.len()).unwrap_or(0);
+    let mut out = vec![vec![0.0; table.len() + 1]; devices];
+    for (l, row) in table.iter().enumerate() {
+        for (d, &v) in row.iter().enumerate() {
+            out[d][l + 1] = out[d][l] + v;
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -234,6 +396,32 @@ mod tests {
         let lat = ev.latency_ms(&m0);
         let per_unit: f64 = (0..3).map(|l| ev.lat_table[l][0]).sum();
         assert!((lat - per_unit).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_fast_path_matches_per_gene_sum() {
+        let p = Platform::default_two_device();
+        let ev = eval(&p, false);
+        for bits in 0..8usize {
+            let m = Mapping((0..3).map(|i| (bits >> i) & 1).collect());
+            let want_lat: f64 = (0..3).map(|l| ev.lat_table[l][m.0[l]]).sum();
+            let want_en: f64 = (0..3).map(|l| ev.en_table[l][m.0[l]]).sum();
+            let (lat, en) = ev.lat_en(&m);
+            assert!((lat - want_lat).abs() < 1e-9, "{m:?}: {lat} vs {want_lat}");
+            assert!((en - want_en).abs() < 1e-9, "{m:?}: {en} vs {want_en}");
+        }
+    }
+
+    #[test]
+    fn delta_update_matches_full_evaluation() {
+        let p = Platform::default_two_device();
+        let ev = eval(&p, false);
+        let base = Mapping(vec![0, 0, 0]);
+        let base_cost = ev.lat_en(&base);
+        let (dlat, den) = ev.lat_en_delta(&base, base_cost, &[(1, 1)]);
+        let full = ev.lat_en(&Mapping(vec![0, 1, 0]));
+        assert!((dlat - full.0).abs() < 1e-9);
+        assert!((den - full.1).abs() < 1e-9);
     }
 
     #[test]
@@ -317,6 +505,51 @@ mod tests {
     }
 
     #[test]
+    fn batch_matches_serial_objectives() {
+        let p = Platform::default_two_device();
+        let table = SensitivityTable {
+            rate_grid: vec![0.1, 0.2, 0.4],
+            w_drop: vec![vec![0.05, 0.1, 0.2], vec![0.01, 0.02, 0.04], vec![0.0; 3]],
+            a_drop: vec![vec![0.01; 3], vec![0.01; 3], vec![0.01; 3]],
+            clean_acc: 0.9,
+        };
+        let m = manifest2();
+        let mk = || {
+            PartitionEvaluator::new(
+                &m,
+                &p,
+                vec![0.2, 0.03],
+                vec![0.2, 0.03],
+                FaultScenario::InputWeight,
+                0.9,
+                false,
+                DaccMode::Surrogate(&table),
+            )
+        };
+        let mappings: Vec<Mapping> =
+            (0..8usize).map(|b| Mapping((0..3).map(|i| (b >> i) & 1).collect())).collect();
+        let mut batch_ev = mk();
+        let batch = batch_ev.objectives_batch(&mappings, true).unwrap();
+        let mut serial_ev = mk();
+        for (m, got) in mappings.iter().zip(&batch) {
+            let want = serial_ev.objectives3(m).unwrap();
+            assert_eq!(got, &want, "batch diverges from serial for {m:?}");
+        }
+    }
+
+    #[test]
+    fn batch_two_objective_skips_dacc() {
+        let p = Platform::default_two_device();
+        let mut ev = eval(&p, false);
+        let mappings = vec![Mapping(vec![0, 1, 0]), Mapping(vec![1, 1, 1])];
+        let objs = ev.objectives_batch(&mappings, false).unwrap();
+        assert_eq!(objs.len(), 2);
+        assert_eq!(objs[0], ev.objectives2(&mappings[0]));
+        let (h, mi, _) = ev.cache_stats();
+        assert_eq!((h, mi), (0, 0), "2-objective batches must not touch the ΔAcc cache");
+    }
+
+    #[test]
     fn set_env_rates_invalidates_cache() {
         let p = Platform::default_two_device();
         let table = SensitivityTable {
@@ -337,8 +570,14 @@ mod tests {
             DaccMode::Surrogate(&table),
         );
         let d1 = ev.dacc(&Mapping(vec![0, 0, 0])).unwrap();
-        ev.set_env_rates(vec![0.4, 0.03], vec![0.4, 0.03]);
+        let rollover = ev.set_env_rates(vec![0.4, 0.03], vec![0.4, 0.03]);
+        assert_eq!(rollover.ended_epoch.misses, 1);
+        assert_eq!(rollover.lifetime.misses, 1);
+        assert_eq!(rollover.entries_dropped, 1);
         let d2 = ev.dacc(&Mapping(vec![0, 0, 0])).unwrap();
         assert!(d2 > d1);
+        // the new epoch starts clean; lifetime keeps accumulating
+        assert_eq!(ev.cache_stats().1, 1);
+        assert_eq!(ev.cache_lifetime_stats().misses, 2);
     }
 }

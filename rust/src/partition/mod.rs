@@ -1,14 +1,17 @@
 //! Partitioning layer: the genome, the three-objective evaluator
-//! (latency, energy, ΔAcc — paper Eq. 2), the ΔAcc memo cache, the
-//! layer-sensitivity surrogate, and Pareto-front selection policies.
+//! (latency, energy, ΔAcc — paper Eq. 2), the batched parallel evaluation
+//! engine with its sharded ΔAcc memo cache, the layer-sensitivity
+//! surrogate, and Pareto-front selection policies.
 
 mod cache;
+pub(crate) mod engine;
 mod evaluator;
 mod front;
 mod genome;
 mod sensitivity;
 
-pub use cache::DaccCache;
+pub use cache::{CacheRollover, CacheStats, DaccCache};
+pub use engine::EngineConfig;
 pub use evaluator::{DaccMode, EvalCounters, PartitionEvaluator};
 pub use front::{select_knee, select_min_dacc, select_min_dacc_within_budget};
 pub use genome::Mapping;

@@ -83,6 +83,15 @@ impl SensitivityTable {
         *drops.last().unwrap()
     }
 
+    /// Estimated faulty accuracy A_clean − ΔAcĉ, clamped at 0 — the
+    /// surrogate's answer to the exact mode's `AccuracyEvaluator::accuracy`.
+    /// Pure in `rates` and allocation-free, so the batched evaluation
+    /// engine calls it concurrently from its worker threads (the table is
+    /// immutable shared data).
+    pub fn faulty_accuracy(&self, rates: &RateVectors) -> f64 {
+        (self.clean_acc - self.estimate_dacc(rates)).max(0.0)
+    }
+
     /// Estimated ΔAcc for full per-unit rate vectors.
     pub fn estimate_dacc(&self, rates: &RateVectors) -> f64 {
         if self.clean_acc <= 0.0 {

@@ -1,0 +1,219 @@
+//! Offline shim of the `anyhow` crate (crates.io is unavailable in this
+//! environment — DESIGN.md §9). Implements exactly the subset afarepart
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait for
+//! `Result`/`Option`, and the `anyhow!`/`bail!` macros.
+//!
+//! Semantics mirror the real crate where it matters to callers:
+//! * `{}` displays the outermost message, `{:#}` the full cause chain
+//!   joined by `": "` (the format the CLI and tests rely on).
+//! * Any `std::error::Error + Send + Sync + 'static` converts via `?`,
+//!   capturing its source chain as strings.
+//! * `Error` itself deliberately does **not** implement
+//!   `std::error::Error`, which is what lets the blanket `From`/context
+//!   impls coexist (same coherence trick as upstream anyhow).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same defaulted form as upstream.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chain error: `chain[0]` is the outermost context message,
+/// later entries are successively deeper causes.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// Root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    fn from_std<E: StdError>(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::from_std(err)
+    }
+}
+
+/// Conversion used by [`Context`]: implemented for every std error *and*
+/// for [`Error`] itself so `.context(...)` works on both kinds of Result.
+#[doc(hidden)]
+pub trait IntoAnyhow {
+    fn into_anyhow(self) -> Error;
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoAnyhow for E {
+    fn into_anyhow(self) -> Error {
+        Error::from_std(self)
+    }
+}
+
+impl IntoAnyhow for Error {
+    fn into_anyhow(self) -> Error {
+        self
+    }
+}
+
+/// `.context(...)` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T>;
+}
+
+impl<T, E: IntoAnyhow> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_anyhow().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_anyhow().context(context())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: missing thing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_stacks_on_anyhow_errors() {
+        let e: Error = Err::<(), Error>(anyhow!("inner {}", 3)).context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 3");
+        assert_eq!(e.chain().count(), 2);
+        assert_eq!(e.root_cause(), "inner 3");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Result<i32> = Some(5).context("absent");
+        assert_eq!(v.unwrap(), 5);
+        let e = None::<i32>.with_context(|| format!("absent {}", 1)).unwrap_err();
+        assert_eq!(format!("{e}"), "absent 1");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<i32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "failed with code 7");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Error>();
+    }
+}

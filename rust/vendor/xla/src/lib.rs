@@ -1,0 +1,231 @@
+//! Offline stub of the `xla` PJRT bindings (the real crate and the PJRT
+//! C-API runtime are unavailable in this environment — DESIGN.md §9).
+//!
+//! The stub is API-compatible with the subset afarepart's runtime layer
+//! uses. [`Literal`] is implemented faithfully (typed byte buffers with
+//! shape metadata) so literal construction, round-trips and the accuracy
+//! evaluator's batch caching all work and stay unit-testable. The
+//! *execution* surface is present but inert: [`PjRtClient::cpu`] returns
+//! an error, so every PJRT-dependent path fails fast at client creation
+//! with a clear message, and artifact-gated tests skip before reaching it.
+//!
+//! All handle types are plain data and therefore `Send + Sync`, which is
+//! what lets the partition evaluation engine share per-worker handles
+//! across its scoped thread pool. A real PJRT backend must keep the
+//! one-executable-per-thread discipline documented in coordinator/server.rs.
+
+use std::fmt;
+
+/// Stub error type (mirrors `xla::Error` usage: Display + std::error).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (built against the offline xla stub; \
+         link the real xla crate to execute compiled artifacts)"
+    ))
+}
+
+/// Element types of the literals afarepart constructs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Sealed-ish mapping from Rust scalars to [`ElementType`] tags.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+
+/// A typed host buffer with shape metadata (faithfully implemented).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from raw little-endian bytes (the constructor the
+    /// real crate exposes for untyped data).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let expect = dims.iter().product::<usize>() * ty.byte_size();
+        if data.len() != expect {
+            return Err(Error(format!(
+                "literal byte size mismatch: got {}, want {} for dims {:?}",
+                data.len(),
+                expect,
+                dims
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn shape_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Read the buffer back as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal type mismatch: stored {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let size = std::mem::size_of::<T>();
+        let mut out = Vec::with_capacity(self.data.len() / size);
+        for chunk in self.data.chunks_exact(size) {
+            // SAFETY: T is a plain-old-data scalar (f32/i32/u32) and the
+            // chunk holds exactly size_of::<T>() little-endian host bytes.
+            out.push(unsafe { std::ptr::read_unaligned(chunk.as_ptr() as *const T) });
+        }
+        Ok(out)
+    }
+
+    /// Unwrap a 1-tuple literal. The stub never produces tuples (execution
+    /// is unavailable), so this only ever reports an error.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("to_tuple1"))
+    }
+}
+
+/// Parsed HLO module proto (stub: opaque token).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (stub: opaque token).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle. The stub cannot create one; every runtime path
+/// fails here, before any executable or buffer exists.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (stub: unreachable without a client).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (stub: unreachable without a client).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = [1.5f32, -2.0, 0.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+    }
+
+    #[test]
+    fn literal_size_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn literal_type_mismatch_rejected() {
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::U32, &[1], &[1, 0, 0, 0])
+                .unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert_eq!(lit.to_vec::<u32>().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn client_creation_reports_stub() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline xla stub"));
+    }
+
+    #[test]
+    fn handles_are_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Literal>();
+        check::<PjRtLoadedExecutable>();
+        check::<PjRtBuffer>();
+        check::<PjRtClient>();
+    }
+}
