@@ -1,0 +1,14 @@
+# AFarePart repo tooling.
+#
+#   make check      build + tests + eval-engine perf gate (scripts/check.sh)
+#   make artifacts  regenerate the compiled model artifacts (needs the
+#                   python/JAX build-time stack; the rust binary only
+#                   consumes the result)
+
+.PHONY: check artifacts
+
+check:
+	bash scripts/check.sh
+
+artifacts:
+	python3 python/compile/aot.py

@@ -7,15 +7,14 @@
 
 use anyhow::Result;
 
-use afarepart::config::ExperimentConfig;
 use afarepart::experiment::Experiment;
 use afarepart::faults::RateVectors;
 use afarepart::util::fmt::{pct, Table};
 
 fn main() -> Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "resnet18".into());
-    let cfg = ExperimentConfig { model, eval_limit: 128, ..Default::default() };
-    let exp = Experiment::load(&cfg)?;
+    let exp = Experiment::builder().model(&model).eval_limit(128).build()?;
+    let cfg = exp.config().clone();
     let grid = [0.1f32, 0.2, 0.3, 0.4];
     println!(
         "layer-wise fault sweep: {} — clean quantized top-1 {}\n(accuracy DROP per unit; w = weight faults, a = activation faults)",

@@ -13,26 +13,26 @@
 
 use anyhow::Result;
 
-use afarepart::config::ExperimentConfig;
 use afarepart::coordinator::server::InferenceServer;
 use afarepart::coordinator::{OfflineRunner, OnlineConfig, OnlineRunner};
 use afarepart::experiment::Experiment;
-use afarepart::faults::{DriftSchedule, FaultEnv, FaultScenario};
+use afarepart::faults::{DriftComponent, FaultEnv, FaultScenario};
 use afarepart::model::Manifest;
-use afarepart::nsga2::Nsga2Config;
 use afarepart::util::fmt::pct;
 
 fn main() -> Result<()> {
-    let cfg = ExperimentConfig {
-        model: std::env::args().nth(1).unwrap_or_else(|| "alexnet".into()),
-        fault_rate: 0.12, // ambient FR; the attack doubles it on dev0
-        scenario: FaultScenario::InputWeight,
-        eval_limit: 128,
-        nsga2: Nsga2Config { pop_size: 24, generations: 10, ..Default::default() },
-        theta: 0.05,
-        ..Default::default()
-    };
-    let exp = Experiment::load(&cfg)?;
+    let exp = Experiment::builder()
+        .model(&std::env::args().nth(1).unwrap_or_else(|| "alexnet".into()))
+        .fault_rate(0.12) // ambient FR; the attack doubles it on dev0
+        .scenario(FaultScenario::InputWeight)
+        .eval_limit(128)
+        .pop(24)
+        .gens(10)
+        .theta(0.05)
+        // drifting environment: EM step attack on dev0 at t = 40 s
+        .drift(vec![DriftComponent::step(0, 40.0, 2.5)])
+        .build()?;
+    let cfg = exp.config().clone();
     println!(
         "[e2e] {} loaded; clean quantized top-1 = {}",
         cfg.model,
@@ -60,12 +60,10 @@ fn main() -> Result<()> {
     )?;
     println!("[e2e] inference server up (batch {})", server.batch);
 
-    // --- drifting environment: EM step attack on dev0 at t = 40 s
-    let env = FaultEnv {
-        base_rate: cfg.fault_rate,
-        profiles: exp.profiles.clone(),
-        drift: DriftSchedule::StepAttack { device: 0, at_s: 40.0, factor: 2.5 },
-    };
+    // --- the drifting environment declared on the builder above (the
+    // drift stack is composable: push more components for step+sinusoid
+    // scenarios)
+    let env: FaultEnv = exp.fault_env();
 
     // Exact-mode re-optimization: the per-unit sensitivity surrogate
     // cannot capture cross-layer fault *accumulation* (single-unit drops

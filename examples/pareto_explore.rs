@@ -9,25 +9,23 @@ use anyhow::Result;
 use afarepart::baselines::{
     greedy_latency_mapping, random_search_mapping, CnnParted, FaultUnaware,
 };
-use afarepart::config::ExperimentConfig;
 use afarepart::coordinator::OfflineRunner;
 use afarepart::experiment::Experiment;
 use afarepart::faults::FaultScenario;
-use afarepart::nsga2::Nsga2Config;
 use afarepart::partition::Mapping;
 use afarepart::util::fmt::{pct, Table};
 
 fn main() -> Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "squeezenet".into());
-    let cfg = ExperimentConfig {
-        model,
-        fault_rate: 0.2,
-        scenario: FaultScenario::InputWeight,
-        eval_limit: 128,
-        nsga2: Nsga2Config { pop_size: 24, generations: 12, ..Default::default() },
-        ..Default::default()
-    };
-    let exp = Experiment::load(&cfg)?;
+    let exp = Experiment::builder()
+        .model(&model)
+        .fault_rate(0.2)
+        .scenario(FaultScenario::InputWeight)
+        .eval_limit(128)
+        .pop(24)
+        .gens(12)
+        .build()?;
+    let cfg = exp.config().clone();
     println!(
         "# strategy comparison: {} at FR={} ({})",
         cfg.model,

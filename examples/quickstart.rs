@@ -1,40 +1,43 @@
 //! Quickstart: the 60-second tour of the AFarePart public API.
 //!
-//! Loads the alexnet artifact, runs a small offline optimization with the
-//! paper's three objectives, and prints the Pareto front + deployed P*.
+//! Builds an experiment with the declarative builder (model, fault
+//! environment, optimizer budget in one fluent chain), runs a small
+//! offline optimization with the paper's three objectives, and prints
+//! the Pareto front + deployed P*.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
 use anyhow::Result;
 
-use afarepart::config::ExperimentConfig;
 use afarepart::coordinator::OfflineRunner;
 use afarepart::experiment::Experiment;
 use afarepart::faults::FaultScenario;
-use afarepart::nsga2::Nsga2Config;
 use afarepart::partition::Mapping;
 use afarepart::util::fmt::pct;
 
 fn main() -> Result<()> {
-    // 1. Configure: model, fault environment, optimizer budget.
-    let cfg = ExperimentConfig {
-        model: "alexnet".into(),
-        fault_rate: 0.2,                      // 20% per-bit flip probability
-        scenario: FaultScenario::InputWeight, // faults in both domains
-        eval_limit: 64,                       // accuracy eval subset
-        nsga2: Nsga2Config { pop_size: 24, generations: 10, ..Default::default() },
-        ..Default::default()
-    };
-
-    // 2. Load artifacts: compiles the AOT HLO once, loads weights + eval set.
-    let exp = Experiment::load(&cfg)?;
+    // 1. Describe the experiment declaratively and load it. The builder
+    //    is a thin veneer over `spec::ExperimentSpec` — everything here
+    //    (and much more: platform topology, drift schedules, selection
+    //    policy) can equally come from one JSON file via
+    //    `ExperimentSpec::from_file` + `Experiment::from_spec`.
+    //    See docs/spec.md for the schema.
+    let exp = Experiment::builder()
+        .model("alexnet")
+        .fault_rate(0.2)                      // 20% per-bit flip probability
+        .scenario(FaultScenario::InputWeight) // faults in both domains
+        .eval_limit(64)                       // accuracy eval subset
+        .pop(24)
+        .gens(10)
+        .build()?; // compiles the AOT HLO once, loads weights + eval set
     println!(
         "loaded {} (clean quantized top-1 = {})",
         exp.model.manifest.model,
         pct(exp.clean_acc)
     );
+    let cfg = exp.config().clone();
 
-    // 3. Offline phase (paper Algorithm 1, lines 1-12): evolve mappings.
+    // 2. Offline phase (paper Algorithm 1, lines 1-12): evolve mappings.
     let mut evaluator = exp.partition_evaluator(cfg.scenario);
     let runner = OfflineRunner { nsga2: cfg.nsga2.clone(), ..Default::default() };
     let outcome = runner.run(&mut evaluator, vec![], |gs| {
@@ -45,7 +48,7 @@ fn main() -> Result<()> {
         );
     })?;
 
-    // 4. Inspect the Pareto front and the deployed mapping.
+    // 3. Inspect the Pareto front and the deployed mapping.
     println!("\nPareto front ({} partitions):", outcome.front.len());
     for ind in &outcome.front {
         println!(
@@ -61,7 +64,7 @@ fn main() -> Result<()> {
         outcome.deployed.display()
     );
 
-    // 5. Compare against the naive all-on-one-device mappings.
+    // 4. Compare against the naive all-on-one-device mappings.
     let n = exp.model.num_units();
     for (name, m) in [("all-eyeriss", Mapping::all_on(0, n)), ("all-simba", Mapping::all_on(1, n))] {
         let acc = evaluator.faulty_accuracy(&m)?;

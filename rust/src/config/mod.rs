@@ -1,14 +1,17 @@
-//! Experiment configuration: typed struct with JSON-file loading, CLI and
-//! environment overrides (precedence: CLI > env > file > defaults).
+//! Flat experiment configuration: the runtime view the harness, benches
+//! and examples consume directly.
+//!
+//! This struct is plain data. Loading it from JSON, environment
+//! variables and CLI flags — and the precedence between those layers
+//! (CLI > env > file > defaults) — lives in exactly one place:
+//! [`crate::spec::ExperimentSpec::resolve`]. Construct an
+//! `ExperimentConfig` either literally (`..Default::default()`, as the
+//! benches do) or via [`crate::spec::ExperimentSpec::to_config`].
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{Context, Result};
-
-use crate::cli::Args;
 use crate::faults::FaultScenario;
 use crate::nsga2::Nsga2Config;
-use crate::util::json::{self, Value};
 
 /// Full experiment configuration.
 #[derive(Clone, Debug)]
@@ -64,169 +67,29 @@ impl Default for ExperimentConfig {
     }
 }
 
-impl ExperimentConfig {
-    /// Load from a JSON config file (all keys optional).
-    pub fn from_file(path: &Path) -> Result<ExperimentConfig> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading config {}", path.display()))?;
-        let v = json::parse(&text).context("config: invalid json")?;
-        let mut cfg = ExperimentConfig::default();
-        cfg.apply_json(&v)?;
-        Ok(cfg)
-    }
-
-    fn apply_json(&mut self, v: &Value) -> Result<()> {
-        if let Some(s) = v.get("artifacts_dir").and_then(Value::as_str) {
-            self.artifacts_dir = PathBuf::from(s);
-        }
-        if let Some(s) = v.get("model").and_then(Value::as_str) {
-            self.model = s.to_string();
-        }
-        if let Some(x) = v.get("fault_rate").and_then(Value::as_f64) {
-            self.fault_rate = x as f32;
-        }
-        if let Some(s) = v.get("scenario").and_then(Value::as_str) {
-            self.scenario = FaultScenario::parse(s)
-                .with_context(|| format!("config: bad scenario {s:?}"))?;
-        }
-        if let Some(x) = v.get("pop_size").and_then(Value::as_usize) {
-            self.nsga2.pop_size = x;
-        }
-        if let Some(x) = v.get("generations").and_then(Value::as_usize) {
-            self.nsga2.generations = x;
-        }
-        if let Some(x) = v.get("mutation_prob").and_then(Value::as_f64) {
-            self.nsga2.mutation_prob = x;
-        }
-        if let Some(x) = v.get("crossover_prob").and_then(Value::as_f64) {
-            self.nsga2.crossover_prob = x;
-        }
-        if let Some(x) = v.get("theta").and_then(Value::as_f64) {
-            self.theta = x;
-        }
-        if let Some(x) = v.get("eval_limit").and_then(Value::as_usize) {
-            self.eval_limit = x;
-        }
-        if let Some(x) = v.get("dacc_batches").and_then(Value::as_usize) {
-            self.dacc_batches = x;
-        }
-        if let Some(b) = v.get("surrogate").and_then(Value::as_bool) {
-            self.surrogate = b;
-        }
-        if let Some(x) = v.get("eval_threads").and_then(Value::as_usize) {
-            self.eval_threads = x;
-        }
-        if let Some(b) = v.get("link_cost").and_then(Value::as_bool) {
-            self.link_cost = b;
-        }
-        if let Some(x) = v.get("lat_budget").and_then(Value::as_f64) {
-            self.lat_budget = x;
-        }
-        if let Some(x) = v.get("energy_budget").and_then(Value::as_f64) {
-            self.energy_budget = x;
-        }
-        if let Some(x) = v.get("seed").and_then(Value::as_u64) {
-            self.seed = x;
-            self.nsga2.seed = x;
-        }
-        Ok(())
-    }
-
-    /// Apply environment overrides (AFARE_POP, AFARE_GENS, AFARE_EVAL_LIMIT)
-    /// — used to shrink bench budgets without touching code.
-    pub fn apply_env(&mut self) {
-        let getenv = |k: &str| std::env::var(k).ok();
-        if let Some(v) = getenv("AFARE_POP").and_then(|v| v.parse().ok()) {
-            self.nsga2.pop_size = v;
-        }
-        if let Some(v) = getenv("AFARE_GENS").and_then(|v| v.parse().ok()) {
-            self.nsga2.generations = v;
-        }
-        if let Some(v) = getenv("AFARE_EVAL_LIMIT").and_then(|v| v.parse().ok()) {
-            self.eval_limit = v;
-        }
-        if let Some(v) = getenv("AFARE_EVAL_THREADS").and_then(|v| v.parse().ok()) {
-            self.eval_threads = v;
-        }
-    }
-
-    /// Apply CLI overrides.
-    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
-        if let Some(p) = args.get("config") {
-            let file_cfg = ExperimentConfig::from_file(Path::new(p))?;
-            *self = file_cfg;
-        }
-        if let Some(m) = args.get("model") {
-            self.model = m.to_string();
-        }
-        if let Some(a) = args.get("artifacts") {
-            self.artifacts_dir = PathBuf::from(a);
-        }
-        self.fault_rate = args.get_f32("fault-rate", self.fault_rate);
-        if let Some(s) = args.get("scenario") {
-            self.scenario =
-                FaultScenario::parse(s).with_context(|| format!("bad --scenario {s:?}"))?;
-        }
-        self.nsga2.pop_size = args.get_usize("pop", self.nsga2.pop_size);
-        self.nsga2.generations = args.get_usize("gens", self.nsga2.generations);
-        self.theta = args.get_f64("theta", self.theta);
-        self.eval_limit = args.get_usize("eval-limit", self.eval_limit);
-        self.dacc_batches = args.get_usize("dacc-batches", self.dacc_batches);
-        self.eval_threads = args.get_usize("eval-threads", self.eval_threads);
-        if args.has_flag("surrogate") {
-            self.surrogate = true;
-        }
-        if args.has_flag("link-cost") {
-            self.link_cost = true;
-        }
-        let seed = args.get_u64("seed", self.seed);
-        self.seed = seed;
-        self.nsga2.seed = seed;
-        Ok(())
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn json_overrides_defaults() {
-        let mut cfg = ExperimentConfig::default();
-        let v = json::parse(
-            r#"{"model": "resnet18", "fault_rate": 0.3, "scenario": "weight-only",
-                "pop_size": 24, "generations": 12, "surrogate": true, "seed": 99,
-                "eval_threads": 4}"#,
-        )
-        .unwrap();
-        cfg.apply_json(&v).unwrap();
-        assert_eq!(cfg.model, "resnet18");
-        assert!((cfg.fault_rate - 0.3).abs() < 1e-6);
-        assert_eq!(cfg.scenario, FaultScenario::WeightOnly);
-        assert_eq!(cfg.nsga2.pop_size, 24);
-        assert!(cfg.surrogate);
-        assert_eq!(cfg.nsga2.seed, 99);
-        assert_eq!(cfg.eval_threads, 4);
+    fn defaults_are_the_paper_setup() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.model, "alexnet");
+        assert!((cfg.fault_rate - 0.2).abs() < 1e-6);
+        assert_eq!(cfg.scenario, FaultScenario::InputWeight);
+        assert_eq!((cfg.nsga2.pop_size, cfg.nsga2.generations), (60, 60));
+        assert_eq!(cfg.seed, cfg.nsga2.seed);
     }
 
     #[test]
-    fn bad_scenario_rejected() {
-        let mut cfg = ExperimentConfig::default();
-        let v = json::parse(r#"{"scenario": "bogus"}"#).unwrap();
-        assert!(cfg.apply_json(&v).is_err());
-    }
-
-    #[test]
-    fn cli_overrides() {
-        let raw: Vec<String> = ["offline", "--model", "squeezenet", "--pop", "10", "--surrogate"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
-        let args = Args::parse(&raw, &["surrogate", "link-cost"]);
-        let mut cfg = ExperimentConfig::default();
-        cfg.apply_args(&args).unwrap();
-        assert_eq!(cfg.model, "squeezenet");
-        assert_eq!(cfg.nsga2.pop_size, 10);
-        assert!(cfg.surrogate);
+    fn spec_is_the_loader() {
+        // the JSON / env / CLI layering lives in crate::spec; the flat
+        // config it lowers to must agree with these defaults
+        let spec_cfg = crate::spec::ExperimentSpec::default().to_config();
+        let cfg = ExperimentConfig::default();
+        assert_eq!(spec_cfg.model, cfg.model);
+        assert_eq!(spec_cfg.eval_limit, cfg.eval_limit);
+        assert_eq!(spec_cfg.nsga2.pop_size, cfg.nsga2.pop_size);
+        assert_eq!(spec_cfg.seed, cfg.seed);
     }
 }

@@ -10,6 +10,10 @@ pub struct Metrics {
     pub samples_served: usize,
     pub reconfigurations: usize,
     pub reopt_evaluations: usize,
+    /// Speculative canary batches discarded because a reconfiguration
+    /// changed the mapping while they were in flight (pipelined serving
+    /// only; always 0 at lookahead = 1).
+    pub speculative_discarded: usize,
     /// ΔAcc-cache epochs closed by environment rollovers, with their
     /// summed traffic (the lifetime view the per-epoch counters lose).
     pub cache_epochs_closed: usize,

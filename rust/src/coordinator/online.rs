@@ -7,14 +7,35 @@
 //! `A_clean − A_rolling > θ` the coordinator re-invokes NSGA-II with the
 //! *current* environment rates ("RunNSGAIIWithCurrentStats"), seeded with
 //! the incumbent mapping, and swaps in the new P'.
+//!
+//! # Batched canary traffic
+//!
+//! Canary batches flow through the inference server as a *pipeline*: up
+//! to `lookahead` future ticks are speculatively submitted ahead of the
+//! tick being consumed, so client-side batch preparation overlaps the
+//! server's PJRT execution instead of strictly alternating with it (the
+//! ROADMAP's "batch the monitor's PJRT traffic through the same engine"
+//! item — the serving analogue of the PR-1 batched ΔAcc engine, whose
+//! worker budget also provides the default depth).
+//!
+//! Determinism: the timeline is bitwise identical at any lookahead.
+//! Each tick's PRNG key is drawn exactly once, in tick order, and cached
+//! (speculation *pre*-draws keys but never re-draws them); a tick's
+//! rates depend only on its timestamp; and when a reconfiguration
+//! changes the mapping, every speculative batch submitted under the old
+//! mapping is discarded and resubmitted with the new mapping and the
+//! *same* cached key. At `lookahead = 1` the loop degenerates to the
+//! pre-pipelined serve-one-wait-one behaviour.
 
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::metrics::Metrics;
 use super::offline::optimize_partitions_counted;
-use super::server::InferenceServer;
+use super::server::{InferJob, InferReply, InferenceServer};
 use crate::dataset::EvalSet;
 use crate::faults::FaultEnv;
 use crate::nsga2::Nsga2Config;
@@ -44,6 +65,10 @@ pub struct OnlineConfig {
     /// Cooldown (ticks) after a reconfiguration before the next trigger.
     pub cooldown: usize,
     pub seed: u64,
+    /// Canary pipeline depth: how many ticks may be in flight at the
+    /// inference server at once. 1 = serve-one-wait-one (the legacy
+    /// loop); results are bitwise identical at any depth.
+    pub lookahead: usize,
 }
 
 impl Default for OnlineConfig {
@@ -63,6 +88,7 @@ impl Default for OnlineConfig {
             energy_budget: 4.0,
             cooldown: 10,
             seed: 11,
+            lookahead: 1,
         }
     }
 }
@@ -114,6 +140,8 @@ impl OnlineRunner<'_, '_> {
         let sample_len = eval.h * eval.w * eval.c;
         let n_batches_avail = eval.n / batch;
         assert!(n_batches_avail > 0, "eval set smaller than a batch");
+        let lookahead = self.cfg.lookahead.max(1);
+        let tick_seconds = self.cfg.tick_seconds;
 
         let mut mapping = initial;
         let mut monitor = RollingMean::new(self.cfg.window);
@@ -122,25 +150,72 @@ impl OnlineRunner<'_, '_> {
         let mut rng = Rng::new(self.cfg.seed);
         let mut cooldown = 0usize;
 
+        // Per-tick PRNG keys, drawn lazily but exactly once each and in
+        // strictly increasing tick order — speculation must consume the
+        // PRNG in the same order as the serial loop.
+        let mut keys: Vec<[u32; 2]> = Vec::with_capacity(self.cfg.ticks);
+        // In-flight speculative canary batches, in tick order.
+        let mut pending: VecDeque<(usize, Receiver<InferReply>)> = VecDeque::new();
+        // Next tick not yet submitted to the server.
+        let mut next_submit = 0usize;
+
+        // Submit one canary batch for `tick` under `mapping`.
+        let submit = |tick: usize,
+                      mapping: &Mapping,
+                      keys: &mut Vec<[u32; 2]>,
+                      rng: &mut Rng,
+                      server: &InferenceServer,
+                      scenario: crate::faults::FaultScenario|
+         -> Result<Receiver<InferReply>> {
+            while keys.len() <= tick {
+                keys.push([rng.next_u32(), rng.next_u32()]);
+            }
+            let t_s = tick as f64 * tick_seconds;
+            let rates = crate::faults::RateVectors::from_mapping(
+                &mapping.0,
+                &env.dev_w_rates(t_s),
+                &env.dev_a_rates(t_s),
+                scenario,
+            );
+            let bi = tick % n_batches_avail;
+            let images = eval.batch_images(bi * batch, batch).to_vec();
+            debug_assert_eq!(images.len(), batch * sample_len);
+            let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+            server.submit(InferJob {
+                images,
+                n_valid: batch,
+                rates,
+                key: keys[tick],
+                reply: reply_tx,
+            })?;
+            Ok(reply_rx)
+        };
+
         for tick in 0..self.cfg.ticks {
+            // keep up to `lookahead` ticks in flight
+            while next_submit < self.cfg.ticks && next_submit < tick + lookahead {
+                let rx = submit(
+                    next_submit,
+                    &mapping,
+                    &mut keys,
+                    &mut rng,
+                    self.server,
+                    self.evaluator.scenario,
+                )?;
+                pending.push_back((next_submit, rx));
+                next_submit += 1;
+            }
+
             let t_s = tick as f64 * self.cfg.tick_seconds;
             let dev_w = env.dev_w_rates(t_s);
             let dev_a = env.dev_a_rates(t_s);
 
-            // serve one labeled canary batch under the current mapping
-            let bi = tick % n_batches_avail;
-            let rates = crate::faults::RateVectors::from_mapping(
-                &mapping.0,
-                &dev_w,
-                &dev_a,
-                self.evaluator.scenario,
-            );
-            let images = eval.batch_images(bi * batch, batch).to_vec();
-            debug_assert_eq!(images.len(), batch * sample_len);
-            let key = [rng.next_u32(), rng.next_u32()];
-            let reply = self.server.infer_blocking(images, batch, rates, key)?;
+            let (served_tick, rx) = pending.pop_front().expect("pipeline starved");
+            debug_assert_eq!(served_tick, tick);
+            let reply = rx.recv().context("inference worker dropped reply")?;
             metrics.record_batch(batch, reply.exec_ms);
 
+            let bi = tick % n_batches_avail;
             let labels = eval.batch_labels(bi * batch, batch);
             let hits = reply
                 .preds
@@ -188,6 +263,14 @@ impl OnlineRunner<'_, '_> {
                 // immediately re-trigger
                 monitor = RollingMean::new(self.cfg.window);
                 cooldown = self.cfg.cooldown;
+                if reconfigured {
+                    // speculative batches were computed under the old
+                    // mapping: discard and resubmit from tick+1 with the
+                    // new mapping and the *same* cached per-tick keys
+                    metrics.speculative_discarded += pending.len();
+                    pending.clear();
+                    next_submit = tick + 1;
+                }
             }
 
             let point = TimelinePoint {

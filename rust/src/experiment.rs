@@ -1,16 +1,19 @@
 //! Experiment harness: wires artifacts → PJRT runtime → eval set →
-//! partition evaluator for a given [`ExperimentConfig`]. Shared by the
-//! CLI, the examples and every bench.
+//! partition evaluator for a given [`ExperimentConfig`] (or, preferably,
+//! a declarative [`ExperimentSpec`] via [`Experiment::from_spec`] /
+//! [`Experiment::builder`]). Shared by the CLI, the examples and every
+//! bench.
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::ExperimentConfig;
 use crate::dataset::EvalSet;
-use crate::faults::{DeviceFaultProfile, FaultEnv, FaultScenario};
+use crate::faults::{DeviceFaultProfile, DriftComponent, FaultEnv, FaultScenario};
 use crate::hw::Platform;
 use crate::model::Manifest;
 use crate::partition::{DaccMode, EngineConfig, PartitionEvaluator, SensitivityTable};
 use crate::runtime::{AccuracyEvaluator, ArtifactIndex, CompiledModel, Runtime};
+use crate::spec::{ExperimentSpec, PlatformSpec};
 
 /// A fully-loaded experiment: compiled model, eval data, platform.
 pub struct Experiment {
@@ -21,6 +24,10 @@ pub struct Experiment {
     pub acc_eval: AccuracyEvaluator,
     pub platform: Platform,
     pub profiles: Vec<DeviceFaultProfile>,
+    /// Drift stack of the fault environment (empty = static env). Set by
+    /// [`Experiment::from_spec`]; the legacy [`Experiment::load`] path
+    /// leaves it empty.
+    pub drift: Vec<DriftComponent>,
     /// Clean (zero-rate) quantized accuracy measured on this eval subset.
     pub clean_acc: f64,
     pub sensitivity: Option<SensitivityTable>,
@@ -28,6 +35,41 @@ pub struct Experiment {
 }
 
 impl Experiment {
+    /// Start a declarative builder over the default spec — the
+    /// replacement for mutate-an-`ExperimentConfig`-then-`load`.
+    ///
+    /// ```no_run
+    /// # fn main() -> anyhow::Result<()> {
+    /// use afarepart::experiment::Experiment;
+    /// use afarepart::faults::FaultScenario;
+    /// let exp = Experiment::builder()
+    ///     .model("alexnet")
+    ///     .fault_rate(0.2)
+    ///     .scenario(FaultScenario::InputWeight)
+    ///     .pop(24)
+    ///     .gens(10)
+    ///     .build()?;
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder { spec: ExperimentSpec::default() }
+    }
+
+    /// Load everything a spec describes: artifacts for `spec.model`, the
+    /// declared platform topology + fault profiles, and the drift stack
+    /// (validated against the platform: a component targeting a device
+    /// the platform doesn't have is an error, not a silent no-op).
+    pub fn from_spec(spec: &ExperimentSpec) -> Result<Experiment> {
+        let mut exp = Experiment::load(&spec.to_config())?;
+        let (platform, profiles) = spec.platform.build();
+        let env = spec.fault_env.build(profiles)?;
+        exp.platform = platform;
+        exp.profiles = env.profiles;
+        exp.drift = env.drift;
+        Ok(exp)
+    }
+
     /// Load everything for `cfg` (compiles the model's HLO once).
     pub fn load(cfg: &ExperimentConfig) -> Result<Experiment> {
         let index = ArtifactIndex::load(&cfg.artifacts_dir)?;
@@ -50,6 +92,7 @@ impl Experiment {
             acc_eval,
             platform: Platform::default_two_device(),
             profiles: DeviceFaultProfile::default_two_device(),
+            drift: Vec::new(),
             clean_acc,
             sensitivity: None,
             cfg: cfg.clone(),
@@ -60,9 +103,15 @@ impl Experiment {
         &self.cfg
     }
 
-    /// The static fault environment of the offline phase.
+    /// The fault environment: base rate + profiles + drift stack. The
+    /// offline phase samples it at t = 0; the online phase follows it
+    /// over time.
     pub fn fault_env(&self) -> FaultEnv {
-        FaultEnv::constant(self.cfg.fault_rate, self.profiles.clone())
+        FaultEnv {
+            base_rate: self.cfg.fault_rate,
+            profiles: self.profiles.clone(),
+            drift: self.drift.clone(),
+        }
     }
 
     /// Measure (and cache) the layer sensitivity table for surrogate mode.
@@ -97,6 +146,18 @@ impl Experiment {
     /// results are identical at any thread count.
     pub fn partition_evaluator(&self, scenario: FaultScenario) -> PartitionEvaluator<'_> {
         let env = self.fault_env();
+        self.partition_evaluator_with_rates(scenario, env.dev_w_rates(0.0), env.dev_a_rates(0.0))
+    }
+
+    /// Like [`Experiment::partition_evaluator`] but under explicit
+    /// per-device rates — the campaign runner and the online phase probe
+    /// the environment at arbitrary times.
+    pub fn partition_evaluator_with_rates(
+        &self,
+        scenario: FaultScenario,
+        dev_w: Vec<f32>,
+        dev_a: Vec<f32>,
+    ) -> PartitionEvaluator<'_> {
         let dacc = match (&self.cfg.surrogate, &self.sensitivity) {
             (true, Some(table)) => DaccMode::Surrogate(table),
             _ => DaccMode::Exact {
@@ -109,8 +170,8 @@ impl Experiment {
         PartitionEvaluator::new(
             &self.model.manifest,
             &self.platform,
-            env.dev_w_rates(0.0),
-            env.dev_a_rates(0.0),
+            dev_w,
+            dev_a,
             scenario,
             self.clean_acc,
             self.cfg.link_cost,
@@ -122,5 +183,113 @@ impl Experiment {
     /// Image dims of the eval set (h, w, c).
     pub fn img_dims(&self) -> (usize, usize, usize) {
         (self.eval_set.h, self.eval_set.w, self.eval_set.c)
+    }
+}
+
+/// Fluent construction of an [`Experiment`] over an [`ExperimentSpec`] —
+/// replaces the mutate-an-`ExperimentConfig`-then-`load` idiom. Every
+/// method maps onto one spec field; [`ExperimentBuilder::spec`] exposes
+/// the whole document for anything without a shorthand.
+pub struct ExperimentBuilder {
+    spec: ExperimentSpec,
+}
+
+impl ExperimentBuilder {
+    /// Start from an existing spec instead of the defaults.
+    pub fn from_spec(spec: ExperimentSpec) -> ExperimentBuilder {
+        ExperimentBuilder { spec }
+    }
+
+    pub fn model(mut self, model: &str) -> Self {
+        self.spec.model = model.to_string();
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.spec.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn fault_rate(mut self, fr: f32) -> Self {
+        self.spec.fault_env.fault_rate = fr;
+        self
+    }
+
+    pub fn scenario(mut self, scenario: FaultScenario) -> Self {
+        self.spec.fault_env.scenario = scenario;
+        self
+    }
+
+    /// Replace the drift stack (see [`DriftComponent`]).
+    pub fn drift(mut self, components: Vec<DriftComponent>) -> Self {
+        self.spec.fault_env.drift = components;
+        self
+    }
+
+    /// Replace the platform topology (see [`PlatformSpec`]).
+    pub fn platform(mut self, platform: PlatformSpec) -> Self {
+        self.spec.platform = platform;
+        self
+    }
+
+    pub fn pop(mut self, pop_size: usize) -> Self {
+        self.spec.optimizer.pop_size = pop_size;
+        self
+    }
+
+    pub fn gens(mut self, generations: usize) -> Self {
+        self.spec.optimizer.generations = generations;
+        self
+    }
+
+    pub fn eval_limit(mut self, n: usize) -> Self {
+        self.spec.eval_limit = n;
+        self
+    }
+
+    pub fn dacc_batches(mut self, n: usize) -> Self {
+        self.spec.dacc_batches = n;
+        self
+    }
+
+    pub fn surrogate(mut self, on: bool) -> Self {
+        self.spec.surrogate = on;
+        self
+    }
+
+    pub fn eval_threads(mut self, n: usize) -> Self {
+        self.spec.eval_threads = n;
+        self
+    }
+
+    pub fn link_cost(mut self, on: bool) -> Self {
+        self.spec.link_cost = on;
+        self
+    }
+
+    pub fn theta(mut self, theta: f64) -> Self {
+        self.spec.online.theta = theta;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    /// Direct access to the underlying spec for fields without a
+    /// dedicated builder method (selection policy, online settings, …).
+    pub fn spec(&mut self) -> &mut ExperimentSpec {
+        &mut self.spec
+    }
+
+    /// The spec this builder has accumulated, without loading artifacts.
+    pub fn into_spec(self) -> ExperimentSpec {
+        self.spec
+    }
+
+    /// Load the experiment (compiles the model's HLO once).
+    pub fn build(self) -> Result<Experiment> {
+        Experiment::from_spec(&self.spec)
     }
 }

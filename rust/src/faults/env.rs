@@ -5,34 +5,85 @@
 //! ramp on one device, supply-noise oscillation, decay after mitigation).
 //! The online coordinator samples the environment each monitoring tick;
 //! a drift past the θ threshold is what triggers dynamic repartitioning.
+//!
+//! Drift is *composable*: the environment carries a stack of
+//! [`DriftComponent`]s, each targeting one device, and a device's rate
+//! multiplier at time `t` is the product of its components' multipliers.
+//! A step attack and a supply-noise sinusoid can therefore act on the
+//! same device simultaneously — the paper's Table II scenarios are all
+//! single-component stacks, but the campaign API (crate::spec) builds
+//! arbitrary ones.
 
 use super::profile::DeviceFaultProfile;
 
-/// How the environment fault rate evolves over time (t in seconds).
-#[derive(Clone, Debug)]
-pub enum DriftSchedule {
-    /// Constant ambient rate.
-    Constant,
-    /// Step attack: rate multiplies by `factor` on `device` at t >= at_s.
-    StepAttack { device: usize, at_s: f64, factor: f32 },
-    /// Sinusoidal supply noise on `device`: rate * (1 + amp*sin(2πt/period)).
-    Sinusoid { device: usize, period_s: f64, amp: f32 },
-    /// Exponential decay back to ambient after an incident at t=0.
-    Decay { device: usize, factor: f32, tau_s: f64 },
+/// The time-varying shape of one drift component (t in seconds).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DriftWave {
+    /// Step attack: rate multiplies by `factor` at t >= at_s.
+    Step { at_s: f64, factor: f32 },
+    /// Sinusoidal supply noise: rate * (1 + amp*sin(2πt/period)).
+    Sinusoid { period_s: f64, amp: f32 },
+    /// Exponential decay back to ambient after an incident at t=0:
+    /// rate * (1 + (factor-1)*exp(-t/tau)).
+    Decay { factor: f32, tau_s: f64 },
 }
 
-/// The complete fault environment: base rate, per-device profiles, drift.
+/// One drift component acting on one device. Components targeting the
+/// same device stack multiplicatively.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftComponent {
+    pub device: usize,
+    pub wave: DriftWave,
+}
+
+impl DriftComponent {
+    pub fn step(device: usize, at_s: f64, factor: f32) -> DriftComponent {
+        DriftComponent { device, wave: DriftWave::Step { at_s, factor } }
+    }
+
+    pub fn sinusoid(device: usize, period_s: f64, amp: f32) -> DriftComponent {
+        DriftComponent { device, wave: DriftWave::Sinusoid { period_s, amp } }
+    }
+
+    pub fn decay(device: usize, factor: f32, tau_s: f64) -> DriftComponent {
+        DriftComponent { device, wave: DriftWave::Decay { factor, tau_s } }
+    }
+
+    /// Rate multiplier this component contributes on `device` at time t.
+    fn mult(&self, device: usize, t_s: f64) -> f32 {
+        if device != self.device {
+            return 1.0;
+        }
+        match &self.wave {
+            DriftWave::Step { at_s, factor } => {
+                if t_s >= *at_s {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+            DriftWave::Sinusoid { period_s, amp } => {
+                1.0 + amp * (2.0 * std::f64::consts::PI * t_s / period_s).sin() as f32
+            }
+            DriftWave::Decay { factor, tau_s } => 1.0 + (factor - 1.0) * (-t_s / tau_s).exp() as f32,
+        }
+    }
+}
+
+/// The complete fault environment: base rate, per-device profiles, and a
+/// composable stack of drift components.
 #[derive(Clone, Debug)]
 pub struct FaultEnv {
     /// Environment fault rate FR (per-bit flip probability).
     pub base_rate: f32,
     pub profiles: Vec<DeviceFaultProfile>,
-    pub drift: DriftSchedule,
+    pub drift: Vec<DriftComponent>,
 }
 
 impl FaultEnv {
+    /// A static environment (no drift).
     pub fn constant(base_rate: f32, profiles: Vec<DeviceFaultProfile>) -> Self {
-        FaultEnv { base_rate, profiles, drift: DriftSchedule::Constant }
+        FaultEnv { base_rate, profiles, drift: Vec::new() }
     }
 
     pub fn num_devices(&self) -> usize {
@@ -40,30 +91,7 @@ impl FaultEnv {
     }
 
     fn drift_mult(&self, device: usize, t_s: f64) -> f32 {
-        match &self.drift {
-            DriftSchedule::Constant => 1.0,
-            DriftSchedule::StepAttack { device: d, at_s, factor } => {
-                if device == *d && t_s >= *at_s {
-                    *factor
-                } else {
-                    1.0
-                }
-            }
-            DriftSchedule::Sinusoid { device: d, period_s, amp } => {
-                if device == *d {
-                    1.0 + amp * (2.0 * std::f64::consts::PI * t_s / period_s).sin() as f32
-                } else {
-                    1.0
-                }
-            }
-            DriftSchedule::Decay { device: d, factor, tau_s } => {
-                if device == *d {
-                    1.0 + (factor - 1.0) * (-t_s / tau_s).exp() as f32
-                } else {
-                    1.0
-                }
-            }
-        }
+        self.drift.iter().map(|c| c.mult(device, t_s)).product()
     }
 
     /// Per-device weight fault rates at time t (clamped to [0,1]).
@@ -89,7 +117,7 @@ impl FaultEnv {
 mod tests {
     use super::*;
 
-    fn env(drift: DriftSchedule) -> FaultEnv {
+    fn env(drift: Vec<DriftComponent>) -> FaultEnv {
         FaultEnv {
             base_rate: 0.2,
             profiles: DeviceFaultProfile::default_two_device(),
@@ -99,7 +127,7 @@ mod tests {
 
     #[test]
     fn constant_env() {
-        let e = env(DriftSchedule::Constant);
+        let e = env(vec![]);
         let w = e.dev_w_rates(100.0);
         assert!((w[0] - 0.2).abs() < 1e-6);
         assert!((w[1] - 0.03).abs() < 1e-6);
@@ -107,7 +135,7 @@ mod tests {
 
     #[test]
     fn step_attack_fires_at_time() {
-        let e = env(DriftSchedule::StepAttack { device: 0, at_s: 10.0, factor: 2.0 });
+        let e = env(vec![DriftComponent::step(0, 10.0, 2.0)]);
         assert!((e.dev_w_rates(9.9)[0] - 0.2).abs() < 1e-6);
         assert!((e.dev_w_rates(10.0)[0] - 0.4).abs() < 1e-6);
         // other device untouched
@@ -116,13 +144,13 @@ mod tests {
 
     #[test]
     fn rates_clamped_to_unit_interval() {
-        let e = env(DriftSchedule::StepAttack { device: 0, at_s: 0.0, factor: 100.0 });
+        let e = env(vec![DriftComponent::step(0, 0.0, 100.0)]);
         assert!(e.dev_w_rates(1.0)[0] <= 1.0);
     }
 
     #[test]
     fn sinusoid_oscillates() {
-        let e = env(DriftSchedule::Sinusoid { device: 0, period_s: 4.0, amp: 0.5 });
+        let e = env(vec![DriftComponent::sinusoid(0, 4.0, 0.5)]);
         let up = e.dev_w_rates(1.0)[0]; // sin(π/2)=1
         let down = e.dev_w_rates(3.0)[0]; // sin(3π/2)=-1
         assert!(up > 0.28 && down < 0.12);
@@ -130,8 +158,34 @@ mod tests {
 
     #[test]
     fn decay_returns_to_ambient() {
-        let e = env(DriftSchedule::Decay { device: 0, factor: 3.0, tau_s: 1.0 });
+        let e = env(vec![DriftComponent::decay(0, 3.0, 1.0)]);
         assert!(e.dev_w_rates(0.0)[0] > 0.55);
         assert!((e.dev_w_rates(50.0)[0] - 0.2).abs() < 1e-3);
+    }
+
+    #[test]
+    fn components_stack_multiplicatively() {
+        // step×sinusoid on dev0 + an independent step on dev1
+        let e = env(vec![
+            DriftComponent::step(0, 10.0, 2.0),
+            DriftComponent::sinusoid(0, 4.0, 0.5),
+            DriftComponent::step(1, 5.0, 3.0),
+        ]);
+        // t=11: step active (×2), sin(2π·11/4)=sin(5.5π)=-1 (×0.5)
+        let w = e.dev_w_rates(11.0);
+        assert!((w[0] - 0.2 * 2.0 * 0.5).abs() < 1e-5, "dev0 stacked mult: {}", w[0]);
+        assert!((w[1] - 0.03 * 3.0).abs() < 1e-6, "dev1 independent: {}", w[1]);
+        // before either step fires, only the sinusoid acts on dev0
+        let w0 = e.dev_w_rates(0.0);
+        assert!((w0[0] - 0.2).abs() < 1e-6);
+        assert!((w0[1] - 0.03).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_stack_is_identity() {
+        let e = env(vec![]);
+        for t in [0.0, 10.0, 1000.0] {
+            assert_eq!(e.dev_w_rates(t), e.dev_w_rates(0.0));
+        }
     }
 }

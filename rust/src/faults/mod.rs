@@ -12,7 +12,7 @@ mod env;
 mod profile;
 mod scenario;
 
-pub use env::{DriftSchedule, FaultEnv};
+pub use env::{DriftComponent, DriftWave, FaultEnv};
 pub use profile::DeviceFaultProfile;
 pub use scenario::FaultScenario;
 

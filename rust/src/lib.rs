@@ -34,4 +34,5 @@ pub mod model;
 pub mod nsga2;
 pub mod partition;
 pub mod runtime;
+pub mod spec;
 pub mod util;

@@ -8,23 +8,34 @@
 //!   sweep     layer-wise fault sensitivity sweep (§V-C methodology).
 //!   compare   run AFarePart vs CNNParted vs fault-unaware on one model
 //!             (one cell group of Table II).
+//!   campaign  expand a spec grid (models × fault-rates × scenarios ×
+//!             drift schedules) and run every cell through the batched
+//!             evaluation engine; one consolidated JSON report.
 //!   info      print artifact/platform information.
 //!
-//! Common options: --model, --fault-rate, --scenario, --pop, --gens,
-//! --eval-limit, --surrogate, --link-cost, --seed, --config <json>.
+//! Every run is described by a declarative [`ExperimentSpec`]
+//! (docs/spec.md) resolved through one precedence chain:
+//! CLI flags > AFARE_* env > --spec/--config file > defaults.
+//! Every subcommand supports `--format json [--out <file>]`.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use afarepart::baselines::{CnnParted, FaultUnaware};
 use afarepart::cli::Args;
-use afarepart::config::ExperimentConfig;
 use afarepart::coordinator::server::InferenceServer;
-use afarepart::coordinator::{OfflineRunner, OnlineConfig, OnlineRunner};
+use afarepart::coordinator::{OfflineOutcome, OnlineRunner};
 use afarepart::experiment::Experiment;
-use afarepart::faults::{DriftSchedule, FaultEnv, RateVectors};
+use afarepart::faults::RateVectors;
 use afarepart::model::Manifest;
 use afarepart::partition::{Mapping, PartitionEvaluator};
+use afarepart::spec::campaign::run_campaign;
+use afarepart::spec::outcome::{
+    emit_json, CompareReport, CompareRow, InfoReport, InfoUnit, OfflineReport, OnlineReport,
+    OutputFormat, SweepReport, SweepUnit,
+};
+use afarepart::spec::{CampaignSpec, ExperimentSpec};
 use afarepart::util::fmt::{pct, Table};
+use afarepart::util::json::Value;
 
 const BOOL_FLAGS: &[&str] = &["surrogate", "link-cost", "verbose", "help"];
 
@@ -35,29 +46,42 @@ fn main() -> Result<()> {
         print_help();
         return Ok(());
     }
-    let mut cfg = ExperimentConfig::default();
-    cfg.apply_args(&args)?;
-    cfg.apply_env();
+    let format = OutputFormat::from_args(&args)?;
 
     match args.subcommand.as_deref().unwrap() {
-        "offline" => cmd_offline(&cfg, &args),
-        "online" => cmd_online(&cfg, &args),
-        "sweep" => cmd_sweep(&cfg),
-        "compare" => cmd_compare(&cfg),
-        "info" => cmd_info(&cfg),
+        "campaign" => return cmd_campaign(&args, format),
+        "offline" | "online" | "sweep" | "compare" | "info" => {}
         other => {
             eprintln!("unknown subcommand {other:?}");
             print_help();
             std::process::exit(2);
         }
     }
+
+    // One resolution point for the whole binary: defaults < file < env < CLI.
+    let spec = ExperimentSpec::resolve(&args)?;
+    match args.subcommand.as_deref().unwrap() {
+        "offline" => cmd_offline(&spec, &args, format),
+        "online" => cmd_online(&spec, &args, format),
+        "sweep" => cmd_sweep(&spec, &args, format),
+        "compare" => cmd_compare(&spec, &args, format),
+        "info" => cmd_info(&spec, &args, format),
+        _ => unreachable!(),
+    }
 }
 
 fn print_help() {
     println!(
         "afarepart — accuracy-aware fault-resilient DNN partitioner\n\n\
-         USAGE: afarepart <offline|online|sweep|compare|info> [options]\n\n\
-         OPTIONS:\n\
+         USAGE: afarepart <offline|online|sweep|compare|campaign|info> [options]\n\n\
+         Every run is a declarative ExperimentSpec (see docs/spec.md).\n\
+         Precedence: CLI flags > AFARE_* env > --spec file > defaults.\n\n\
+         SPEC & OUTPUT:\n\
+           --spec <file.json>       load an ExperimentSpec first (--config is an alias;\n\
+                                    for campaign: a CampaignSpec {{base, grid}})\n\
+           --format <text|json>     output format (default text)\n\
+           --out <file>             write the JSON report to a file\n\n\
+         EXPERIMENT:\n\
            --model <alexnet|squeezenet|resnet18>   model artifact (default alexnet)\n\
            --artifacts <dir>        artifacts directory (default ./artifacts)\n\
            --fault-rate <f>         environment fault rate FR (default 0.2)\n\
@@ -65,64 +89,46 @@ fn print_help() {
            --pop <n> --gens <n>     NSGA-II budget (default 60/60)\n\
            --eval-limit <n>         eval samples for exact dAcc (default 256)\n\
            --eval-threads <n>       ΔAcc eval engine workers (0 = auto; same results at any n)\n\
-           --theta <f>              online accuracy-drop threshold (default 0.05)\n\
-           --ticks <n>              online serving ticks (default 120)\n\
            --surrogate              use the layer-sensitivity surrogate\n\
            --link-cost              include link costs in objectives\n\
-           --seed <n>               master seed\n\
-           --config <file.json>     load a config file first"
+           --policy <p>             P* selection: min-dacc-within-budget | min-dacc | knee\n\
+           --lat-budget <f> --energy-budget <f>    selection budget factors (2.0 / 3.0)\n\
+           --seed <n>               master seed\n\n\
+         ONLINE:\n\
+           --theta <f>              accuracy-drop threshold (default 0.05)\n\
+           --ticks <n>              serving ticks (default 120)\n\
+           --lookahead <n>          canary pipeline depth (0 = derive from eval-threads;\n\
+                                    timeline is identical at any depth)\n\n\
+         The platform topology (device list, fault multipliers, link) and\n\
+         composable drift schedules are spec-file-only — see docs/spec.md."
     );
 }
 
-fn cmd_info(cfg: &ExperimentConfig) -> Result<()> {
-    let exp = Experiment::load(cfg)?;
-    println!("platform: {}", exp.runtime.platform());
-    println!("model: {} ({} units)", exp.model.manifest.model, exp.model.num_units());
-    println!(
-        "precision: int{}  faulty LSBs: {}  batch: {}",
-        exp.model.manifest.precision, exp.model.manifest.faulty_bits, exp.model.manifest.batch
-    );
-    println!("clean quantized top-1 (eval subset): {}", pct(exp.clean_acc));
-    let mut t = Table::new(&["unit", "kind", "MACs", "w_bytes", "eyeriss ms/mJ", "simba ms/mJ"]);
-    let lat = exp.platform.latency_table(&exp.model.manifest.units);
-    let en = exp.platform.energy_table(&exp.model.manifest.units);
-    for (i, u) in exp.model.manifest.units.iter().enumerate() {
-        t.row(vec![
-            u.name.clone(),
-            u.kind.clone(),
-            u.macs.to_string(),
-            u.w_bytes.to_string(),
-            format!("{:.3}/{:.4}", lat[i][0], en[i][0]),
-            format!("{:.3}/{:.4}", lat[i][1], en[i][1]),
-        ]);
+/// In text mode with `--out`, the JSON report is still written to the
+/// file; in json mode it goes to `--out` or stdout.
+fn emit(format: OutputFormat, args: &Args, report: &Value) -> Result<()> {
+    match (format, args.get("out")) {
+        (OutputFormat::Json, out) => emit_json(report, out),
+        (OutputFormat::Text, Some(out)) => emit_json(report, Some(out)),
+        (OutputFormat::Text, None) => Ok(()),
     }
-    print!("{}", t.render());
-    Ok(())
 }
 
-fn cmd_offline(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
-    let verbose = args.has_flag("verbose");
-    let mut exp = Experiment::load(cfg)?;
-    if cfg.surrogate {
-        exp.measure_sensitivity(&[0.05, 0.1, 0.2, 0.4])?;
-    }
-    println!(
-        "offline: model={} FR={} scenario={} pop={} gens={} mode={} eval-threads={}",
-        cfg.model,
-        cfg.fault_rate,
-        cfg.scenario.label(),
-        cfg.nsga2.pop_size,
-        cfg.nsga2.generations,
-        if cfg.surrogate { "surrogate" } else { "exact" },
-        exp.eval_threads(),
-    );
-    let mut ev = exp.partition_evaluator(cfg.scenario);
-    let runner = OfflineRunner {
-        nsga2: cfg.nsga2.clone(),
-        lat_budget: cfg.lat_budget,
-        energy_budget: cfg.energy_budget,
-    };
-    let out = runner.run(&mut ev, vec![], |gs| {
+/// Offline optimization under the spec's environment at t = 0, through
+/// the batched evaluation engine, deployed per the spec's selection
+/// policy.
+fn run_offline(spec: &ExperimentSpec, exp: &Experiment) -> Result<(OfflineOutcome, usize)> {
+    run_offline_verbose(spec, exp, false)
+}
+
+fn run_offline_verbose(
+    spec: &ExperimentSpec,
+    exp: &Experiment,
+    verbose: bool,
+) -> Result<(OfflineOutcome, usize)> {
+    let mut ev = exp.partition_evaluator(spec.fault_env.scenario);
+    let nsga2 = spec.optimizer.to_nsga2(spec.seed);
+    let out = spec.selection.optimize_and_deploy(&mut ev, &nsga2, |gs| {
         if verbose {
             println!(
                 "  gen {:3}  front={}  best: lat={:.2}ms en={:.3}mJ dAcc={}",
@@ -134,152 +140,231 @@ fn cmd_offline(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
             );
         }
     })?;
-    let mut t = Table::new(&["mapping", "latency ms", "energy mJ", "dAcc"]);
-    for ind in &out.front {
-        t.row(vec![
-            Mapping(ind.genome.clone()).display(),
-            format!("{:.2}", ind.objectives[0]),
-            format!("{:.3}", ind.objectives[1]),
-            pct(ind.objectives[2]),
-        ]);
-    }
-    println!("\nPareto front ({} solutions):", out.front.len());
-    print!("{}", t.render());
-    println!(
-        "\ndeployed P* = {}  (lat {:.2} ms, energy {:.3} mJ, dAcc {})",
-        out.deployed.display(),
-        out.deployed_objectives[0],
-        out.deployed_objectives[1],
-        pct(out.deployed_objectives[2]),
-    );
-    let (h, m, r) = out.cache;
-    println!(
-        "dAcc cache: {h} hits / {m} misses (hit rate {:.1}%) over {} evaluations",
-        r * 100.0,
-        out.evaluations
-    );
-    Ok(())
+    Ok((out, ev.parallelism()))
 }
 
-fn cmd_sweep(cfg: &ExperimentConfig) -> Result<()> {
-    let exp = Experiment::load(cfg)?;
-    let grid = [0.1f32, 0.2, 0.4];
-    println!(
-        "layer-wise fault sweep: model={} clean={} (eval {} samples)",
-        cfg.model,
-        pct(exp.clean_acc),
-        exp.acc_eval.samples(cfg.dacc_batches),
+/// Load the spec's experiment; in surrogate mode, measure the layer
+/// sensitivity table the evaluator composes (otherwise `--surrogate`
+/// would silently fall back to exact injection).
+fn load_experiment(spec: &ExperimentSpec) -> Result<Experiment> {
+    let mut exp = Experiment::from_spec(spec)?;
+    if spec.surrogate {
+        exp.measure_sensitivity(&[0.05, 0.1, 0.2, 0.4])?;
+    }
+    Ok(exp)
+}
+
+fn cmd_offline(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Result<()> {
+    let verbose = args.has_flag("verbose") && !format.is_json();
+    let exp = load_experiment(spec)?;
+    if !format.is_json() {
+        println!(
+            "offline: model={} FR={} scenario={} pop={} gens={} mode={} eval-threads={} policy={}",
+            spec.model,
+            spec.fault_env.fault_rate,
+            spec.fault_env.scenario.label(),
+            spec.optimizer.pop_size,
+            spec.optimizer.generations,
+            if spec.surrogate { "surrogate" } else { "exact" },
+            exp.eval_threads(),
+            spec.selection.policy.as_str(),
+        );
+    }
+    let (out, threads) = run_offline_verbose(spec, &exp, verbose)?;
+    let report = OfflineReport::from_outcome(
+        &spec.model,
+        spec.fault_env.scenario.label(),
+        spec.fault_env.fault_rate,
+        spec.optimizer.pop_size,
+        spec.optimizer.generations,
+        spec.surrogate,
+        threads,
+        &out,
     );
+    if !format.is_json() {
+        let mut t = Table::new(&["mapping", "latency ms", "energy mJ", "dAcc"]);
+        for ind in &out.front {
+            t.row(vec![
+                Mapping(ind.genome.clone()).display(),
+                format!("{:.2}", ind.objectives[0]),
+                format!("{:.3}", ind.objectives[1]),
+                pct(ind.objectives[2]),
+            ]);
+        }
+        println!("\nPareto front ({} solutions):", out.front.len());
+        print!("{}", t.render());
+        println!(
+            "\ndeployed P* = {}  (lat {:.2} ms, energy {:.3} mJ, dAcc {})",
+            out.deployed.display(),
+            out.deployed_objectives[0],
+            out.deployed_objectives[1],
+            pct(out.deployed_objectives[2]),
+        );
+        let (h, m, r) = out.cache;
+        println!(
+            "dAcc cache: {h} hits / {m} misses (hit rate {:.1}%) over {} evaluations",
+            r * 100.0,
+            out.evaluations
+        );
+    }
+    emit(format, args, &report.to_json())
+}
+
+fn cmd_sweep(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Result<()> {
+    let exp = Experiment::from_spec(spec)?;
+    let grid = [0.1f32, 0.2, 0.4];
+    if !format.is_json() {
+        println!(
+            "layer-wise fault sweep: model={} clean={} (eval {} samples)",
+            spec.model,
+            pct(exp.clean_acc),
+            exp.acc_eval.samples(spec.dacc_batches),
+        );
+    }
     let l = exp.model.num_units();
-    let mut t = Table::new(&["unit", "FR=0.1 w/a", "FR=0.2 w/a", "FR=0.4 w/a"]);
+    let mut units = Vec::with_capacity(l);
     for unit in 0..l {
-        let mut cells = vec![exp.model.manifest.units[unit].name.clone()];
+        let uc = &exp.model.manifest.units[unit];
+        let mut w_drop = Vec::with_capacity(grid.len());
+        let mut a_drop = Vec::with_capacity(grid.len());
         for &r in &grid {
             let mut rv = RateVectors::zeros(l);
             rv.w_rates[unit] = r;
-            let aw = exp.acc_eval.accuracy(&exp.model, &rv, 1, cfg.dacc_batches)?;
+            let aw = exp.acc_eval.accuracy(&exp.model, &rv, 1, spec.dacc_batches)?;
+            w_drop.push((exp.clean_acc - aw).max(0.0));
             let mut rv = RateVectors::zeros(l);
             rv.a_rates[unit] = r;
-            let aa = exp.acc_eval.accuracy(&exp.model, &rv, 1, cfg.dacc_batches)?;
-            cells.push(format!(
-                "{}/{}",
-                pct((exp.clean_acc - aw).max(0.0)),
-                pct((exp.clean_acc - aa).max(0.0))
-            ));
+            let aa = exp.acc_eval.accuracy(&exp.model, &rv, 1, spec.dacc_batches)?;
+            a_drop.push((exp.clean_acc - aa).max(0.0));
         }
-        t.row(cells);
+        units.push(SweepUnit { name: uc.name.clone(), kind: uc.kind.clone(), w_drop, a_drop });
     }
-    print!("{}", t.render());
-    Ok(())
+    let report = SweepReport {
+        model: spec.model.clone(),
+        clean_acc: exp.clean_acc,
+        rate_grid: grid.to_vec(),
+        units,
+    };
+    if !format.is_json() {
+        let mut t = Table::new(&["unit", "FR=0.1 w/a", "FR=0.2 w/a", "FR=0.4 w/a"]);
+        for u in &report.units {
+            let mut cells = vec![u.name.clone()];
+            for i in 0..grid.len() {
+                cells.push(format!("{}/{}", pct(u.w_drop[i]), pct(u.a_drop[i])));
+            }
+            t.row(cells);
+        }
+        print!("{}", t.render());
+    }
+    emit(format, args, &report.to_json())
 }
 
-fn cmd_compare(cfg: &ExperimentConfig) -> Result<()> {
-    let exp = Experiment::load(cfg)?;
-    println!(
-        "compare: model={} FR={} scenario={} (pop {}, gens {})",
-        cfg.model,
-        cfg.fault_rate,
-        cfg.scenario.label(),
-        cfg.nsga2.pop_size,
-        cfg.nsga2.generations
-    );
+fn cmd_compare(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Result<()> {
+    let exp = load_experiment(spec)?;
+    if !format.is_json() {
+        println!(
+            "compare: model={} FR={} scenario={} (pop {}, gens {})",
+            spec.model,
+            spec.fault_env.fault_rate,
+            spec.fault_env.scenario.label(),
+            spec.optimizer.pop_size,
+            spec.optimizer.generations
+        );
+    }
+    let scenario = spec.fault_env.scenario;
+    let nsga2 = spec.optimizer.to_nsga2(spec.seed);
     let mut rows = Vec::new();
 
     // CNNParted
-    let mut ev = exp.partition_evaluator(cfg.scenario);
-    let mapping = CnnParted::new(cfg.nsga2.clone()).partition(&mut ev)?;
-    rows.push(("CNNParted", describe(&mut ev, &mapping)?));
+    let mut ev = exp.partition_evaluator(scenario);
+    let mapping = CnnParted::new(nsga2.clone()).partition(&mut ev)?;
+    rows.push(describe("CNNParted", &mut ev, &mapping)?);
 
     // Fault-unaware
-    let mut ev = exp.partition_evaluator(cfg.scenario);
-    let mapping = FaultUnaware::new(cfg.nsga2.clone()).partition(&mut ev)?;
-    rows.push(("Flt-unaware", describe(&mut ev, &mapping)?));
+    let mut ev = exp.partition_evaluator(scenario);
+    let mapping = FaultUnaware::new(nsga2.clone()).partition(&mut ev)?;
+    rows.push(describe("Flt-unaware", &mut ev, &mapping)?);
 
     // AFarePart
-    let mut ev = exp.partition_evaluator(cfg.scenario);
-    let runner = OfflineRunner {
-        nsga2: cfg.nsga2.clone(),
-        lat_budget: cfg.lat_budget,
-        energy_budget: cfg.energy_budget,
+    let (out, _) = run_offline(spec, &exp)?;
+    let mut ev = exp.partition_evaluator(scenario);
+    rows.push(describe("AFarePart", &mut ev, &out.deployed)?);
+
+    let report = CompareReport {
+        model: spec.model.clone(),
+        scenario: scenario.label().to_string(),
+        fault_rate: spec.fault_env.fault_rate,
+        rows,
     };
-    let out = runner.run(&mut ev, vec![], |_| {})?;
-    rows.push(("AFarePart", describe(&mut ev, &out.deployed)?));
-
-    let mut t = Table::new(&["tool", "mapping", "acc (faulty)", "latency ms", "energy mJ"]);
-    for (name, (m, acc, lat, en)) in rows {
-        t.row(vec![name.to_string(), m, pct(acc), format!("{lat:.2}"), format!("{en:.3}")]);
+    if !format.is_json() {
+        let mut t = Table::new(&["tool", "mapping", "acc (faulty)", "latency ms", "energy mJ"]);
+        for r in &report.rows {
+            t.row(vec![
+                r.tool.clone(),
+                r.mapping.clone(),
+                pct(r.faulty_acc),
+                format!("{:.2}", r.latency_ms),
+                format!("{:.3}", r.energy_mj),
+            ]);
+        }
+        print!("{}", t.render());
     }
-    print!("{}", t.render());
-    Ok(())
+    emit(format, args, &report.to_json())
 }
 
-fn describe(ev: &mut PartitionEvaluator, mapping: &Mapping) -> Result<(String, f64, f64, f64)> {
-    Ok((
-        mapping.display(),
-        ev.faulty_accuracy(mapping)?,
-        ev.latency_ms(mapping),
-        ev.energy_mj(mapping),
-    ))
+fn describe(tool: &str, ev: &mut PartitionEvaluator, mapping: &Mapping) -> Result<CompareRow> {
+    Ok(CompareRow {
+        tool: tool.to_string(),
+        mapping: mapping.display(),
+        faulty_acc: ev.faulty_accuracy(mapping)?,
+        latency_ms: ev.latency_ms(mapping),
+        energy_mj: ev.energy_mj(mapping),
+    })
 }
 
-fn cmd_online(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
-    let ticks = args.get_usize("ticks", 120);
-    let exp = Experiment::load(cfg)?;
-    println!(
-        "online: model={} base FR={} θ={} ticks={ticks} (EM step attack on dev0 at t=30s)",
-        cfg.model, cfg.fault_rate, cfg.theta
-    );
+fn cmd_online(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Result<()> {
+    let exp = load_experiment(spec)?;
+    let online_cfg = spec.online.to_online_config(exp.eval_threads());
+    // The complete environment, drift stack included, comes from the
+    // spec (build() validates component device indices).
+    let env = spec.fault_env.build(exp.profiles.clone())?;
+    if !format.is_json() {
+        println!(
+            "online: model={} base FR={} θ={} ticks={} drift components={} lookahead={}",
+            spec.model,
+            spec.fault_env.fault_rate,
+            online_cfg.theta,
+            online_cfg.ticks,
+            env.drift.len(),
+            online_cfg.lookahead,
+        );
+    }
 
     // offline phase first for the initial P*
-    let mut ev = exp.partition_evaluator(cfg.scenario);
-    let runner = OfflineRunner {
-        nsga2: cfg.nsga2.clone(),
-        lat_budget: cfg.lat_budget,
-        energy_budget: cfg.energy_budget,
-    };
-    let initial = runner.run(&mut ev, vec![], |_| {})?.deployed;
-    println!("initial P* = {}", initial.display());
+    let (out, _) = run_offline(spec, &exp)?;
+    let initial = out.deployed;
+    if !format.is_json() {
+        println!("initial P* = {}", initial.display());
+    }
 
-    let manifest = Manifest::load(&exp.index.manifest_path(&cfg.model))?;
-    let server = InferenceServer::spawn(cfg.artifacts_dir.clone(), manifest, exp.img_dims())?;
-    let env = FaultEnv {
-        base_rate: cfg.fault_rate,
-        profiles: exp.profiles.clone(),
-        drift: DriftSchedule::StepAttack { device: 0, at_s: 30.0, factor: 2.0 },
-    };
-    // exact-mode re-optimization (see examples/online_reconfig.rs for why
-    // the surrogate is not enough); use --surrogate to override.
-    let mut reopt_ev = exp.partition_evaluator(cfg.scenario);
+    let manifest = Manifest::load(&exp.index.manifest_path(&spec.model))?;
+    let server = InferenceServer::spawn(spec.artifacts_dir.clone(), manifest, exp.img_dims())?;
+    // exact-mode re-optimization by default (see examples/online_reconfig.rs
+    // for why the surrogate is usually not enough); --surrogate switches the
+    // evaluator to the measured sensitivity table (load_experiment measured it).
+    let mut reopt_ev = exp.partition_evaluator(spec.fault_env.scenario);
 
-    let online_cfg = OnlineConfig { theta: cfg.theta, ticks, ..Default::default() };
+    let theta = online_cfg.theta;
+    let lookahead = online_cfg.lookahead;
     let mut runner = OnlineRunner {
         cfg: online_cfg,
         server: &server,
         evaluator: &mut reopt_ev,
         clean_acc: exp.clean_acc,
     };
-    let out = runner.run(&exp.eval_set, &env, initial, |p| {
-        if p.tick % 10 == 0 || p.reconfigured {
+    let quiet = format.is_json();
+    let out = runner.run(&exp.eval_set, &env, initial.clone(), |p| {
+        if !quiet && (p.tick % 10 == 0 || p.reconfigured) {
             println!(
                 "  t={:5.1}s FR(dev0)={:.2} acc={} rolling={} map={}{}",
                 p.sim_time_s,
@@ -291,20 +376,161 @@ fn cmd_online(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
             );
         }
     })?;
-    println!(
-        "\nserved {} batches; {} reconfigurations; final mapping {}",
-        out.metrics.batches_served,
-        out.metrics.reconfigurations,
-        out.final_mapping.display()
-    );
-    println!(
-        "dAcc cache lifetime: {} hits / {} misses across {} environment epoch(s)",
-        out.cache_lifetime.hits,
-        out.cache_lifetime.misses,
-        out.metrics.cache_epochs_closed + 1,
-    );
-    if let Some(s) = out.metrics.exec_summary() {
-        println!("PJRT exec: mean {:.2} ms  p95 {:.2} ms", s.mean, s.p95);
+    let report = OnlineReport::from_outcome(&spec.model, theta, lookahead, &initial, &out);
+    if !format.is_json() {
+        println!(
+            "\nserved {} batches; {} reconfigurations; final mapping {}",
+            out.metrics.batches_served,
+            out.metrics.reconfigurations,
+            out.final_mapping.display()
+        );
+        if out.metrics.speculative_discarded > 0 {
+            println!(
+                "speculative canary batches discarded on reconfiguration: {}",
+                out.metrics.speculative_discarded
+            );
+        }
+        println!(
+            "dAcc cache lifetime: {} hits / {} misses across {} environment epoch(s)",
+            out.cache_lifetime.hits,
+            out.cache_lifetime.misses,
+            out.metrics.cache_epochs_closed + 1,
+        );
+        if let Some(s) = out.metrics.exec_summary() {
+            println!("PJRT exec: mean {:.2} ms  p95 {:.2} ms", s.mean, s.p95);
+        }
     }
-    Ok(())
+    emit(format, args, &report.to_json())
+}
+
+fn cmd_info(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Result<()> {
+    let exp = Experiment::from_spec(spec)?;
+    let lat = exp.platform.latency_table(&exp.model.manifest.units);
+    let en = exp.platform.energy_table(&exp.model.manifest.units);
+    let device_names: Vec<String> = exp.profiles.iter().map(|p| p.device.clone()).collect();
+    let report = InfoReport {
+        platform: exp.runtime.platform(),
+        device_names: device_names.clone(),
+        model: exp.model.manifest.model.clone(),
+        num_units: exp.model.num_units(),
+        precision: exp.model.manifest.precision as usize,
+        faulty_bits: exp.model.manifest.faulty_bits as usize,
+        batch: exp.model.manifest.batch,
+        clean_acc: exp.clean_acc,
+        units: exp
+            .model
+            .manifest
+            .units
+            .iter()
+            .enumerate()
+            .map(|(i, u)| InfoUnit {
+                name: u.name.clone(),
+                kind: u.kind.clone(),
+                macs: u.macs,
+                w_bytes: u.w_bytes,
+                latency_ms: lat[i].clone(),
+                energy_mj: en[i].clone(),
+            })
+            .collect(),
+    };
+    if !format.is_json() {
+        println!("platform: {}", report.platform);
+        println!("devices: {}", device_names.join(", "));
+        println!("model: {} ({} units)", report.model, report.num_units);
+        println!(
+            "precision: int{}  faulty LSBs: {}  batch: {}",
+            report.precision, report.faulty_bits, report.batch
+        );
+        println!("clean quantized top-1 (eval subset): {}", pct(report.clean_acc));
+        let mut header: Vec<String> =
+            vec!["unit".into(), "kind".into(), "MACs".into(), "w_bytes".into()];
+        for d in &device_names {
+            header.push(format!("{d} ms/mJ"));
+        }
+        let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut t = Table::new(&header_refs);
+        for u in &report.units {
+            let mut cells = vec![
+                u.name.clone(),
+                u.kind.clone(),
+                u.macs.to_string(),
+                u.w_bytes.to_string(),
+            ];
+            for d in 0..device_names.len() {
+                cells.push(format!("{:.3}/{:.4}", u.latency_ms[d], u.energy_mj[d]));
+            }
+            t.row(cells);
+        }
+        print!("{}", t.render());
+    }
+    emit(format, args, &report.to_json())
+}
+
+fn cmd_campaign(args: &Args, format: OutputFormat) -> Result<()> {
+    let Some(path) = args.get("spec").or_else(|| args.get("config")) else {
+        bail!("campaign requires --spec <file.json> (a CampaignSpec: {{\"base\": ..., \"grid\": ...}})");
+    };
+    // Same precedence chain as every other subcommand, applied to the
+    // base spec (file < env < CLI) *before* the grid axes default from
+    // it — so `--fault-rate 0.4` reaches every cell unless the file's
+    // grid pins `fault_rates` explicitly.
+    let cspec = CampaignSpec::from_file_with(std::path::Path::new(path), |base| {
+        base.apply_env_with(|k| std::env::var(k).ok());
+        base.apply_args(args)
+    })?;
+
+    if !format.is_json() {
+        println!(
+            "campaign: {} models × {} fault-rates × {} scenarios × {} drifts = {} cells",
+            cspec.models.len(),
+            cspec.fault_rates.len(),
+            cspec.scenarios.len(),
+            cspec.drifts.len(),
+            cspec.num_cells(),
+        );
+    }
+    let quiet = format.is_json();
+    let report = run_campaign(&cspec, |i, total, cell| {
+        if !quiet {
+            println!(
+                "  [{}/{}] {} FR={} {} drift={}: P*={} dAcc={} ({} evals)",
+                i + 1,
+                total,
+                cell.offline.model,
+                cell.offline.fault_rate,
+                cell.offline.scenario,
+                cell.drift,
+                cell.offline.deployed.mapping,
+                pct(cell.offline.deployed.dacc),
+                cell.offline.evaluations,
+            );
+        }
+    })?;
+    if !format.is_json() {
+        let mut t = Table::new(&[
+            "model", "FR", "scenario", "drift", "P*", "lat ms", "energy mJ", "dAcc",
+        ]);
+        for c in &report.cells {
+            t.row(vec![
+                c.offline.model.clone(),
+                format!("{}", c.offline.fault_rate),
+                c.offline.scenario.clone(),
+                c.drift.clone(),
+                c.offline.deployed.mapping.clone(),
+                format!("{:.2}", c.offline.deployed.latency_ms),
+                format!("{:.3}", c.offline.deployed.energy_mj),
+                pct(c.offline.deployed.dacc),
+            ]);
+        }
+        print!("{}", t.render());
+        println!(
+            "{} cells, {} fitness evaluations ({} unique backend evals) in {:.1} s @ {} engine threads",
+            report.cells.len(),
+            report.total_evaluations,
+            report.total_backend_evals,
+            report.wall_ms / 1e3,
+            report.engine_threads,
+        );
+    }
+    emit(format, args, &report.to_json())
 }

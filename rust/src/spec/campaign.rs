@@ -1,0 +1,482 @@
+//! Campaign runner: expand a spec grid (models × fault-rates × scenarios
+//! × drift schedules) and drive every cell's offline optimization through
+//! the batched evaluation engine (PR 1), emitting one consolidated JSON
+//! report.
+//!
+//! Model names of the form `synthetic-L<n>` use the artifact-free
+//! fixtures of `bench::suite` (an `n`-unit manifest + sensitivity table
+//! with the exact-cost-shaped `SyntheticExact` ΔAcc backend), so
+//! campaigns run end-to-end without PJRT artifacts — the integration
+//! tests and CI exercise a 3-model × 2-scenario campaign this way. Real
+//! model names load artifacts exactly like `afarepart offline`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::outcome::OfflineReport;
+use super::schema::*;
+use super::ExperimentSpec;
+use crate::bench::suite::{synthetic_manifest, synthetic_sensitivity};
+use crate::experiment::Experiment;
+use crate::faults::{DriftComponent, FaultEnv, FaultScenario};
+use crate::partition::{DaccMode, EngineConfig, PartitionEvaluator};
+use crate::util::json::{self, Value};
+
+/// One drift schedule of the campaign grid: a named component stack plus
+/// the probe time at which cells under this schedule sample the
+/// environment (a step attack evaluated at `eval_at_s` past its onset
+/// sees the attacked rates; at 0 it sees ambient).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftCell {
+    pub name: String,
+    pub components: Vec<DriftComponent>,
+    pub eval_at_s: f64,
+}
+
+impl DriftCell {
+    pub fn ambient() -> DriftCell {
+        DriftCell { name: "ambient".into(), components: Vec::new(), eval_at_s: 0.0 }
+    }
+
+    fn from_json(v: &Value, ctx: &str) -> Result<DriftCell> {
+        let obj = expect_obj(v, ctx)?;
+        reject_unknown(obj, &["name", "components", "eval_at_s"], ctx)?;
+        let name = require_str(obj, "name", ctx)?.to_string();
+        let components = match obj.get("components") {
+            Some(v) => super::faultenv::drift_list_from_json(v, &format!("{ctx}.components"))?,
+            None => Vec::new(),
+        };
+        let eval_at_s = f64_field(obj, "eval_at_s", ctx)?.unwrap_or(0.0);
+        Ok(DriftCell { name, components, eval_at_s })
+    }
+}
+
+/// A declarative experiment grid over one base spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignSpec {
+    pub base: ExperimentSpec,
+    pub models: Vec<String>,
+    pub fault_rates: Vec<f32>,
+    pub scenarios: Vec<FaultScenario>,
+    pub drifts: Vec<DriftCell>,
+}
+
+impl CampaignSpec {
+    /// A 1×1×1×1 campaign over the base spec (each grid axis defaults to
+    /// the base spec's value — including its drift stack, probed at
+    /// t = 0 like the offline phase).
+    pub fn singleton(base: ExperimentSpec) -> CampaignSpec {
+        let drifts = if base.fault_env.drift.is_empty() {
+            vec![DriftCell::ambient()]
+        } else {
+            vec![DriftCell {
+                name: "base".into(),
+                components: base.fault_env.drift.clone(),
+                eval_at_s: 0.0,
+            }]
+        };
+        CampaignSpec {
+            models: vec![base.model.clone()],
+            fault_rates: vec![base.fault_env.fault_rate],
+            scenarios: vec![base.fault_env.scenario],
+            drifts,
+            base,
+        }
+    }
+
+    /// Parse a campaign document: `{"base": {...}, "grid": {...}}`,
+    /// strict at every level.
+    pub fn from_json_str(text: &str) -> Result<CampaignSpec> {
+        Self::from_json_str_with(text, |_| Ok(()))
+    }
+
+    /// Like [`CampaignSpec::from_json_str`], with a `customize` hook run
+    /// over the base spec *after* the file's `base` section but *before*
+    /// the grid axes default from it — this is where the CLI applies its
+    /// env/flag overrides, so `--fault-rate 0.4` reaches every cell of a
+    /// campaign whose grid leaves `fault_rates` implicit. Axes the file
+    /// sets explicitly are grid data and are not overridden.
+    pub fn from_json_str_with(
+        text: &str,
+        customize: impl FnOnce(&mut ExperimentSpec) -> Result<()>,
+    ) -> Result<CampaignSpec> {
+        let v = json::parse(text).context("campaign: invalid json")?;
+        let obj = expect_obj(&v, "campaign")?;
+        reject_unknown(obj, &["base", "grid"], "campaign")?;
+        let mut base = ExperimentSpec::default();
+        if let Some(b) = obj.get("base") {
+            base.apply_json(b).context("campaign.base")?;
+        }
+        customize(&mut base)?;
+        let mut spec = CampaignSpec::singleton(base);
+        if let Some(g) = obj.get("grid") {
+            let grid = expect_obj(g, "campaign.grid")?;
+            reject_unknown(grid, &["models", "fault_rates", "scenarios", "drifts"], "campaign.grid")?;
+            if let Some(v) = grid.get("models") {
+                spec.models = expect_arr(v, "campaign.grid.models")?
+                    .iter()
+                    .map(|m| match m.as_str() {
+                        Some(s) => Ok(s.to_string()),
+                        None => bail!("campaign.grid.models: expected strings"),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(v) = grid.get("fault_rates") {
+                spec.fault_rates = expect_arr(v, "campaign.grid.fault_rates")?
+                    .iter()
+                    .map(|r| match r.as_f64() {
+                        Some(x) => Ok(x as f32),
+                        None => bail!("campaign.grid.fault_rates: expected numbers"),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(v) = grid.get("scenarios") {
+                spec.scenarios = expect_arr(v, "campaign.grid.scenarios")?
+                    .iter()
+                    .map(|s| match s.as_str().and_then(FaultScenario::parse) {
+                        Some(sc) => Ok(sc),
+                        None => bail!("campaign.grid.scenarios: expected scenario names (w, a, iw)"),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(v) = grid.get("drifts") {
+                spec.drifts = expect_arr(v, "campaign.grid.drifts")?
+                    .iter()
+                    .enumerate()
+                    .map(|(i, d)| DriftCell::from_json(d, &format!("campaign.grid.drifts[{i}]")))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+        }
+        if spec.models.is_empty()
+            || spec.fault_rates.is_empty()
+            || spec.scenarios.is_empty()
+            || spec.drifts.is_empty()
+        {
+            bail!("campaign.grid: every axis needs at least one entry");
+        }
+        Ok(spec)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<CampaignSpec> {
+        Self::from_file_with(path, |_| Ok(()))
+    }
+
+    /// [`CampaignSpec::from_file`] with the base-spec `customize` hook of
+    /// [`CampaignSpec::from_json_str_with`].
+    pub fn from_file_with(
+        path: &std::path::Path,
+        customize: impl FnOnce(&mut ExperimentSpec) -> Result<()>,
+    ) -> Result<CampaignSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading campaign spec {}", path.display()))?;
+        Self::from_json_str_with(&text, customize)
+            .with_context(|| format!("campaign spec {}", path.display()))
+    }
+
+    /// Total number of grid cells.
+    pub fn num_cells(&self) -> usize {
+        self.models.len() * self.fault_rates.len() * self.scenarios.len() * self.drifts.len()
+    }
+
+    /// Expand the grid in deterministic order:
+    /// models ▷ fault_rates ▷ scenarios ▷ drifts.
+    pub fn expand(&self) -> Vec<CellDesc> {
+        let mut cells = Vec::with_capacity(self.num_cells());
+        for model in &self.models {
+            for &fault_rate in &self.fault_rates {
+                for &scenario in &self.scenarios {
+                    for (drift_idx, _) in self.drifts.iter().enumerate() {
+                        cells.push(CellDesc {
+                            model: model.clone(),
+                            fault_rate,
+                            scenario,
+                            drift_idx,
+                        });
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// One expanded grid cell.
+#[derive(Clone, Debug)]
+pub struct CellDesc {
+    pub model: String,
+    pub fault_rate: f32,
+    pub scenario: FaultScenario,
+    pub drift_idx: usize,
+}
+
+/// Result of one campaign cell.
+#[derive(Clone, Debug)]
+pub struct CampaignCellReport {
+    pub drift: String,
+    pub eval_at_s: f64,
+    pub offline: OfflineReport,
+}
+
+/// The consolidated campaign outcome.
+#[derive(Clone, Debug)]
+pub struct CampaignReport {
+    pub cells: Vec<CampaignCellReport>,
+    pub engine_threads: usize,
+    pub total_evaluations: usize,
+    /// Unique backend (exact/synthetic/surrogate) evaluations after
+    /// caching + in-batch dedup.
+    pub total_backend_evals: usize,
+    pub wall_ms: f64,
+}
+
+impl CampaignReport {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("command", json::s("campaign")),
+            ("num_cells", json::num(self.cells.len() as f64)),
+            ("engine_threads", json::num(self.engine_threads as f64)),
+            ("total_evaluations", json::num(self.total_evaluations as f64)),
+            ("total_backend_evals", json::num(self.total_backend_evals as f64)),
+            ("wall_ms", json::num(self.wall_ms)),
+            (
+                "cells",
+                json::arr(self.cells.iter().map(|c| {
+                    json::obj(vec![
+                        ("drift", json::s(&c.drift)),
+                        ("eval_at_s", json::num(c.eval_at_s)),
+                        ("offline", c.offline.to_json()),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// `synthetic-L<n>` → `Some(n)`: the artifact-free fixture models.
+fn synthetic_units(model: &str) -> Option<usize> {
+    model.strip_prefix("synthetic-L").and_then(|s| s.parse().ok())
+}
+
+/// Run every cell of the campaign through the batched evaluation engine.
+/// `on_cell` fires after each cell with (index, total, report) for
+/// progress display.
+pub fn run_campaign(
+    spec: &CampaignSpec,
+    mut on_cell: impl FnMut(usize, usize, &CampaignCellReport),
+) -> Result<CampaignReport> {
+    let cells = spec.expand();
+    let total = cells.len();
+    let threads = if spec.base.eval_threads == 0 {
+        EngineConfig::auto().threads
+    } else {
+        spec.base.eval_threads
+    };
+    let nsga2 = spec.base.optimizer.to_nsga2(spec.base.seed);
+    let sw = std::time::Instant::now();
+
+    // real-model experiments are loaded (and their HLO compiled) once per
+    // model, not once per cell
+    let mut experiments: HashMap<String, Experiment> = HashMap::new();
+    let mut reports = Vec::with_capacity(total);
+    let mut total_evaluations = 0usize;
+    let mut total_backend_evals = 0usize;
+
+    for (i, cell) in cells.iter().enumerate() {
+        let drift = &spec.drifts[cell.drift_idx];
+        let (platform, profiles) = spec.base.platform.build();
+        let env = FaultEnv {
+            base_rate: cell.fault_rate,
+            profiles,
+            drift: drift.components.clone(),
+        };
+        for c in &env.drift {
+            if c.device >= env.num_devices() {
+                bail!(
+                    "campaign drift {:?}: component targets device {} but the platform has {}",
+                    drift.name,
+                    c.device,
+                    env.num_devices()
+                );
+            }
+        }
+        let dev_w = env.dev_w_rates(drift.eval_at_s);
+        let dev_a = env.dev_a_rates(drift.eval_at_s);
+
+        let outcome = if let Some(n) = synthetic_units(&cell.model) {
+            let manifest = synthetic_manifest(n);
+            let table = synthetic_sensitivity(n);
+            let dacc = if spec.base.surrogate {
+                DaccMode::Surrogate(&table)
+            } else {
+                DaccMode::SyntheticExact { table: &table, cost: std::time::Duration::ZERO }
+            };
+            let mut ev = PartitionEvaluator::new(
+                &manifest,
+                &platform,
+                dev_w,
+                dev_a,
+                cell.scenario,
+                table.clean_acc,
+                spec.base.link_cost,
+                dacc,
+            )
+            .with_parallelism(threads);
+            let out = spec.base.selection.optimize_and_deploy(&mut ev, &nsga2, |_| {})?;
+            total_backend_evals += ev.counters.exact_evals + ev.counters.surrogate_evals;
+            out
+        } else {
+            if !experiments.contains_key(&cell.model) {
+                let mut cfg = spec.base.to_config();
+                cfg.model = cell.model.clone();
+                let mut exp = Experiment::load(&cfg)
+                    .with_context(|| format!("campaign: loading model {:?}", cell.model))?;
+                if spec.base.surrogate {
+                    // same sensitivity grid as `afarepart offline`
+                    exp.measure_sensitivity(&[0.05, 0.1, 0.2, 0.4])?;
+                }
+                experiments.insert(cell.model.clone(), exp);
+            }
+            let exp = &experiments[&cell.model];
+            let dacc = match (spec.base.surrogate, &exp.sensitivity) {
+                (true, Some(table)) => DaccMode::Surrogate(table),
+                _ => DaccMode::Exact {
+                    model: &exp.model,
+                    eval: &exp.acc_eval,
+                    key_seed: (spec.base.seed & 0xFFFF_FFFF) as u32,
+                    n_batches: spec.base.dacc_batches,
+                },
+            };
+            let mut ev = PartitionEvaluator::new(
+                &exp.model.manifest,
+                &platform,
+                dev_w,
+                dev_a,
+                cell.scenario,
+                exp.clean_acc,
+                spec.base.link_cost,
+                dacc,
+            )
+            .with_parallelism(threads);
+            let out = spec.base.selection.optimize_and_deploy(&mut ev, &nsga2, |_| {})?;
+            total_backend_evals += ev.counters.exact_evals + ev.counters.surrogate_evals;
+            out
+        };
+
+        total_evaluations += outcome.evaluations;
+        let report = CampaignCellReport {
+            drift: drift.name.clone(),
+            eval_at_s: drift.eval_at_s,
+            offline: OfflineReport::from_outcome(
+                &cell.model,
+                cell.scenario.label(),
+                cell.fault_rate,
+                nsga2.pop_size,
+                nsga2.generations,
+                spec.base.surrogate,
+                threads,
+                &outcome,
+            ),
+        };
+        on_cell(i, total, &report);
+        reports.push(report);
+    }
+
+    Ok(CampaignReport {
+        cells: reports,
+        engine_threads: threads,
+        total_evaluations,
+        total_backend_evals,
+        wall_ms: sw.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singleton_expands_to_one_cell() {
+        let c = CampaignSpec::singleton(ExperimentSpec::default());
+        assert_eq!(c.num_cells(), 1);
+        assert_eq!(c.expand().len(), 1);
+    }
+
+    #[test]
+    fn grid_parses_and_expands() {
+        let c = CampaignSpec::from_json_str(
+            r#"{
+                "base": {"eval_threads": 2, "optimizer": {"pop_size": 8, "generations": 2}},
+                "grid": {
+                    "models": ["synthetic-L6", "synthetic-L8"],
+                    "fault_rates": [0.1, 0.4],
+                    "scenarios": ["w", "iw"],
+                    "drifts": [
+                        {"name": "ambient"},
+                        {"name": "attacked", "eval_at_s": 60.0,
+                         "components": [{"kind": "step", "device": 0, "at_s": 30.0, "factor": 2.0}]}
+                    ]
+                }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.num_cells(), 2 * 2 * 2 * 2);
+        let cells = c.expand();
+        assert_eq!(cells.len(), 16);
+        assert_eq!(cells[0].model, "synthetic-L6");
+        assert_eq!(cells[15].model, "synthetic-L8");
+    }
+
+    #[test]
+    fn customize_hook_feeds_defaulted_axes() {
+        // CLI overrides land on base before the grid defaults from it
+        let c = CampaignSpec::from_json_str_with(r#"{"grid": {"models": ["synthetic-L6"]}}"#, |b| {
+            b.fault_env.fault_rate = 0.4;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(c.fault_rates, vec![0.4]);
+        // ... but an explicitly pinned axis is grid data and wins
+        let c = CampaignSpec::from_json_str_with(
+            r#"{"grid": {"models": ["synthetic-L6"], "fault_rates": [0.1]}}"#,
+            |b| {
+                b.fault_env.fault_rate = 0.4;
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(c.fault_rates, vec![0.1f32]);
+    }
+
+    #[test]
+    fn unknown_grid_key_rejected() {
+        let err =
+            CampaignSpec::from_json_str(r#"{"grid": {"modelz": ["a"]}}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("modelz"), "{err:#}");
+    }
+
+    #[test]
+    fn synthetic_model_names_parse() {
+        assert_eq!(synthetic_units("synthetic-L12"), Some(12));
+        assert_eq!(synthetic_units("alexnet"), None);
+    }
+
+    #[test]
+    fn small_synthetic_campaign_runs() {
+        let c = CampaignSpec::from_json_str(
+            r#"{
+                "base": {"eval_threads": 2, "optimizer": {"pop_size": 8, "generations": 2}},
+                "grid": {"models": ["synthetic-L6"], "scenarios": ["w", "iw"]}
+            }"#,
+        )
+        .unwrap();
+        let mut seen = 0;
+        let report = run_campaign(&c, |_, _, _| seen += 1).unwrap();
+        assert_eq!(seen, 2);
+        assert_eq!(report.cells.len(), 2);
+        assert!(report.total_evaluations > 0);
+        assert!(report.total_backend_evals > 0);
+        let v = report.to_json();
+        assert_eq!(v.get("num_cells").unwrap().as_usize(), Some(2));
+    }
+}

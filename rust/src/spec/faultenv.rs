@@ -1,0 +1,197 @@
+//! Declarative fault environment: base rate, fault scenario, and a
+//! composable per-device drift stack (step + sinusoid + decay components
+//! may target the same device simultaneously — paper §III-A's threat
+//! model as data instead of a hardcoded `StepAttack` in `cmd_online`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::schema::*;
+use crate::faults::{DeviceFaultProfile, DriftComponent, DriftWave, FaultEnv, FaultScenario};
+use crate::util::json::{self, Value};
+
+pub(crate) fn drift_component_from_json(v: &Value, ctx: &str) -> Result<DriftComponent> {
+    let obj = expect_obj(v, ctx)?;
+    let kind = require_str(obj, "kind", ctx)?;
+    let device = match usize_field(obj, "device", ctx)? {
+        Some(d) => d,
+        None => bail!("{ctx}: missing required key \"device\""),
+    };
+    let required = |obj: &BTreeMap<String, Value>, key: &str| -> Result<f64> {
+        match f64_field(obj, key, ctx)? {
+            Some(x) => Ok(x),
+            None => bail!("{ctx}: drift kind {kind:?} requires key {key:?}"),
+        }
+    };
+    let wave = match kind {
+        "step" => {
+            reject_unknown(obj, &["kind", "device", "at_s", "factor"], ctx)?;
+            DriftWave::Step { at_s: required(obj, "at_s")?, factor: required(obj, "factor")? as f32 }
+        }
+        "sinusoid" => {
+            reject_unknown(obj, &["kind", "device", "period_s", "amp"], ctx)?;
+            DriftWave::Sinusoid {
+                period_s: required(obj, "period_s")?,
+                amp: required(obj, "amp")? as f32,
+            }
+        }
+        "decay" => {
+            reject_unknown(obj, &["kind", "device", "factor", "tau_s"], ctx)?;
+            DriftWave::Decay {
+                factor: required(obj, "factor")? as f32,
+                tau_s: required(obj, "tau_s")?,
+            }
+        }
+        other => bail!("{ctx}.kind: unknown drift kind {other:?} (known: step, sinusoid, decay)"),
+    };
+    Ok(DriftComponent { device, wave })
+}
+
+pub(crate) fn drift_component_to_json(c: &DriftComponent) -> Value {
+    match &c.wave {
+        DriftWave::Step { at_s, factor } => json::obj(vec![
+            ("kind", json::s("step")),
+            ("device", json::num(c.device as f64)),
+            ("at_s", json::num(*at_s)),
+            ("factor", f32_json(*factor)),
+        ]),
+        DriftWave::Sinusoid { period_s, amp } => json::obj(vec![
+            ("kind", json::s("sinusoid")),
+            ("device", json::num(c.device as f64)),
+            ("period_s", json::num(*period_s)),
+            ("amp", f32_json(*amp)),
+        ]),
+        DriftWave::Decay { factor, tau_s } => json::obj(vec![
+            ("kind", json::s("decay")),
+            ("device", json::num(c.device as f64)),
+            ("factor", f32_json(*factor)),
+            ("tau_s", json::num(*tau_s)),
+        ]),
+    }
+}
+
+pub(crate) fn drift_list_from_json(v: &Value, ctx: &str) -> Result<Vec<DriftComponent>> {
+    expect_arr(v, ctx)?
+        .iter()
+        .enumerate()
+        .map(|(i, c)| drift_component_from_json(c, &format!("{ctx}[{i}]")))
+        .collect()
+}
+
+/// The declarative fault environment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEnvSpec {
+    /// Environment fault rate FR (paper: 0.10–0.40).
+    pub fault_rate: f32,
+    /// Which fault domains are active (Table II columns).
+    pub scenario: FaultScenario,
+    /// Composable drift stack for the online phase (empty = static env).
+    pub drift: Vec<DriftComponent>,
+}
+
+impl Default for FaultEnvSpec {
+    /// FR 0.20, input+weight, and the demo EM step attack on device 0 at
+    /// t = 30 s — exactly what `cmd_online` used to hardcode. Offline
+    /// runs sample the environment at t = 0, where the step has not fired
+    /// yet, so the default offline behaviour is unchanged.
+    fn default() -> Self {
+        FaultEnvSpec {
+            fault_rate: 0.20,
+            scenario: FaultScenario::InputWeight,
+            drift: vec![DriftComponent::step(0, 30.0, 2.0)],
+        }
+    }
+}
+
+impl FaultEnvSpec {
+    pub(crate) fn apply_json(&mut self, obj: &BTreeMap<String, Value>, ctx: &str) -> Result<()> {
+        reject_unknown(obj, &["fault_rate", "scenario", "drift"], ctx)?;
+        if let Some(x) = f32_field(obj, "fault_rate", ctx)? {
+            self.fault_rate = x;
+        }
+        if let Some(s) = str_field(obj, "scenario", ctx)? {
+            self.scenario = match FaultScenario::parse(s) {
+                Some(sc) => sc,
+                None => bail!("{ctx}.scenario: unknown scenario {s:?} (w, a, iw)"),
+            };
+        }
+        if let Some(v) = obj.get("drift") {
+            self.drift = drift_list_from_json(v, &format!("{ctx}.drift"))?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("fault_rate", f32_json(self.fault_rate)),
+            ("scenario", json::s(self.scenario.label())),
+            ("drift", json::arr(self.drift.iter().map(drift_component_to_json))),
+        ])
+    }
+
+    /// Materialize the time-varying environment over `profiles`. Drift
+    /// components referencing devices beyond the platform are rejected.
+    pub fn build(&self, profiles: Vec<DeviceFaultProfile>) -> Result<FaultEnv> {
+        for c in &self.drift {
+            if c.device >= profiles.len() {
+                bail!(
+                    "fault_env.drift: component targets device {} but the platform has {} devices",
+                    c.device,
+                    profiles.len()
+                );
+            }
+        }
+        Ok(FaultEnv { base_rate: self.fault_rate, profiles, drift: self.drift.clone() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_demo_step_attack() {
+        let spec = FaultEnvSpec::default();
+        assert_eq!(spec.drift, vec![DriftComponent::step(0, 30.0, 2.0)]);
+        let env = spec.build(DeviceFaultProfile::default_two_device()).unwrap();
+        // offline samples t=0: step not fired, rates are the static ones
+        assert!((env.dev_w_rates(0.0)[0] - 0.2).abs() < 1e-6);
+        assert!((env.dev_w_rates(31.0)[0] - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stacked_drift_parses() {
+        let mut spec = FaultEnvSpec::default();
+        let v = crate::util::json::parse(
+            r#"{"fault_rate": 0.3, "scenario": "weight-only", "drift": [
+                {"kind": "step", "device": 0, "at_s": 10.0, "factor": 2.0},
+                {"kind": "sinusoid", "device": 0, "period_s": 8.0, "amp": 0.25},
+                {"kind": "decay", "device": 1, "factor": 4.0, "tau_s": 12.0}
+            ]}"#,
+        )
+        .unwrap();
+        spec.apply_json(v.as_obj().unwrap(), "fault_env").unwrap();
+        assert_eq!(spec.drift.len(), 3);
+        assert_eq!(spec.scenario, FaultScenario::WeightOnly);
+        assert_eq!(spec.drift[1], DriftComponent::sinusoid(0, 8.0, 0.25));
+    }
+
+    #[test]
+    fn wrong_wave_key_rejected() {
+        let v = crate::util::json::parse(
+            r#"{"kind": "step", "device": 0, "at_s": 1.0, "factor": 2.0, "period_s": 4.0}"#,
+        )
+        .unwrap();
+        assert!(drift_component_from_json(&v, "d").is_err());
+    }
+
+    #[test]
+    fn out_of_range_device_rejected_at_build() {
+        let spec = FaultEnvSpec {
+            drift: vec![DriftComponent::step(5, 1.0, 2.0)],
+            ..Default::default()
+        };
+        assert!(spec.build(DeviceFaultProfile::default_two_device()).is_err());
+    }
+}

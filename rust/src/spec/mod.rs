@@ -1,0 +1,550 @@
+//! The declarative experiment API (ISSUE 2): a fully-typed
+//! [`ExperimentSpec`] covering platform topology, fault environment,
+//! optimizer budget, selection policy and online-monitor settings — all
+//! loadable from one JSON document with strict unknown-key rejection and
+//! one documented precedence chain:
+//!
+//! ```text
+//! CLI flags  >  AFARE_* environment  >  --spec/--config file  >  defaults
+//! ```
+//!
+//! enforced in exactly one place ([`ExperimentSpec::resolve`]) instead of
+//! the `apply_args`/`apply_env`/`apply_json` call-order roulette the flat
+//! config used to play (the old order applied env *after* CLI, silently
+//! letting `AFARE_POP` beat an explicit `--pop`).
+//!
+//! Submodules:
+//! * [`platform`] — device list + link parameters ([`PlatformSpec`]).
+//! * [`faultenv`] — fault rate, scenario, composable drift
+//!   ([`FaultEnvSpec`]).
+//! * [`online`] — online-monitor settings ([`OnlineSpec`]).
+//! * [`outcome`] — typed JSON run reports ([`outcome::OfflineReport`] & co).
+//! * [`campaign`] — spec-grid expansion driving the batched evaluation
+//!   engine over models × fault-rates × scenarios × drift schedules.
+//!
+//! See `docs/spec.md` for the key-by-key schema reference.
+
+pub mod campaign;
+pub mod faultenv;
+pub mod online;
+pub mod outcome;
+pub mod platform;
+mod schema;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use self::campaign::{CampaignSpec, DriftCell};
+pub use self::faultenv::FaultEnvSpec;
+pub use self::online::OnlineSpec;
+pub use self::platform::{AccelKind, DeviceEntry, LinkSpec, PlatformSpec};
+
+use crate::cli::Args;
+use crate::config::ExperimentConfig;
+use crate::coordinator::offline::optimize_partitions_counted;
+use crate::coordinator::OfflineOutcome;
+use crate::faults::FaultScenario;
+use crate::nsga2::{GenStats, Individual, Nsga2Config};
+use crate::partition::{
+    select_knee, select_min_dacc, select_min_dacc_within_budget, Mapping, PartitionEvaluator,
+};
+use crate::util::json::{self, Value};
+use self::schema::*;
+
+/// NSGA-II budget (paper §VI-A: population 60, generations 60).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptimizerSpec {
+    pub pop_size: usize,
+    pub generations: usize,
+    pub crossover_prob: f64,
+    pub mutation_prob: f64,
+}
+
+impl Default for OptimizerSpec {
+    fn default() -> Self {
+        let c = Nsga2Config::default();
+        OptimizerSpec {
+            pop_size: c.pop_size,
+            generations: c.generations,
+            crossover_prob: c.crossover_prob,
+            mutation_prob: c.mutation_prob,
+        }
+    }
+}
+
+impl OptimizerSpec {
+    fn apply_json(&mut self, obj: &BTreeMap<String, Value>, ctx: &str) -> Result<()> {
+        reject_unknown(obj, &["pop_size", "generations", "crossover_prob", "mutation_prob"], ctx)?;
+        if let Some(x) = usize_field(obj, "pop_size", ctx)? {
+            self.pop_size = x;
+        }
+        if let Some(x) = usize_field(obj, "generations", ctx)? {
+            self.generations = x;
+        }
+        if let Some(x) = f64_field(obj, "crossover_prob", ctx)? {
+            self.crossover_prob = x;
+        }
+        if let Some(x) = f64_field(obj, "mutation_prob", ctx)? {
+            self.mutation_prob = x;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("pop_size", json::num(self.pop_size as f64)),
+            ("generations", json::num(self.generations as f64)),
+            ("crossover_prob", json::num(self.crossover_prob)),
+            ("mutation_prob", json::num(self.mutation_prob)),
+        ])
+    }
+
+    pub fn to_nsga2(&self, seed: u64) -> Nsga2Config {
+        Nsga2Config {
+            pop_size: self.pop_size,
+            generations: self.generations,
+            crossover_prob: self.crossover_prob,
+            mutation_prob: self.mutation_prob,
+            seed,
+        }
+    }
+}
+
+/// How the deployed P* is picked from the Pareto front (§V-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionPolicy {
+    /// Min ΔAcc within latency/energy budget factors (the paper's
+    /// "initial balance" — the default).
+    MinDaccWithinBudget,
+    /// Pure min ΔAcc (most robust, budgets ignored).
+    MinDacc,
+    /// Knee point of the normalized front.
+    Knee,
+}
+
+impl SelectionPolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SelectionPolicy::MinDaccWithinBudget => "min-dacc-within-budget",
+            SelectionPolicy::MinDacc => "min-dacc",
+            SelectionPolicy::Knee => "knee",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SelectionPolicy> {
+        match s {
+            "min-dacc-within-budget" => Some(SelectionPolicy::MinDaccWithinBudget),
+            "min-dacc" => Some(SelectionPolicy::MinDacc),
+            "knee" => Some(SelectionPolicy::Knee),
+            _ => None,
+        }
+    }
+}
+
+/// Deployment selection policy + its budget factors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectionSpec {
+    pub policy: SelectionPolicy,
+    pub lat_budget: f64,
+    pub energy_budget: f64,
+}
+
+impl Default for SelectionSpec {
+    fn default() -> Self {
+        SelectionSpec {
+            policy: SelectionPolicy::MinDaccWithinBudget,
+            lat_budget: 2.0,
+            energy_budget: 3.0,
+        }
+    }
+}
+
+impl SelectionSpec {
+    fn apply_json(&mut self, obj: &BTreeMap<String, Value>, ctx: &str) -> Result<()> {
+        reject_unknown(obj, &["policy", "lat_budget", "energy_budget"], ctx)?;
+        if let Some(s) = str_field(obj, "policy", ctx)? {
+            self.policy = match SelectionPolicy::parse(s) {
+                Some(p) => p,
+                None => bail!(
+                    "{ctx}.policy: unknown policy {s:?} (known: min-dacc-within-budget, min-dacc, knee)"
+                ),
+            };
+        }
+        if let Some(x) = f64_field(obj, "lat_budget", ctx)? {
+            self.lat_budget = x;
+        }
+        if let Some(x) = f64_field(obj, "energy_budget", ctx)? {
+            self.energy_budget = x;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("policy", json::s(self.policy.as_str())),
+            ("lat_budget", json::num(self.lat_budget)),
+            ("energy_budget", json::num(self.energy_budget)),
+        ])
+    }
+
+    /// Apply the policy to a front.
+    pub fn select<'f>(&self, front: &'f [Individual]) -> Option<&'f Individual> {
+        match self.policy {
+            SelectionPolicy::MinDaccWithinBudget => {
+                select_min_dacc_within_budget(front, self.lat_budget, self.energy_budget)
+            }
+            SelectionPolicy::MinDacc => select_min_dacc(front),
+            SelectionPolicy::Knee => select_knee(front),
+        }
+    }
+
+    /// Run one three-objective offline optimization through the batched
+    /// evaluation engine and deploy per this policy — the shared driver
+    /// behind `afarepart offline` and every campaign cell.
+    pub fn optimize_and_deploy(
+        &self,
+        ev: &mut PartitionEvaluator,
+        nsga2: &Nsga2Config,
+        on_gen: impl FnMut(&GenStats),
+    ) -> Result<OfflineOutcome> {
+        let (front, evaluations) = optimize_partitions_counted(ev, nsga2, true, vec![], on_gen);
+        let Some(chosen) = self.select(&front) else {
+            bail!("NSGA-II returned an empty front");
+        };
+        let deployed = Mapping(chosen.genome.clone());
+        let deployed_objectives = chosen.objectives.clone();
+        let cache = ev.cache_stats();
+        Ok(OfflineOutcome { front, deployed, deployed_objectives, evaluations, cache })
+    }
+}
+
+/// The complete, declarative experiment description. One JSON document
+/// (or builder chain) describes everything a run needs; `Default` is the
+/// paper's setup and reproduces the pre-redesign behaviour bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec {
+    /// Artifacts directory (HLO, weights, manifests, eval data).
+    pub artifacts_dir: PathBuf,
+    /// Model name (must appear in artifacts/index.json).
+    pub model: String,
+    /// Eval-set sample budget for exact ΔAcc evaluation (0 = all).
+    pub eval_limit: usize,
+    /// Eval batches per exact ΔAcc evaluation (0 = all prepared).
+    pub dacc_batches: usize,
+    /// Use the sensitivity surrogate instead of exact injection.
+    pub surrogate: bool,
+    /// Worker threads for batched ΔAcc evaluation (0 = auto).
+    pub eval_threads: usize,
+    /// Include link latency/energy in the objectives (CNNParted mode).
+    pub link_cost: bool,
+    /// Master seed (offline NSGA-II + exact-mode fault draws).
+    pub seed: u64,
+    pub platform: PlatformSpec,
+    pub fault_env: FaultEnvSpec,
+    pub optimizer: OptimizerSpec,
+    pub selection: SelectionSpec,
+    pub online: OnlineSpec,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> Self {
+        ExperimentSpec {
+            artifacts_dir: crate::runtime::ArtifactIndex::default_dir(),
+            model: "alexnet".into(),
+            eval_limit: 256,
+            dacc_batches: 0,
+            surrogate: false,
+            eval_threads: 0,
+            link_cost: false,
+            seed: 7,
+            platform: PlatformSpec::default(),
+            fault_env: FaultEnvSpec::default(),
+            optimizer: OptimizerSpec::default(),
+            selection: SelectionSpec::default(),
+            online: OnlineSpec::default(),
+        }
+    }
+}
+
+const TOP_LEVEL_KEYS: &[&str] = &[
+    "artifacts_dir",
+    "model",
+    "eval_limit",
+    "dacc_batches",
+    "surrogate",
+    "eval_threads",
+    "link_cost",
+    "seed",
+    "platform",
+    "fault_env",
+    "optimizer",
+    "selection",
+    "online",
+];
+
+impl ExperimentSpec {
+    /// Apply a (possibly partial) JSON document over this spec. Strict:
+    /// unknown keys anywhere in the tree are hard errors.
+    pub fn apply_json(&mut self, v: &Value) -> Result<()> {
+        let obj = expect_obj(v, "spec")?;
+        reject_unknown(obj, TOP_LEVEL_KEYS, "spec")?;
+        if let Some(s) = str_field(obj, "artifacts_dir", "spec")? {
+            self.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = str_field(obj, "model", "spec")? {
+            self.model = s.to_string();
+        }
+        if let Some(x) = usize_field(obj, "eval_limit", "spec")? {
+            self.eval_limit = x;
+        }
+        if let Some(x) = usize_field(obj, "dacc_batches", "spec")? {
+            self.dacc_batches = x;
+        }
+        if let Some(b) = bool_field(obj, "surrogate", "spec")? {
+            self.surrogate = b;
+        }
+        if let Some(x) = usize_field(obj, "eval_threads", "spec")? {
+            self.eval_threads = x;
+        }
+        if let Some(b) = bool_field(obj, "link_cost", "spec")? {
+            self.link_cost = b;
+        }
+        if let Some(x) = u64_field(obj, "seed", "spec")? {
+            self.seed = x;
+        }
+        if let Some(v) = obj.get("platform") {
+            self.platform.apply_json(expect_obj(v, "spec.platform")?, "spec.platform")?;
+        }
+        if let Some(v) = obj.get("fault_env") {
+            self.fault_env.apply_json(expect_obj(v, "spec.fault_env")?, "spec.fault_env")?;
+        }
+        if let Some(v) = obj.get("optimizer") {
+            self.optimizer.apply_json(expect_obj(v, "spec.optimizer")?, "spec.optimizer")?;
+        }
+        if let Some(v) = obj.get("selection") {
+            self.selection.apply_json(expect_obj(v, "spec.selection")?, "spec.selection")?;
+        }
+        if let Some(v) = obj.get("online") {
+            self.online.apply_json(expect_obj(v, "spec.online")?, "spec.online")?;
+        }
+        Ok(())
+    }
+
+    /// Parse a complete spec from a JSON string (strict).
+    pub fn from_json_str(text: &str) -> Result<ExperimentSpec> {
+        let v = json::parse(text).context("spec: invalid json")?;
+        let mut spec = ExperimentSpec::default();
+        spec.apply_json(&v)?;
+        Ok(spec)
+    }
+
+    /// Load a spec file (strict).
+    pub fn from_file(path: &Path) -> Result<ExperimentSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading spec {}", path.display()))?;
+        Self::from_json_str(&text).with_context(|| format!("spec {}", path.display()))
+    }
+
+    /// Canonical JSON form (every key present; round-trips exactly).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("artifacts_dir", json::s(&self.artifacts_dir.display().to_string())),
+            ("model", json::s(&self.model)),
+            ("eval_limit", json::num(self.eval_limit as f64)),
+            ("dacc_batches", json::num(self.dacc_batches as f64)),
+            ("surrogate", Value::Bool(self.surrogate)),
+            ("eval_threads", json::num(self.eval_threads as f64)),
+            ("link_cost", Value::Bool(self.link_cost)),
+            ("seed", json::num(self.seed as f64)),
+            ("platform", self.platform.to_json()),
+            ("fault_env", self.fault_env.to_json()),
+            ("optimizer", self.optimizer.to_json()),
+            ("selection", self.selection.to_json()),
+            ("online", self.online.to_json()),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+
+    /// Environment overrides (`AFARE_POP`, `AFARE_GENS`,
+    /// `AFARE_EVAL_LIMIT`, `AFARE_EVAL_THREADS`) — used to shrink bench
+    /// budgets without touching files. Injectable lookup for testability;
+    /// [`ExperimentSpec::resolve`] passes the process environment.
+    pub fn apply_env_with(&mut self, getenv: impl Fn(&str) -> Option<String>) {
+        if let Some(v) = getenv("AFARE_POP").and_then(|v| v.parse().ok()) {
+            self.optimizer.pop_size = v;
+        }
+        if let Some(v) = getenv("AFARE_GENS").and_then(|v| v.parse().ok()) {
+            self.optimizer.generations = v;
+        }
+        if let Some(v) = getenv("AFARE_EVAL_LIMIT").and_then(|v| v.parse().ok()) {
+            self.eval_limit = v;
+        }
+        if let Some(v) = getenv("AFARE_EVAL_THREADS").and_then(|v| v.parse().ok()) {
+            self.eval_threads = v;
+        }
+    }
+
+    /// CLI overrides (the highest-precedence layer).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(m) = args.get("model") {
+            self.model = m.to_string();
+        }
+        if let Some(a) = args.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(a);
+        }
+        self.fault_env.fault_rate = args.get_f32("fault-rate", self.fault_env.fault_rate);
+        if let Some(s) = args.get("scenario") {
+            self.fault_env.scenario =
+                FaultScenario::parse(s).with_context(|| format!("bad --scenario {s:?}"))?;
+        }
+        self.optimizer.pop_size = args.get_usize("pop", self.optimizer.pop_size);
+        self.optimizer.generations = args.get_usize("gens", self.optimizer.generations);
+        self.online.theta = args.get_f64("theta", self.online.theta);
+        self.online.ticks = args.get_usize("ticks", self.online.ticks);
+        self.online.lookahead = args.get_usize("lookahead", self.online.lookahead);
+        self.eval_limit = args.get_usize("eval-limit", self.eval_limit);
+        self.dacc_batches = args.get_usize("dacc-batches", self.dacc_batches);
+        self.eval_threads = args.get_usize("eval-threads", self.eval_threads);
+        if let Some(s) = args.get("policy") {
+            self.selection.policy = SelectionPolicy::parse(s)
+                .with_context(|| format!("bad --policy {s:?} (min-dacc-within-budget, min-dacc, knee)"))?;
+        }
+        self.selection.lat_budget = args.get_f64("lat-budget", self.selection.lat_budget);
+        self.selection.energy_budget = args.get_f64("energy-budget", self.selection.energy_budget);
+        if args.has_flag("surrogate") {
+            self.surrogate = true;
+        }
+        if args.has_flag("link-cost") {
+            self.link_cost = true;
+        }
+        self.seed = args.get_u64("seed", self.seed);
+        Ok(())
+    }
+
+    /// THE precedence chain, in one place: defaults, then the
+    /// `--spec`/`--config` file (if given), then `AFARE_*` environment
+    /// variables, then CLI flags. Later layers win.
+    pub fn resolve(args: &Args) -> Result<ExperimentSpec> {
+        Self::resolve_with(args, |k| std::env::var(k).ok())
+    }
+
+    /// [`ExperimentSpec::resolve`] with an injectable environment (the
+    /// precedence regression tests use this to avoid mutating the real
+    /// process environment).
+    pub fn resolve_with(
+        args: &Args,
+        getenv: impl Fn(&str) -> Option<String>,
+    ) -> Result<ExperimentSpec> {
+        let mut spec = ExperimentSpec::default();
+        if let Some(p) = args.get("spec").or_else(|| args.get("config")) {
+            let text = std::fs::read_to_string(p).with_context(|| format!("reading spec {p}"))?;
+            let v = json::parse(&text).with_context(|| format!("spec {p}: invalid json"))?;
+            spec.apply_json(&v).with_context(|| format!("spec {p}"))?;
+        }
+        spec.apply_env_with(getenv);
+        spec.apply_args(args)?;
+        Ok(spec)
+    }
+
+    /// The flat runtime view consumed by [`crate::experiment::Experiment`]
+    /// and the benches.
+    pub fn to_config(&self) -> ExperimentConfig {
+        ExperimentConfig {
+            artifacts_dir: self.artifacts_dir.clone(),
+            model: self.model.clone(),
+            fault_rate: self.fault_env.fault_rate,
+            scenario: self.fault_env.scenario,
+            nsga2: self.optimizer.to_nsga2(self.seed),
+            theta: self.online.theta,
+            eval_limit: self.eval_limit,
+            dacc_batches: self.dacc_batches,
+            surrogate: self.surrogate,
+            eval_threads: self.eval_threads,
+            link_cost: self.link_cost,
+            lat_budget: self.selection.lat_budget,
+            energy_budget: self.selection.energy_budget,
+            seed: self.seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(raw: &[&str]) -> Args {
+        let raw: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
+        Args::parse(&raw, &["surrogate", "link-cost", "verbose", "help"])
+    }
+
+    #[test]
+    fn default_to_config_matches_legacy_defaults() {
+        let cfg = ExperimentSpec::default().to_config();
+        let legacy = ExperimentConfig::default();
+        assert_eq!(cfg.model, legacy.model);
+        assert_eq!(cfg.fault_rate, legacy.fault_rate);
+        assert_eq!(cfg.scenario, legacy.scenario);
+        assert_eq!(cfg.nsga2.pop_size, legacy.nsga2.pop_size);
+        assert_eq!(cfg.nsga2.generations, legacy.nsga2.generations);
+        assert_eq!(cfg.nsga2.seed, legacy.nsga2.seed);
+        assert_eq!(cfg.theta, legacy.theta);
+        assert_eq!(cfg.eval_limit, legacy.eval_limit);
+        assert_eq!(cfg.lat_budget, legacy.lat_budget);
+        assert_eq!(cfg.energy_budget, legacy.energy_budget);
+        assert_eq!(cfg.seed, legacy.seed);
+    }
+
+    #[test]
+    fn cli_beats_env_beats_defaults() {
+        // regression for the old main.rs bug: apply_args() ran *before*
+        // apply_env(), so AFARE_POP silently overrode an explicit --pop.
+        let a = args(&["offline", "--pop", "10"]);
+        let spec = ExperimentSpec::resolve_with(&a, |k| match k {
+            "AFARE_POP" => Some("99".into()),
+            "AFARE_GENS" => Some("5".into()),
+            _ => None,
+        })
+        .unwrap();
+        assert_eq!(spec.optimizer.pop_size, 10, "CLI must beat AFARE_POP");
+        assert_eq!(spec.optimizer.generations, 5, "env must beat defaults");
+    }
+
+    #[test]
+    fn unknown_top_level_key_rejected() {
+        let mut spec = ExperimentSpec::default();
+        let v = json::parse(r#"{"modle": "alexnet"}"#).unwrap();
+        let err = spec.apply_json(&v).unwrap_err();
+        assert!(format!("{err}").contains("modle"), "{err}");
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let spec = ExperimentSpec::default();
+        let text = spec.to_json_string();
+        let back = ExperimentSpec::from_json_str(&text).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json_string(), text);
+    }
+
+    #[test]
+    fn selection_policy_round_trip() {
+        for p in [SelectionPolicy::MinDaccWithinBudget, SelectionPolicy::MinDacc, SelectionPolicy::Knee]
+        {
+            assert_eq!(SelectionPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(SelectionPolicy::parse("best-effort"), None);
+    }
+
+    #[test]
+    fn seed_feeds_optimizer() {
+        let a = args(&["offline", "--seed", "123"]);
+        let spec = ExperimentSpec::resolve_with(&a, |_| None).unwrap();
+        assert_eq!(spec.seed, 123);
+        assert_eq!(spec.to_config().nsga2.seed, 123);
+    }
+}

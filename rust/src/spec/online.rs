@@ -1,0 +1,194 @@
+//! Declarative online-monitor settings: everything `cmd_online` used to
+//! hardcode (the stray `--ticks` arg, the re-optimization budget and
+//! seed) is spec data, so an online run is fully reproducible from one
+//! file.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::schema::*;
+use crate::coordinator::OnlineConfig;
+use crate::nsga2::Nsga2Config;
+use crate::util::json::{self, Value};
+
+/// Online phase settings (paper Algorithm 1, lines 13–19).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OnlineSpec {
+    /// Accuracy-drop threshold θ that triggers repartitioning.
+    pub theta: f64,
+    /// Rolling monitor window (batches).
+    pub window: usize,
+    /// Simulated seconds per served batch.
+    pub tick_seconds: f64,
+    /// Number of canary batches to serve.
+    pub ticks: usize,
+    /// NSGA-II re-optimization budget (smaller than offline) and seed.
+    pub reopt_pop: usize,
+    pub reopt_gens: usize,
+    pub reopt_seed: u64,
+    /// Budget factors for P' selection during an attack.
+    pub lat_budget: f64,
+    pub energy_budget: f64,
+    /// Cooldown (ticks) after a reconfiguration.
+    pub cooldown: usize,
+    /// Seed for the canary PRNG and re-optimization.
+    pub seed: u64,
+    /// Canary pipeline depth through the inference server (0 = derive
+    /// from `eval_threads`; 1 = strictly one batch in flight, the
+    /// pre-pipelined serving loop). The timeline is bitwise identical at
+    /// any depth — see `coordinator::online`.
+    pub lookahead: usize,
+}
+
+impl Default for OnlineSpec {
+    fn default() -> Self {
+        let c = OnlineConfig::default();
+        OnlineSpec {
+            theta: c.theta,
+            window: c.window,
+            tick_seconds: c.tick_seconds,
+            ticks: c.ticks,
+            reopt_pop: c.reopt.pop_size,
+            reopt_gens: c.reopt.generations,
+            reopt_seed: c.reopt.seed,
+            lat_budget: c.lat_budget,
+            energy_budget: c.energy_budget,
+            cooldown: c.cooldown,
+            seed: c.seed,
+            lookahead: 0,
+        }
+    }
+}
+
+impl OnlineSpec {
+    pub(crate) fn apply_json(&mut self, obj: &BTreeMap<String, Value>, ctx: &str) -> Result<()> {
+        reject_unknown(
+            obj,
+            &[
+                "theta",
+                "window",
+                "tick_seconds",
+                "ticks",
+                "reopt_pop",
+                "reopt_gens",
+                "reopt_seed",
+                "lat_budget",
+                "energy_budget",
+                "cooldown",
+                "seed",
+                "lookahead",
+            ],
+            ctx,
+        )?;
+        if let Some(x) = f64_field(obj, "theta", ctx)? {
+            self.theta = x;
+        }
+        if let Some(x) = usize_field(obj, "window", ctx)? {
+            self.window = x;
+        }
+        if let Some(x) = f64_field(obj, "tick_seconds", ctx)? {
+            self.tick_seconds = x;
+        }
+        if let Some(x) = usize_field(obj, "ticks", ctx)? {
+            self.ticks = x;
+        }
+        if let Some(x) = usize_field(obj, "reopt_pop", ctx)? {
+            self.reopt_pop = x;
+        }
+        if let Some(x) = usize_field(obj, "reopt_gens", ctx)? {
+            self.reopt_gens = x;
+        }
+        if let Some(x) = u64_field(obj, "reopt_seed", ctx)? {
+            self.reopt_seed = x;
+        }
+        if let Some(x) = f64_field(obj, "lat_budget", ctx)? {
+            self.lat_budget = x;
+        }
+        if let Some(x) = f64_field(obj, "energy_budget", ctx)? {
+            self.energy_budget = x;
+        }
+        if let Some(x) = usize_field(obj, "cooldown", ctx)? {
+            self.cooldown = x;
+        }
+        if let Some(x) = u64_field(obj, "seed", ctx)? {
+            self.seed = x;
+        }
+        if let Some(x) = usize_field(obj, "lookahead", ctx)? {
+            self.lookahead = x;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("theta", json::num(self.theta)),
+            ("window", json::num(self.window as f64)),
+            ("tick_seconds", json::num(self.tick_seconds)),
+            ("ticks", json::num(self.ticks as f64)),
+            ("reopt_pop", json::num(self.reopt_pop as f64)),
+            ("reopt_gens", json::num(self.reopt_gens as f64)),
+            ("reopt_seed", json::num(self.reopt_seed as f64)),
+            ("lat_budget", json::num(self.lat_budget)),
+            ("energy_budget", json::num(self.energy_budget)),
+            ("cooldown", json::num(self.cooldown as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("lookahead", json::num(self.lookahead as f64)),
+        ])
+    }
+
+    /// Materialize the runner config. `resolved_eval_threads` fills the
+    /// `lookahead = 0` auto setting (one in-flight canary batch per ΔAcc
+    /// worker keeps the serving thread fed without unbounded speculation).
+    pub fn to_online_config(&self, resolved_eval_threads: usize) -> OnlineConfig {
+        OnlineConfig {
+            theta: self.theta,
+            window: self.window,
+            tick_seconds: self.tick_seconds,
+            ticks: self.ticks,
+            reopt: Nsga2Config {
+                pop_size: self.reopt_pop,
+                generations: self.reopt_gens,
+                seed: self.reopt_seed,
+                ..Default::default()
+            },
+            lat_budget: self.lat_budget,
+            energy_budget: self.energy_budget,
+            cooldown: self.cooldown,
+            seed: self.seed,
+            lookahead: if self.lookahead == 0 {
+                resolved_eval_threads.max(1)
+            } else {
+                self.lookahead
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_mirror_online_config() {
+        let spec = OnlineSpec::default();
+        let legacy = OnlineConfig::default();
+        let cfg = spec.to_online_config(1);
+        assert_eq!(cfg.theta, legacy.theta);
+        assert_eq!(cfg.window, legacy.window);
+        assert_eq!(cfg.ticks, legacy.ticks);
+        assert_eq!(cfg.reopt.pop_size, legacy.reopt.pop_size);
+        assert_eq!(cfg.reopt.generations, legacy.reopt.generations);
+        assert_eq!(cfg.reopt.seed, legacy.reopt.seed);
+        assert_eq!(cfg.cooldown, legacy.cooldown);
+        assert_eq!(cfg.lookahead, 1);
+    }
+
+    #[test]
+    fn lookahead_auto_follows_eval_threads() {
+        let spec = OnlineSpec::default();
+        assert_eq!(spec.to_online_config(4).lookahead, 4);
+        let pinned = OnlineSpec { lookahead: 2, ..Default::default() };
+        assert_eq!(pinned.to_online_config(8).lookahead, 2);
+    }
+}

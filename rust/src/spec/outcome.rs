@@ -1,0 +1,433 @@
+//! Typed run outcomes with JSON serialization — every subcommand's
+//! result as data (`--format json [--out <file>]`), so campaigns, CI and
+//! downstream tooling consume structured reports instead of scraping
+//! tables.
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::coordinator::{OfflineOutcome, OnlineOutcome};
+use crate::nsga2::Individual;
+use crate::partition::Mapping;
+use crate::util::json::{self, Value};
+
+/// Output format of a CLI run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputFormat {
+    Text,
+    Json,
+}
+
+impl OutputFormat {
+    /// Parse `--format <text|json>` (default text).
+    pub fn from_args(args: &Args) -> Result<OutputFormat> {
+        match args.get("format") {
+            None | Some("text") => Ok(OutputFormat::Text),
+            Some("json") => Ok(OutputFormat::Json),
+            Some(other) => bail!("bad --format {other:?} (text, json)"),
+        }
+    }
+
+    pub fn is_json(self) -> bool {
+        self == OutputFormat::Json
+    }
+}
+
+/// Write a JSON document to `--out <file>` or stdout.
+pub fn emit_json(v: &Value, out: Option<&str>) -> Result<()> {
+    let text = json::to_string(v);
+    match out {
+        Some(path) => std::fs::write(path, &text).with_context(|| format!("writing {path}"))?,
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// One scored mapping (a Pareto-front point or a deployed partition).
+#[derive(Clone, Debug)]
+pub struct MappingScore {
+    pub mapping: String,
+    pub latency_ms: f64,
+    pub energy_mj: f64,
+    pub dacc: f64,
+}
+
+impl MappingScore {
+    pub fn from_individual(ind: &Individual) -> MappingScore {
+        MappingScore {
+            mapping: Mapping(ind.genome.clone()).display(),
+            latency_ms: ind.objectives[0],
+            energy_mj: ind.objectives[1],
+            dacc: *ind.objectives.get(2).unwrap_or(&0.0),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("mapping", json::s(&self.mapping)),
+            ("latency_ms", json::num(self.latency_ms)),
+            ("energy_mj", json::num(self.energy_mj)),
+            ("dacc", json::num(self.dacc)),
+        ])
+    }
+}
+
+/// Outcome of `afarepart offline` (and of each campaign cell).
+#[derive(Clone, Debug)]
+pub struct OfflineReport {
+    pub model: String,
+    pub scenario: String,
+    pub fault_rate: f32,
+    pub pop_size: usize,
+    pub generations: usize,
+    pub mode: String,
+    pub eval_threads: usize,
+    pub front: Vec<MappingScore>,
+    pub deployed: MappingScore,
+    pub evaluations: usize,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    pub cache_hit_rate: f64,
+}
+
+impl OfflineReport {
+    pub fn from_outcome(
+        model: &str,
+        scenario: &str,
+        fault_rate: f32,
+        pop_size: usize,
+        generations: usize,
+        surrogate: bool,
+        eval_threads: usize,
+        out: &OfflineOutcome,
+    ) -> OfflineReport {
+        let (hits, misses, rate) = out.cache;
+        OfflineReport {
+            model: model.to_string(),
+            scenario: scenario.to_string(),
+            fault_rate,
+            pop_size,
+            generations,
+            mode: (if surrogate { "surrogate" } else { "exact" }).to_string(),
+            eval_threads,
+            front: out.front.iter().map(MappingScore::from_individual).collect(),
+            deployed: MappingScore {
+                mapping: out.deployed.display(),
+                latency_ms: out.deployed_objectives[0],
+                energy_mj: out.deployed_objectives[1],
+                dacc: out.deployed_objectives[2],
+            },
+            evaluations: out.evaluations,
+            cache_hits: hits,
+            cache_misses: misses,
+            cache_hit_rate: rate,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("command", json::s("offline")),
+            ("model", json::s(&self.model)),
+            ("scenario", json::s(&self.scenario)),
+            ("fault_rate", super::schema::f32_json(self.fault_rate)),
+            ("pop_size", json::num(self.pop_size as f64)),
+            ("generations", json::num(self.generations as f64)),
+            ("mode", json::s(&self.mode)),
+            ("eval_threads", json::num(self.eval_threads as f64)),
+            ("front", json::arr(self.front.iter().map(MappingScore::to_json))),
+            ("deployed", self.deployed.to_json()),
+            ("evaluations", json::num(self.evaluations as f64)),
+            ("cache_hits", json::num(self.cache_hits as f64)),
+            ("cache_misses", json::num(self.cache_misses as f64)),
+            ("cache_hit_rate", json::num(self.cache_hit_rate)),
+        ])
+    }
+}
+
+/// Outcome of `afarepart online`.
+#[derive(Clone, Debug)]
+pub struct OnlineReport {
+    pub model: String,
+    pub theta: f64,
+    pub ticks: usize,
+    pub lookahead: usize,
+    pub initial_mapping: String,
+    pub final_mapping: String,
+    pub batches_served: usize,
+    pub reconfigurations: usize,
+    pub speculative_discarded: usize,
+    pub cache_lifetime_hits: usize,
+    pub cache_lifetime_misses: usize,
+    pub exec_mean_ms: Option<f64>,
+    pub exec_p95_ms: Option<f64>,
+    pub timeline: Vec<TimelineEntry>,
+}
+
+/// One serving tick in the JSON timeline.
+#[derive(Clone, Debug)]
+pub struct TimelineEntry {
+    pub tick: usize,
+    pub sim_time_s: f64,
+    pub env_rate_dev0: f32,
+    pub batch_accuracy: f64,
+    pub rolling_accuracy: f64,
+    pub mapping: String,
+    pub reconfigured: bool,
+}
+
+impl OnlineReport {
+    pub fn from_outcome(
+        model: &str,
+        theta: f64,
+        lookahead: usize,
+        initial: &Mapping,
+        out: &OnlineOutcome,
+    ) -> OnlineReport {
+        let exec = out.metrics.exec_summary();
+        OnlineReport {
+            model: model.to_string(),
+            theta,
+            ticks: out.timeline.len(),
+            lookahead,
+            initial_mapping: initial.display(),
+            final_mapping: out.final_mapping.display(),
+            batches_served: out.metrics.batches_served,
+            reconfigurations: out.metrics.reconfigurations,
+            speculative_discarded: out.metrics.speculative_discarded,
+            cache_lifetime_hits: out.cache_lifetime.hits,
+            cache_lifetime_misses: out.cache_lifetime.misses,
+            exec_mean_ms: exec.as_ref().map(|s| s.mean),
+            exec_p95_ms: exec.as_ref().map(|s| s.p95),
+            timeline: out
+                .timeline
+                .iter()
+                .map(|p| TimelineEntry {
+                    tick: p.tick,
+                    sim_time_s: p.sim_time_s,
+                    env_rate_dev0: p.env_rate_dev0,
+                    batch_accuracy: p.batch_accuracy,
+                    rolling_accuracy: p.rolling_accuracy,
+                    mapping: p.mapping.display(),
+                    reconfigured: p.reconfigured,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let timeline = self.timeline.iter().map(|p| {
+            json::obj(vec![
+                ("tick", json::num(p.tick as f64)),
+                ("sim_time_s", json::num(p.sim_time_s)),
+                ("env_rate_dev0", super::schema::f32_json(p.env_rate_dev0)),
+                ("batch_accuracy", json::num(p.batch_accuracy)),
+                ("rolling_accuracy", json::num(p.rolling_accuracy)),
+                ("mapping", json::s(&p.mapping)),
+                ("reconfigured", Value::Bool(p.reconfigured)),
+            ])
+        });
+        let mut fields = vec![
+            ("command", json::s("online")),
+            ("model", json::s(&self.model)),
+            ("theta", json::num(self.theta)),
+            ("ticks", json::num(self.ticks as f64)),
+            ("lookahead", json::num(self.lookahead as f64)),
+            ("initial_mapping", json::s(&self.initial_mapping)),
+            ("final_mapping", json::s(&self.final_mapping)),
+            ("batches_served", json::num(self.batches_served as f64)),
+            ("reconfigurations", json::num(self.reconfigurations as f64)),
+            ("speculative_discarded", json::num(self.speculative_discarded as f64)),
+            ("cache_lifetime_hits", json::num(self.cache_lifetime_hits as f64)),
+            ("cache_lifetime_misses", json::num(self.cache_lifetime_misses as f64)),
+            ("timeline", json::arr(timeline)),
+        ];
+        if let Some(m) = self.exec_mean_ms {
+            fields.push(("exec_mean_ms", json::num(m)));
+        }
+        if let Some(p) = self.exec_p95_ms {
+            fields.push(("exec_p95_ms", json::num(p)));
+        }
+        json::obj(fields)
+    }
+}
+
+/// Outcome of `afarepart sweep`: per-unit accuracy drops over a rate grid.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub model: String,
+    pub clean_acc: f64,
+    pub rate_grid: Vec<f32>,
+    pub units: Vec<SweepUnit>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepUnit {
+    pub name: String,
+    pub kind: String,
+    /// Accuracy drop per grid rate, weight faults.
+    pub w_drop: Vec<f64>,
+    /// Accuracy drop per grid rate, activation faults.
+    pub a_drop: Vec<f64>,
+}
+
+impl SweepReport {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("command", json::s("sweep")),
+            ("model", json::s(&self.model)),
+            ("clean_acc", json::num(self.clean_acc)),
+            (
+                "rate_grid",
+                json::arr(self.rate_grid.iter().map(|&r| super::schema::f32_json(r))),
+            ),
+            (
+                "units",
+                json::arr(self.units.iter().map(|u| {
+                    json::obj(vec![
+                        ("name", json::s(&u.name)),
+                        ("kind", json::s(&u.kind)),
+                        ("w_drop", json::arr(u.w_drop.iter().map(|&x| json::num(x)))),
+                        ("a_drop", json::arr(u.a_drop.iter().map(|&x| json::num(x)))),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Outcome of `afarepart compare`: one row per strategy.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub model: String,
+    pub scenario: String,
+    pub fault_rate: f32,
+    pub rows: Vec<CompareRow>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CompareRow {
+    pub tool: String,
+    pub mapping: String,
+    pub faulty_acc: f64,
+    pub latency_ms: f64,
+    pub energy_mj: f64,
+}
+
+impl CompareReport {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("command", json::s("compare")),
+            ("model", json::s(&self.model)),
+            ("scenario", json::s(&self.scenario)),
+            ("fault_rate", super::schema::f32_json(self.fault_rate)),
+            (
+                "rows",
+                json::arr(self.rows.iter().map(|r| {
+                    json::obj(vec![
+                        ("tool", json::s(&r.tool)),
+                        ("mapping", json::s(&r.mapping)),
+                        ("faulty_acc", json::num(r.faulty_acc)),
+                        ("latency_ms", json::num(r.latency_ms)),
+                        ("energy_mj", json::num(r.energy_mj)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Outcome of `afarepart info`: platform + model + cost tables.
+#[derive(Clone, Debug)]
+pub struct InfoReport {
+    pub platform: String,
+    pub device_names: Vec<String>,
+    pub model: String,
+    pub num_units: usize,
+    pub precision: usize,
+    pub faulty_bits: usize,
+    pub batch: usize,
+    pub clean_acc: f64,
+    pub units: Vec<InfoUnit>,
+}
+
+#[derive(Clone, Debug)]
+pub struct InfoUnit {
+    pub name: String,
+    pub kind: String,
+    pub macs: u64,
+    pub w_bytes: u64,
+    /// Latency (ms) on each platform device, in device order.
+    pub latency_ms: Vec<f64>,
+    /// Energy (mJ) on each platform device, in device order.
+    pub energy_mj: Vec<f64>,
+}
+
+impl InfoReport {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("command", json::s("info")),
+            ("platform", json::s(&self.platform)),
+            ("devices", json::arr(self.device_names.iter().map(|d| json::s(d)))),
+            ("model", json::s(&self.model)),
+            ("num_units", json::num(self.num_units as f64)),
+            ("precision", json::num(self.precision as f64)),
+            ("faulty_bits", json::num(self.faulty_bits as f64)),
+            ("batch", json::num(self.batch as f64)),
+            ("clean_acc", json::num(self.clean_acc)),
+            (
+                "units",
+                json::arr(self.units.iter().map(|u| {
+                    json::obj(vec![
+                        ("name", json::s(&u.name)),
+                        ("kind", json::s(&u.kind)),
+                        ("macs", json::num(u.macs as f64)),
+                        ("w_bytes", json::num(u.w_bytes as f64)),
+                        ("latency_ms", json::arr(u.latency_ms.iter().map(|&x| json::num(x)))),
+                        ("energy_mj", json::arr(u.energy_mj.iter().map(|&x| json::num(x)))),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_parses() {
+        let raw: Vec<String> = ["x", "--format", "json"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&raw, &[]);
+        assert_eq!(OutputFormat::from_args(&a).unwrap(), OutputFormat::Json);
+        let a = Args::parse(&["x".to_string()], &[]);
+        assert_eq!(OutputFormat::from_args(&a).unwrap(), OutputFormat::Text);
+        let raw: Vec<String> = ["x", "--format", "yaml"].iter().map(|s| s.to_string()).collect();
+        assert!(OutputFormat::from_args(&Args::parse(&raw, &[])).is_err());
+    }
+
+    #[test]
+    fn offline_report_serializes() {
+        let ind = Individual {
+            genome: vec![0, 1, 1],
+            objectives: vec![1.5, 0.2, 0.03],
+            rank: 0,
+            crowding: 0.0,
+        };
+        let out = OfflineOutcome {
+            front: vec![ind],
+            deployed: Mapping(vec![0, 1, 1]),
+            deployed_objectives: vec![1.5, 0.2, 0.03],
+            evaluations: 100,
+            cache: (80, 20, 0.8),
+        };
+        let r = OfflineReport::from_outcome("toy", "input+weight", 0.2, 24, 12, false, 2, &out);
+        let v = r.to_json();
+        assert_eq!(v.get("model").unwrap().as_str(), Some("toy"));
+        assert_eq!(v.get("evaluations").unwrap().as_usize(), Some(100));
+        assert_eq!(v.path(&["deployed", "mapping"]).unwrap().as_str(), Some("011"));
+        // serialized text parses back
+        let text = json::to_string(&v);
+        assert_eq!(json::parse(&text).unwrap(), v);
+    }
+}

@@ -1,0 +1,286 @@
+//! Declarative platform topology: an arbitrary device list (accelerator
+//! kind + per-device fault susceptibility) plus inter-device link
+//! parameters — the data that used to be hardcoded as
+//! `Platform::default_two_device()` / `DeviceFaultProfile::default_two_device()`
+//! at every call site.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::schema::*;
+use crate::faults::DeviceFaultProfile;
+use crate::hw::{Accelerator, Eyeriss, HostCpu, Link, Platform, Simba};
+use crate::util::json::{self, Value};
+
+/// A modeled accelerator kind — the single registry mapping spec names
+/// to cost models and default fault susceptibility.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccelKind {
+    Eyeriss,
+    Simba,
+    Cpu,
+}
+
+impl AccelKind {
+    pub const ALL: [AccelKind; 3] = [AccelKind::Eyeriss, AccelKind::Simba, AccelKind::Cpu];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AccelKind::Eyeriss => "eyeriss",
+            AccelKind::Simba => "simba",
+            AccelKind::Cpu => "cpu",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AccelKind> {
+        Self::ALL.into_iter().find(|k| k.as_str() == s)
+    }
+
+    /// Construct this kind's analytical cost model.
+    pub fn build_accelerator(self) -> Box<dyn Accelerator + Send + Sync> {
+        match self {
+            AccelKind::Eyeriss => Box::new(Eyeriss::default()),
+            AccelKind::Simba => Box::new(Simba::default()),
+            AccelKind::Cpu => Box::new(HostCpu::default()),
+        }
+    }
+
+    /// Default fault susceptibility (weight, activation multipliers) —
+    /// the values of the paper-default platforms: the voltage-scaled edge
+    /// part feels the full environment rate, the packaged part a
+    /// fraction, the ECC host core none.
+    pub fn default_fault_mults(self) -> (f32, f32) {
+        match self {
+            AccelKind::Eyeriss => (1.0, 1.0),
+            AccelKind::Simba => (0.15, 0.15),
+            AccelKind::Cpu => (0.0, 0.0),
+        }
+    }
+
+    fn known_kinds() -> String {
+        Self::ALL.map(|k| k.as_str()).join(", ")
+    }
+}
+
+/// One device of the platform: cost model kind, display name, and fault
+/// susceptibility multipliers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceEntry {
+    pub kind: AccelKind,
+    pub name: String,
+    pub w_mult: f32,
+    pub a_mult: f32,
+}
+
+impl DeviceEntry {
+    pub fn new(kind: AccelKind) -> DeviceEntry {
+        let (w_mult, a_mult) = kind.default_fault_mults();
+        DeviceEntry { kind, name: kind.as_str().to_string(), w_mult, a_mult }
+    }
+
+    fn from_json(v: &Value, ctx: &str) -> Result<DeviceEntry> {
+        let obj = expect_obj(v, ctx)?;
+        reject_unknown(obj, &["kind", "name", "w_mult", "a_mult"], ctx)?;
+        let kind_str = require_str(obj, "kind", ctx)?;
+        let Some(kind) = AccelKind::parse(kind_str) else {
+            bail!("{ctx}.kind: unknown accelerator kind {kind_str:?} (known: {})",
+                AccelKind::known_kinds());
+        };
+        let mut e = DeviceEntry::new(kind);
+        if let Some(name) = str_field(obj, "name", ctx)? {
+            e.name = name.to_string();
+        }
+        if let Some(x) = f32_field(obj, "w_mult", ctx)? {
+            e.w_mult = x;
+        }
+        if let Some(x) = f32_field(obj, "a_mult", ctx)? {
+            e.a_mult = x;
+        }
+        Ok(e)
+    }
+
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("kind", json::s(self.kind.as_str())),
+            ("name", json::s(&self.name)),
+            ("w_mult", f32_json(self.w_mult)),
+            ("a_mult", f32_json(self.a_mult)),
+        ])
+    }
+}
+
+/// Inter-device link parameters (see `crate::hw::Link`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkSpec {
+    pub bandwidth_gbps: f64,
+    pub setup_us: f64,
+    pub e_pj_byte: f64,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        let l = Link::default();
+        LinkSpec { bandwidth_gbps: l.bandwidth_gbps, setup_us: l.setup_us, e_pj_byte: l.e_pj_byte }
+    }
+}
+
+impl LinkSpec {
+    fn apply_json(&mut self, v: &Value, ctx: &str) -> Result<()> {
+        let obj = expect_obj(v, ctx)?;
+        reject_unknown(obj, &["bandwidth_gbps", "setup_us", "e_pj_byte"], ctx)?;
+        if let Some(x) = f64_field(obj, "bandwidth_gbps", ctx)? {
+            self.bandwidth_gbps = x;
+        }
+        if let Some(x) = f64_field(obj, "setup_us", ctx)? {
+            self.setup_us = x;
+        }
+        if let Some(x) = f64_field(obj, "e_pj_byte", ctx)? {
+            self.e_pj_byte = x;
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("bandwidth_gbps", json::num(self.bandwidth_gbps)),
+            ("setup_us", json::num(self.setup_us)),
+            ("e_pj_byte", json::num(self.e_pj_byte)),
+        ])
+    }
+
+    pub fn build(&self) -> Link {
+        Link {
+            bandwidth_gbps: self.bandwidth_gbps,
+            setup_us: self.setup_us,
+            e_pj_byte: self.e_pj_byte,
+        }
+    }
+}
+
+/// The declarative platform: device list + link.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlatformSpec {
+    pub devices: Vec<DeviceEntry>,
+    pub link: LinkSpec,
+}
+
+impl Default for PlatformSpec {
+    /// The paper's two-device platform: Eyeriss (fault-prone) + SIMBA
+    /// (shielded) — bit-identical cost tables and fault profiles to the
+    /// legacy `default_two_device()` constructors.
+    fn default() -> Self {
+        PlatformSpec {
+            devices: vec![DeviceEntry::new(AccelKind::Eyeriss), DeviceEntry::new(AccelKind::Simba)],
+            link: LinkSpec::default(),
+        }
+    }
+}
+
+impl PlatformSpec {
+    /// The extended three-device platform (+ ECC host core).
+    pub fn three_device() -> PlatformSpec {
+        let mut p = PlatformSpec::default();
+        p.devices.push(DeviceEntry::new(AccelKind::Cpu));
+        p
+    }
+
+    pub(crate) fn apply_json(&mut self, obj: &BTreeMap<String, Value>, ctx: &str) -> Result<()> {
+        reject_unknown(obj, &["devices", "link"], ctx)?;
+        if let Some(v) = obj.get("devices") {
+            let arr = expect_arr(v, &format!("{ctx}.devices"))?;
+            if arr.len() < 2 {
+                bail!("{ctx}.devices: a platform needs at least 2 devices, got {}", arr.len());
+            }
+            self.devices = arr
+                .iter()
+                .enumerate()
+                .map(|(i, d)| DeviceEntry::from_json(d, &format!("{ctx}.devices[{i}]")))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("link") {
+            self.link.apply_json(v, &format!("{ctx}.link"))?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("devices", json::arr(self.devices.iter().map(DeviceEntry::to_json))),
+            ("link", self.link.to_json()),
+        ])
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Materialize the cost models + fault profiles this spec describes.
+    pub fn build(&self) -> (Platform, Vec<DeviceFaultProfile>) {
+        let devices = self.devices.iter().map(|e| e.kind.build_accelerator()).collect();
+        let profiles = self
+            .devices
+            .iter()
+            .map(|e| DeviceFaultProfile::new(&e.name, e.w_mult, e.a_mult))
+            .collect();
+        (Platform { devices, link: self.link.build() }, profiles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_legacy_two_device() {
+        let (platform, profiles) = PlatformSpec::default().build();
+        let legacy = Platform::default_two_device();
+        assert_eq!(platform.num_devices(), legacy.num_devices());
+        let legacy_profiles = DeviceFaultProfile::default_two_device();
+        for (p, l) in profiles.iter().zip(&legacy_profiles) {
+            assert_eq!(p.device, l.device);
+            assert_eq!(p.w_mult, l.w_mult);
+            assert_eq!(p.a_mult, l.a_mult);
+        }
+        assert_eq!(platform.link.bandwidth_gbps, legacy.link.bandwidth_gbps);
+        assert_eq!(platform.link.setup_us, legacy.link.setup_us);
+        assert_eq!(platform.link.e_pj_byte, legacy.link.e_pj_byte);
+    }
+
+    #[test]
+    fn unknown_device_key_rejected() {
+        let mut spec = PlatformSpec::default();
+        let v = crate::util::json::parse(
+            r#"{"devices": [{"kind": "eyeriss", "wmult": 2.0}, {"kind": "simba"}]}"#,
+        )
+        .unwrap();
+        let err = spec.apply_json(v.as_obj().unwrap(), "platform").unwrap_err();
+        assert!(format!("{err}").contains("wmult"), "{err}");
+    }
+
+    #[test]
+    fn single_device_platform_rejected() {
+        let mut spec = PlatformSpec::default();
+        let v = crate::util::json::parse(r#"{"devices": [{"kind": "eyeriss"}]}"#).unwrap();
+        assert!(spec.apply_json(v.as_obj().unwrap(), "platform").is_err());
+    }
+
+    #[test]
+    fn custom_three_device_builds() {
+        let mut spec = PlatformSpec::default();
+        let v = crate::util::json::parse(
+            r#"{"devices": [
+                {"kind": "eyeriss", "w_mult": 0.8},
+                {"kind": "simba", "name": "package0"},
+                {"kind": "cpu"}
+            ]}"#,
+        )
+        .unwrap();
+        spec.apply_json(v.as_obj().unwrap(), "platform").unwrap();
+        let (platform, profiles) = spec.build();
+        assert_eq!(platform.num_devices(), 3);
+        assert_eq!(profiles[0].w_mult, 0.8);
+        assert_eq!(profiles[1].device, "package0");
+        assert_eq!(profiles[2].w_mult, 0.0); // ECC host core default
+    }
+}

@@ -1,0 +1,137 @@
+//! Strict-schema helpers shared by every spec sub-parser.
+//!
+//! The declarative API rejects unknown keys at *every* nesting level — a
+//! typo'd key is a hard error naming the offending key and the allowed
+//! set, never a silently ignored override. All field getters type-check
+//! and report the full `section.key` path.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Value;
+
+pub(crate) fn expect_obj<'a>(v: &'a Value, ctx: &str) -> Result<&'a BTreeMap<String, Value>> {
+    match v.as_obj() {
+        Some(o) => Ok(o),
+        None => bail!("{ctx}: expected an object"),
+    }
+}
+
+pub(crate) fn expect_arr<'a>(v: &'a Value, ctx: &str) -> Result<&'a [Value]> {
+    match v.as_arr() {
+        Some(a) => Ok(a),
+        None => bail!("{ctx}: expected an array"),
+    }
+}
+
+/// Reject any key not in `allowed` (strict unknown-key policy).
+pub(crate) fn reject_unknown(
+    obj: &BTreeMap<String, Value>,
+    allowed: &[&str],
+    ctx: &str,
+) -> Result<()> {
+    for k in obj.keys() {
+        if !allowed.contains(&k.as_str()) {
+            bail!("{ctx}: unknown key {k:?} (allowed: {})", allowed.join(", "));
+        }
+    }
+    Ok(())
+}
+
+pub(crate) fn f64_field(
+    obj: &BTreeMap<String, Value>,
+    key: &str,
+    ctx: &str,
+) -> Result<Option<f64>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(x) => Ok(Some(x)),
+            None => bail!("{ctx}.{key}: expected a number"),
+        },
+    }
+}
+
+pub(crate) fn f32_field(
+    obj: &BTreeMap<String, Value>,
+    key: &str,
+    ctx: &str,
+) -> Result<Option<f32>> {
+    Ok(f64_field(obj, key, ctx)?.map(|x| x as f32))
+}
+
+/// Largest integer exactly representable in the f64-backed JSON parser
+/// (2^53) — also the acceptance bound for integer fields, so a stray
+/// `1e30` is a hard error instead of an `as`-cast saturating to MAX.
+const MAX_SAFE_INT: f64 = 9_007_199_254_740_992.0;
+
+pub(crate) fn usize_field(
+    obj: &BTreeMap<String, Value>,
+    key: &str,
+    ctx: &str,
+) -> Result<Option<usize>> {
+    match f64_field(obj, key, ctx)? {
+        None => Ok(None),
+        Some(x) if x >= 0.0 && x.fract() == 0.0 && x <= MAX_SAFE_INT => Ok(Some(x as usize)),
+        Some(x) => bail!("{ctx}.{key}: expected a non-negative integer (≤ 2^53), got {x}"),
+    }
+}
+
+pub(crate) fn u64_field(
+    obj: &BTreeMap<String, Value>,
+    key: &str,
+    ctx: &str,
+) -> Result<Option<u64>> {
+    match f64_field(obj, key, ctx)? {
+        None => Ok(None),
+        Some(x) if x >= 0.0 && x.fract() == 0.0 && x <= MAX_SAFE_INT => Ok(Some(x as u64)),
+        Some(x) => bail!("{ctx}.{key}: expected a non-negative integer (≤ 2^53), got {x}"),
+    }
+}
+
+pub(crate) fn bool_field(
+    obj: &BTreeMap<String, Value>,
+    key: &str,
+    ctx: &str,
+) -> Result<Option<bool>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => match v.as_bool() {
+            Some(b) => Ok(Some(b)),
+            None => bail!("{ctx}.{key}: expected a boolean"),
+        },
+    }
+}
+
+pub(crate) fn str_field<'a>(
+    obj: &'a BTreeMap<String, Value>,
+    key: &str,
+    ctx: &str,
+) -> Result<Option<&'a str>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => match v.as_str() {
+            Some(s) => Ok(Some(s)),
+            None => bail!("{ctx}.{key}: expected a string"),
+        },
+    }
+}
+
+pub(crate) fn require_str<'a>(
+    obj: &'a BTreeMap<String, Value>,
+    key: &str,
+    ctx: &str,
+) -> Result<&'a str> {
+    match str_field(obj, key, ctx)? {
+        Some(s) => Ok(s),
+        None => bail!("{ctx}: missing required key {key:?}"),
+    }
+}
+
+/// Serialize an `f32` through its shortest decimal representation so the
+/// emitted JSON reads `0.15`, not `0.15000000596046448`, and survives
+/// parse → serialize → parse unchanged.
+pub(crate) fn f32_json(x: f32) -> Value {
+    Value::Num(format!("{x}").parse::<f64>().expect("f32 display always reparses"))
+}

@@ -8,7 +8,7 @@ use afarepart::baselines::{greedy_latency_mapping, CnnParted, FaultUnaware};
 use afarepart::config::ExperimentConfig;
 use afarepart::coordinator::offline::optimize_partitions;
 use afarepart::coordinator::server::Batcher;
-use afarepart::faults::{DeviceFaultProfile, DriftSchedule, FaultEnv, FaultScenario};
+use afarepart::faults::{DeviceFaultProfile, DriftComponent, FaultEnv, FaultScenario};
 use afarepart::hw::Platform;
 use afarepart::model::Manifest;
 use afarepart::nsga2::Nsga2Config;
@@ -180,7 +180,7 @@ fn reoptimization_reacts_to_attack() {
     let env = FaultEnv {
         base_rate: 0.15,
         profiles: DeviceFaultProfile::default_two_device(),
-        drift: DriftSchedule::StepAttack { device: 0, at_s: 10.0, factor: 3.0 },
+        drift: vec![DriftComponent::step(0, 10.0, 3.0)],
     };
     let mut ev = PartitionEvaluator::new(
         &manifest,

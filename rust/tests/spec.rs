@@ -1,0 +1,367 @@
+//! Declarative-API tests (ISSUE 2): spec JSON round-trip, strict
+//! unknown-key rejection, the documented precedence chain
+//! (CLI > env > file > defaults), a golden check that the default
+//! `ExperimentSpec` reproduces the legacy hardcoded platform bit-for-bit
+//! (cost tables, fault profiles, and the offline Pareto front), and a
+//! 3-model × 2-scenario campaign running end-to-end through the batched
+//! evaluation engine.
+
+use afarepart::bench::suite::{front_fingerprint, synthetic_manifest, synthetic_sensitivity};
+use afarepart::cli::Args;
+use afarepart::coordinator::offline::optimize_partitions;
+use afarepart::faults::{DeviceFaultProfile, DriftComponent, FaultScenario};
+use afarepart::hw::Platform;
+use afarepart::nsga2::Nsga2Config;
+use afarepart::partition::{DaccMode, PartitionEvaluator};
+use afarepart::spec::campaign::run_campaign;
+use afarepart::spec::{CampaignSpec, ExperimentSpec, SelectionPolicy};
+use afarepart::util::json;
+
+fn args(raw: &[&str]) -> Args {
+    let raw: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
+    Args::parse(&raw, &["surrogate", "link-cost", "verbose", "help"])
+}
+
+// ---------------------------------------------------------------- round-trip
+
+/// parse → serialize → parse must be the identity, and the serialized
+/// text must be stable across cycles.
+#[test]
+fn spec_json_round_trip_identity() {
+    // a spec that exercises every section with non-default values
+    let text = r#"{
+        "model": "resnet18",
+        "eval_limit": 128,
+        "surrogate": true,
+        "eval_threads": 4,
+        "seed": 99,
+        "platform": {
+            "devices": [
+                {"kind": "eyeriss", "w_mult": 0.8, "a_mult": 0.9},
+                {"kind": "simba"},
+                {"kind": "cpu", "name": "host0"}
+            ],
+            "link": {"bandwidth_gbps": 4.0}
+        },
+        "fault_env": {
+            "fault_rate": 0.3,
+            "scenario": "weight-only",
+            "drift": [
+                {"kind": "step", "device": 0, "at_s": 30.0, "factor": 2.0},
+                {"kind": "sinusoid", "device": 0, "period_s": 8.0, "amp": 0.25},
+                {"kind": "decay", "device": 1, "factor": 3.0, "tau_s": 10.0}
+            ]
+        },
+        "optimizer": {"pop_size": 24, "generations": 12},
+        "selection": {"policy": "knee"},
+        "online": {"ticks": 60, "reopt_pop": 8, "reopt_seed": 3, "lookahead": 2}
+    }"#;
+    let spec = ExperimentSpec::from_json_str(text).unwrap();
+    assert_eq!(spec.model, "resnet18");
+    assert_eq!(spec.platform.num_devices(), 3);
+    assert_eq!(spec.fault_env.drift.len(), 3);
+    assert_eq!(spec.selection.policy, SelectionPolicy::Knee);
+    assert_eq!(spec.online.ticks, 60);
+    assert_eq!(spec.online.reopt_seed, 3);
+
+    let serialized = spec.to_json_string();
+    let reparsed = ExperimentSpec::from_json_str(&serialized).unwrap();
+    assert_eq!(reparsed, spec, "parse → serialize → parse must be identity");
+    assert_eq!(reparsed.to_json_string(), serialized, "serialized form must be stable");
+}
+
+#[test]
+fn default_spec_round_trips() {
+    let spec = ExperimentSpec::default();
+    let back = ExperimentSpec::from_json_str(&spec.to_json_string()).unwrap();
+    assert_eq!(back, spec);
+}
+
+// ------------------------------------------------------- unknown-key policy
+
+#[test]
+fn unknown_keys_rejected_at_every_level() {
+    for (bad, needle) in [
+        (r#"{"modle": "alexnet"}"#, "modle"),
+        (r#"{"platform": {"device": []}}"#, "device"),
+        (r#"{"platform": {"devices": [{"kind": "eyeriss", "wmult": 1.0}, {"kind": "simba"}]}}"#, "wmult"),
+        (r#"{"fault_env": {"rate": 0.2}}"#, "rate"),
+        (r#"{"fault_env": {"drift": [{"kind": "step", "device": 0, "at_s": 1.0, "factor": 2.0, "amp": 0.1}]}}"#, "amp"),
+        (r#"{"optimizer": {"popsize": 10}}"#, "popsize"),
+        (r#"{"selection": {"latency_budget": 2.0}}"#, "latency_budget"),
+        (r#"{"online": {"thetaa": 0.1}}"#, "thetaa"),
+    ] {
+        let err = ExperimentSpec::from_json_str(bad)
+            .err()
+            .unwrap_or_else(|| panic!("accepted bad spec: {bad}"));
+        assert!(
+            format!("{err:#}").contains(needle),
+            "error for {bad} should name {needle:?}: {err:#}"
+        );
+    }
+}
+
+#[test]
+fn type_errors_rejected() {
+    assert!(ExperimentSpec::from_json_str(r#"{"eval_limit": "many"}"#).is_err());
+    assert!(ExperimentSpec::from_json_str(r#"{"eval_limit": 2.5}"#).is_err());
+    assert!(ExperimentSpec::from_json_str(r#"{"eval_limit": 1e30}"#).is_err());
+    assert!(ExperimentSpec::from_json_str(r#"{"surrogate": 1}"#).is_err());
+    assert!(ExperimentSpec::from_json_str(r#"{"fault_env": {"scenario": "bogus"}}"#).is_err());
+    assert!(ExperimentSpec::from_json_str(r#"{"selection": {"policy": "best"}}"#).is_err());
+}
+
+// ------------------------------------------------------------- precedence
+
+/// The regression the redesign fixes: main.rs used to run apply_args()
+/// *before* apply_env(), so AFARE_* env vars silently overrode explicit
+/// CLI flags, contradicting the documented CLI > env > file > defaults.
+#[test]
+fn precedence_cli_beats_env_beats_file_beats_defaults() {
+    let dir = std::env::temp_dir().join(format!("afare_spec_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("layers.json");
+    std::fs::write(
+        &path,
+        r#"{"eval_limit": 32, "optimizer": {"pop_size": 40, "generations": 20}}"#,
+    )
+    .unwrap();
+
+    let a = args(&["offline", "--spec", path.to_str().unwrap(), "--pop", "10"]);
+    let env = |k: &str| match k {
+        "AFARE_POP" => Some("99".to_string()),
+        "AFARE_EVAL_LIMIT" => Some("64".to_string()),
+        _ => None,
+    };
+    let spec = ExperimentSpec::resolve_with(&a, env).unwrap();
+    // CLI --pop beats AFARE_POP beats the file's 40
+    assert_eq!(spec.optimizer.pop_size, 10, "CLI must beat env and file");
+    // env beats the file
+    assert_eq!(spec.eval_limit, 64, "env must beat file");
+    // file beats defaults where neither CLI nor env speaks
+    assert_eq!(spec.optimizer.generations, 20, "file must beat defaults");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ticks_and_online_settings_fold_into_spec() {
+    // the stray --ticks arg and the reopt budget/seed are spec data now
+    let a = args(&["online", "--ticks", "33", "--theta", "0.02", "--lookahead", "3"]);
+    let spec = ExperimentSpec::resolve_with(&a, |_| None).unwrap();
+    assert_eq!(spec.online.ticks, 33);
+    assert_eq!(spec.online.theta, 0.02);
+    assert_eq!(spec.online.lookahead, 3);
+    let cfg = spec.online.to_online_config(8);
+    assert_eq!(cfg.ticks, 33);
+    assert_eq!(cfg.lookahead, 3);
+    // defaults preserved for everything not overridden
+    assert_eq!(cfg.reopt.pop_size, 16);
+    assert_eq!(cfg.reopt.generations, 6);
+    assert_eq!(cfg.reopt.seed, Nsga2Config::default().seed);
+}
+
+// ------------------------------------------------------------------ golden
+
+/// The default spec's platform must reproduce the legacy
+/// `default_two_device()` latency/energy tables bit-for-bit.
+#[test]
+fn golden_default_platform_tables_bitwise_equal() {
+    let (spec_platform, spec_profiles) = ExperimentSpec::default().platform.build();
+    let legacy_platform = Platform::default_two_device();
+    let legacy_profiles = DeviceFaultProfile::default_two_device();
+
+    let units = synthetic_manifest(12).units;
+    let lat_spec = spec_platform.latency_table(&units);
+    let lat_legacy = legacy_platform.latency_table(&units);
+    let en_spec = spec_platform.energy_table(&units);
+    let en_legacy = legacy_platform.energy_table(&units);
+    for l in 0..units.len() {
+        for d in 0..2 {
+            assert_eq!(
+                lat_spec[l][d].to_bits(),
+                lat_legacy[l][d].to_bits(),
+                "latency[{l}][{d}] differs"
+            );
+            assert_eq!(
+                en_spec[l][d].to_bits(),
+                en_legacy[l][d].to_bits(),
+                "energy[{l}][{d}] differs"
+            );
+        }
+    }
+    assert_eq!(spec_profiles.len(), legacy_profiles.len());
+    for (s, l) in spec_profiles.iter().zip(&legacy_profiles) {
+        assert_eq!(s.device, l.device);
+        assert_eq!(s.w_mult.to_bits(), l.w_mult.to_bits());
+        assert_eq!(s.a_mult.to_bits(), l.a_mult.to_bits());
+    }
+    // link parameters too
+    assert_eq!(spec_platform.link.bandwidth_gbps, legacy_platform.link.bandwidth_gbps);
+    assert_eq!(spec_platform.link.setup_us, legacy_platform.link.setup_us);
+    assert_eq!(spec_platform.link.e_pj_byte, legacy_platform.link.e_pj_byte);
+}
+
+/// The seed offline Pareto front must be bitwise identical whether the
+/// platform comes from the default spec or the legacy constructors.
+#[test]
+fn golden_default_spec_reproduces_offline_front() {
+    let manifest = synthetic_manifest(10);
+    let table = synthetic_sensitivity(10);
+    let nsga2 = Nsga2Config { pop_size: 24, generations: 10, ..Default::default() };
+
+    let run = |platform: &Platform, profiles: &[DeviceFaultProfile]| {
+        let base = 0.2f32;
+        let dev_w: Vec<f32> = profiles.iter().map(|p| base * p.w_mult).collect();
+        let dev_a: Vec<f32> = profiles.iter().map(|p| base * p.a_mult).collect();
+        let mut ev = PartitionEvaluator::new(
+            &manifest,
+            platform,
+            dev_w,
+            dev_a,
+            FaultScenario::InputWeight,
+            0.9,
+            false,
+            DaccMode::Surrogate(&table),
+        );
+        optimize_partitions(&mut ev, &nsga2, true, vec![], |_| {})
+    };
+
+    let (spec_platform, spec_profiles) = ExperimentSpec::default().platform.build();
+    let front_spec = run(&spec_platform, &spec_profiles);
+    let legacy_platform = Platform::default_two_device();
+    let legacy_profiles = DeviceFaultProfile::default_two_device();
+    let front_legacy = run(&legacy_platform, &legacy_profiles);
+
+    assert_eq!(
+        front_fingerprint(&front_spec),
+        front_fingerprint(&front_legacy),
+        "default spec must reproduce the legacy offline Pareto front bitwise"
+    );
+}
+
+/// The default spec's drift stack (demo step attack at t = 30 s) must
+/// not alter the offline (t = 0) environment.
+#[test]
+fn golden_default_drift_is_invisible_offline() {
+    let spec = ExperimentSpec::default();
+    let (_, profiles) = spec.platform.build();
+    let env = spec.fault_env.build(profiles.clone()).unwrap();
+    let constant = afarepart::faults::FaultEnv::constant(spec.fault_env.fault_rate, profiles);
+    assert_eq!(env.dev_w_rates(0.0), constant.dev_w_rates(0.0));
+    assert_eq!(env.dev_a_rates(0.0), constant.dev_a_rates(0.0));
+    // ... and does fire later (it is the online demo attack)
+    assert!(env.dev_w_rates(31.0)[0] > constant.dev_w_rates(31.0)[0]);
+}
+
+// ---------------------------------------------------------------- campaign
+
+/// 3 models × 2 scenarios end-to-end through the batched evaluation
+/// engine, with a consolidated JSON report.
+#[test]
+fn campaign_3x2_runs_through_batched_engine() {
+    let cspec = CampaignSpec::from_json_str(
+        r#"{
+            "base": {
+                "eval_threads": 2,
+                "optimizer": {"pop_size": 12, "generations": 3}
+            },
+            "grid": {
+                "models": ["synthetic-L6", "synthetic-L8", "synthetic-L10"],
+                "scenarios": ["w", "iw"]
+            }
+        }"#,
+    )
+    .unwrap();
+    assert_eq!(cspec.num_cells(), 6);
+
+    let mut progressed = 0;
+    let report = run_campaign(&cspec, |i, total, _| {
+        assert_eq!(total, 6);
+        assert!(i < 6);
+        progressed += 1;
+    })
+    .unwrap();
+    assert_eq!(progressed, 6);
+    assert_eq!(report.cells.len(), 6);
+    assert_eq!(report.engine_threads, 2);
+
+    // every cell ran the full NSGA-II budget through the batched engine
+    let per_cell_evals = 12 * (3 + 1);
+    assert_eq!(report.total_evaluations, 6 * per_cell_evals);
+    // caching + in-batch dedup means no more backend evaluations than
+    // submissions (on the small L6 grid, strictly fewer in practice)
+    assert!(report.total_backend_evals > 0);
+    assert!(report.total_backend_evals <= report.total_evaluations);
+
+    for cell in &report.cells {
+        assert!(!cell.offline.front.is_empty());
+        assert!(!cell.offline.deployed.mapping.is_empty());
+        assert_eq!(cell.offline.evaluations, per_cell_evals);
+    }
+
+    // the consolidated report is valid JSON and carries every cell
+    let doc = report.to_json();
+    let text = json::to_string(&doc);
+    let parsed = json::parse(&text).unwrap();
+    assert_eq!(parsed.get("num_cells").unwrap().as_usize(), Some(6));
+    assert_eq!(parsed.get("cells").unwrap().as_arr().unwrap().len(), 6);
+}
+
+/// Campaigns are deterministic: the same spec yields the same deployed
+/// mappings and objectives.
+#[test]
+fn campaign_is_deterministic() {
+    let text = r#"{
+        "base": {"eval_threads": 3, "optimizer": {"pop_size": 8, "generations": 2}, "seed": 21},
+        "grid": {
+            "models": ["synthetic-L6"],
+            "fault_rates": [0.1, 0.4],
+            "drifts": [
+                {"name": "ambient"},
+                {"name": "attacked", "eval_at_s": 60.0,
+                 "components": [{"kind": "step", "device": 0, "at_s": 30.0, "factor": 2.0}]}
+            ]
+        }
+    }"#;
+    let cspec = CampaignSpec::from_json_str(text).unwrap();
+    let r1 = run_campaign(&cspec, |_, _, _| {}).unwrap();
+    let r2 = run_campaign(&cspec, |_, _, _| {}).unwrap();
+    assert_eq!(r1.cells.len(), 4);
+    for (a, b) in r1.cells.iter().zip(&r2.cells) {
+        assert_eq!(a.offline.deployed.mapping, b.offline.deployed.mapping);
+        assert_eq!(a.offline.deployed.dacc.to_bits(), b.offline.deployed.dacc.to_bits());
+        assert_eq!(a.offline.front.len(), b.offline.front.len());
+    }
+    // the attacked drift cell at its probe time sees a harsher dev0 and
+    // must not be *less* robust in its deployment than ambient
+    let ambient = &r1.cells[0];
+    let attacked = &r1.cells[1];
+    assert_eq!(ambient.drift, "ambient");
+    assert_eq!(attacked.drift, "attacked");
+}
+
+/// Builder → spec → campaign composition: a builder-produced spec can
+/// seed a campaign base.
+#[test]
+fn builder_spec_feeds_campaign() {
+    let spec = afarepart::experiment::Experiment::builder()
+        .fault_rate(0.25)
+        .scenario(FaultScenario::WeightOnly)
+        .eval_threads(2)
+        .pop(8)
+        .gens(2)
+        .drift(vec![DriftComponent::sinusoid(0, 8.0, 0.5)])
+        .into_spec();
+    assert_eq!(spec.fault_env.drift.len(), 1);
+    let mut cspec = CampaignSpec::singleton(spec);
+    // the base drift stack becomes the default drift axis, not ambient
+    assert_eq!(cspec.drifts.len(), 1);
+    assert_eq!(cspec.drifts[0].name, "base");
+    assert_eq!(cspec.drifts[0].components.len(), 1);
+    cspec.models = vec!["synthetic-L6".into()];
+    let report = run_campaign(&cspec, |_, _, _| {}).unwrap();
+    assert_eq!(report.cells.len(), 1);
+    assert_eq!(report.cells[0].offline.scenario, "weight-only");
+    assert_eq!(report.cells[0].drift, "base");
+}

@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Repo gate: build, tests, and the eval-engine perf section with a
+# monotonicity check on BENCH_eval_engine.json (ROADMAP: keep the
+# 1/2/4-thread trajectory monotone). Run via `make check`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== bench_perf (eval-engine section, fast budgets) =="
+AFARE_BENCH_FAST=1 cargo bench --bench bench_perf
+
+echo "== BENCH_eval_engine.json monotonicity =="
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "python3 unavailable; skipping monotonicity check"
+    exit 0
+fi
+python3 - <<'EOF'
+import json
+import sys
+
+with open("BENCH_eval_engine.json") as f:
+    doc = json.load(f)
+
+rows = sorted(doc["threads"], key=lambda r: r["threads"])
+if len(rows) < 2:
+    sys.exit("eval-engine bench recorded fewer than 2 thread counts")
+
+# Wall-clock must not regress as threads grow (10% timing-noise slack).
+SLACK = 1.10
+ok = True
+for lo, hi in zip(rows, rows[1:]):
+    if hi["wall_ms"] > lo["wall_ms"] * SLACK:
+        ok = False
+        print(
+            f"NON-MONOTONE: {hi['threads']}T wall {hi['wall_ms']:.1f} ms vs "
+            f"{lo['threads']}T {lo['wall_ms']:.1f} ms (> {SLACK:.0%})"
+        )
+for r in rows:
+    print(f"  {r['threads']}T: {r['wall_ms']:.1f} ms  {r['evals_per_s']:.0f} evals/s")
+
+speedup = doc.get("speedup_4t_vs_1t", 0.0)
+print(f"  speedup {rows[-1]['threads']}T vs 1T: {speedup:.2f}x")
+if speedup < 1.0:
+    ok = False
+    print("NON-MONOTONE: top thread count slower than serial")
+if not doc.get("deterministic_across_threads", False):
+    ok = False
+    print("DETERMINISM flag missing from bench output")
+
+sys.exit(0 if ok else "eval-engine perf trajectory regressed")
+EOF
+echo "check: OK"
