@@ -1,14 +1,19 @@
 # AFarePart repo tooling.
 #
-#   make check      build + tests + eval-engine perf gate (scripts/check.sh)
-#   make artifacts  regenerate the compiled model artifacts (needs the
-#                   python/JAX build-time stack; the rust binary only
-#                   consumes the result)
+#   make check        build + tests + eval-engine perf gate (scripts/check.sh)
+#   make chaos-smoke  chaos-enabled synthetic online run: must survive the
+#                     default failure stack and be bitwise-deterministic
+#   make artifacts    regenerate the compiled model artifacts (needs the
+#                     python/JAX build-time stack; the rust binary only
+#                     consumes the result)
 
-.PHONY: check artifacts
+.PHONY: check chaos-smoke artifacts
 
 check:
 	bash scripts/check.sh
+
+chaos-smoke:
+	bash scripts/chaos_smoke.sh
 
 artifacts:
 	python3 python/compile/aot.py

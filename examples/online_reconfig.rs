@@ -16,7 +16,7 @@ use anyhow::Result;
 use afarepart::coordinator::server::InferenceServer;
 use afarepart::coordinator::{OfflineRunner, OnlineConfig, OnlineRunner};
 use afarepart::experiment::Experiment;
-use afarepart::faults::{DriftComponent, FaultEnv, FaultScenario};
+use afarepart::faults::{ChaosEngine, DriftComponent, FaultEnv, FaultScenario};
 use afarepart::model::Manifest;
 use afarepart::util::fmt::pct;
 
@@ -86,6 +86,10 @@ fn main() -> Result<()> {
         server: &server,
         evaluator: &mut reopt_ev,
         clean_acc: exp.clean_acc,
+        // the demo exercises drift + repartitioning only; serving-failure
+        // injection and degradation are `afarepart online --chaos` territory
+        chaos: ChaosEngine::disabled(),
+        safe_mapping: None,
     };
 
     println!("[e2e] serving 120 ticks; attack begins at t=40s; θ = {}", pct(cfg.theta));

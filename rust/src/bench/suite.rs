@@ -8,11 +8,13 @@ use anyhow::Result;
 use crate::baselines::{CnnParted, FaultUnaware};
 use crate::config::ExperimentConfig;
 use crate::coordinator::OfflineRunner;
+use crate::dataset::EvalSet;
 use crate::experiment::Experiment;
-use crate::faults::FaultScenario;
+use crate::faults::{FaultScenario, RateVectors};
 use crate::model::{Manifest, UnitCost};
 use crate::nsga2::{Individual, Nsga2Config};
 use crate::partition::{Mapping, SensitivityTable};
+use crate::util::prng::Rng;
 
 /// The three strategies of Fig. 3 / Fig. 4 / Table II.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -161,6 +163,75 @@ pub fn synthetic_sensitivity(n: usize) -> SensitivityTable {
     }
 }
 
+/// Parse `synthetic-L<n>` model names into their unit count; `None` for
+/// real (artifact-backed) models.
+pub fn synthetic_units(model: &str) -> Option<usize> {
+    model.strip_prefix("synthetic-L").and_then(|s| s.parse().ok())
+}
+
+/// Ground-truth label for a synthetic sample: FNV-1a over the leading
+/// pixel bits, so labels are a pure function of the image bytes and any
+/// backend can recompute them.
+pub fn synthetic_label(sample: &[f32], num_classes: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in sample.iter().take(16) {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % num_classes as u64) as usize
+}
+
+/// Artifact-free eval set: seeded uniform images with labels derived
+/// from the image bytes via [`synthetic_label`] (so a zero-fault
+/// synthetic inference can score 100% accuracy).
+pub fn synthetic_eval_set(
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    num_classes: usize,
+    seed: u64,
+) -> EvalSet {
+    let mut rng = Rng::new(seed);
+    let sample_len = h * w * c;
+    let images: Vec<f32> = (0..n * sample_len).map(|_| rng.f32()).collect();
+    let labels: Vec<i32> = (0..n)
+        .map(|i| synthetic_label(&images[i * sample_len..(i + 1) * sample_len], num_classes) as i32)
+        .collect();
+    EvalSet { n, h, w, c, images, labels }
+}
+
+/// Deterministic stand-in for the PJRT inference path: predicts each
+/// sample's [`synthetic_label`], flipped to a wrong class with a
+/// probability driven by the mean injected fault rate. Pure function of
+/// (images, rates, key) — the chaos tests and `synthetic-L*` online
+/// serving rely on that purity for bitwise-reproducible timelines.
+pub fn synthetic_predictions(
+    images: &[f32],
+    sample_len: usize,
+    num_classes: usize,
+    rates: &RateVectors,
+    key: [u32; 2],
+) -> Vec<usize> {
+    let n = images.len() / sample_len;
+    let rate_sum: f32 = rates.w_rates.iter().chain(rates.a_rates.iter()).sum();
+    let rate_n = (rates.w_rates.len() + rates.a_rates.len()).max(1);
+    let p_err = ((rate_sum as f64 / rate_n as f64) * 1.5).min(1.0);
+    let key64 = ((key[0] as u64) << 32) | key[1] as u64;
+    (0..n)
+        .map(|i| {
+            let sample = &images[i * sample_len..(i + 1) * sample_len];
+            let truth = synthetic_label(sample, num_classes);
+            let mut rng = Rng::new(key64 ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            if num_classes > 1 && rng.chance(p_err) {
+                (truth + 1 + rng.below(num_classes - 1)) % num_classes
+            } else {
+                truth
+            }
+        })
+        .collect()
+}
+
 /// Bitwise fingerprint of a Pareto front (genomes + exact objective
 /// bits) — the comparison key of every determinism check (parallel vs
 /// serial engine paths, thread-count sweeps).
@@ -204,6 +275,38 @@ mod tests {
         assert_eq!(m.units.len(), 10);
         assert_eq!(t.w_drop.len(), 10);
         assert_eq!(t.most_sensitive_unit(), 0);
+    }
+
+    #[test]
+    fn synthetic_model_names_parse() {
+        assert_eq!(synthetic_units("synthetic-L12"), Some(12));
+        assert_eq!(synthetic_units("synthetic-L7"), Some(7));
+        assert_eq!(synthetic_units("alexnet"), None);
+        assert_eq!(synthetic_units("synthetic-Lx"), None);
+    }
+
+    #[test]
+    fn synthetic_eval_set_labels_match_predictions_at_zero_rate() {
+        let eval = synthetic_eval_set(16, 4, 4, 3, 10, 42);
+        assert_eq!(eval.images.len(), 16 * 4 * 4 * 3);
+        let preds =
+            synthetic_predictions(&eval.images, 4 * 4 * 3, 10, &RateVectors::zeros(6), [1, 2]);
+        assert_eq!(preds.len(), 16);
+        for (p, &l) in preds.iter().zip(&eval.labels) {
+            assert_eq!(*p as i32, l, "zero-rate synthetic inference must be exact");
+        }
+    }
+
+    #[test]
+    fn synthetic_predictions_deterministic_and_fault_sensitive() {
+        let eval = synthetic_eval_set(32, 4, 4, 3, 10, 7);
+        let heavy = RateVectors { w_rates: vec![0.5; 6], a_rates: vec![0.5; 6] };
+        let a = synthetic_predictions(&eval.images, 48, 10, &heavy, [9, 9]);
+        let b = synthetic_predictions(&eval.images, 48, 10, &heavy, [9, 9]);
+        assert_eq!(a, b, "same key must reproduce predictions");
+        let clean = synthetic_predictions(&eval.images, 48, 10, &RateVectors::zeros(6), [9, 9]);
+        let flipped = a.iter().zip(&clean).filter(|(x, y)| x != y).count();
+        assert!(flipped > 0, "heavy faults must flip some predictions");
     }
 
     #[test]

@@ -18,6 +18,21 @@ pub struct Metrics {
     /// summed traffic (the lifetime view the per-epoch counters lose).
     pub cache_epochs_closed: usize,
     pub closed_epoch_cache: CacheStats,
+    /// Inference worker threads respawned by the supervisor.
+    pub worker_respawns: usize,
+    /// Non-terminal inference retries (transient errors + timeouts).
+    pub retries: usize,
+    /// Transient worker errors observed (retryable).
+    pub transient_errors: usize,
+    /// Reply deadlines that expired.
+    pub timeouts: usize,
+    /// Terminal inference failures that triggered safe-mapping fallback.
+    pub degradations: usize,
+    /// Ticks served (or skipped) while degraded to the safe mapping.
+    pub degraded_ticks: usize,
+    /// Half-open `[start, end)` tick intervals spent degraded
+    /// (adjacent intervals are merged).
+    pub degraded_intervals: Vec<(usize, usize)>,
     exec_ms: Vec<f64>,
     reopt_ms: Vec<f64>,
 }
@@ -41,6 +56,21 @@ impl Metrics {
         self.cache_epochs_closed += 1;
         self.closed_epoch_cache.hits += epoch.hits;
         self.closed_epoch_cache.misses += epoch.misses;
+    }
+
+    /// Record a degraded interval `[start, end)`; contiguous intervals
+    /// are merged so re-entries during one outage read as one span.
+    pub fn record_degraded_interval(&mut self, start: usize, end: usize) {
+        if end <= start {
+            return;
+        }
+        if let Some(last) = self.degraded_intervals.last_mut() {
+            if last.1 == start {
+                last.1 = end;
+                return;
+            }
+        }
+        self.degraded_intervals.push((start, end));
     }
 
     pub fn exec_summary(&self) -> Option<Summary> {
@@ -89,6 +119,16 @@ mod tests {
         let s = m.exec_summary().unwrap();
         assert_eq!(s.n, 2);
         assert!((m.throughput(2.0) - 48.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degraded_intervals_merge_when_contiguous() {
+        let mut m = Metrics::default();
+        m.record_degraded_interval(5, 9);
+        m.record_degraded_interval(9, 12);
+        m.record_degraded_interval(20, 22);
+        m.record_degraded_interval(3, 3); // empty: ignored
+        assert_eq!(m.degraded_intervals, vec![(5, 12), (20, 22)]);
     }
 
     #[test]

@@ -18,4 +18,10 @@ pub mod server;
 pub use offline::{
     optimize_partitions, optimize_partitions_counted, OfflineOutcome, OfflineRunner,
 };
-pub use online::{OnlineConfig, OnlineOutcome, OnlineRunner, TimelinePoint};
+pub use online::{
+    safe_fallback_mapping, OnlineConfig, OnlineOutcome, OnlineRunner, TimelinePoint,
+};
+pub use server::{
+    BackendSpec, InferError, InferJob, InferReply, InferenceServer, ServerStats,
+    SupervisorPolicy, Ticket,
+};

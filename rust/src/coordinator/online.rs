@@ -25,20 +25,35 @@
 //! changes the mapping, every speculative batch submitted under the old
 //! mapping is discarded and resubmitted with the new mapping and the
 //! *same* cached key. At `lookahead = 1` the loop degenerates to the
-//! pre-pipelined serve-one-wait-one behaviour.
+//! pre-pipelined serve-one-wait-one behaviour. Chaos plans are a pure
+//! per-tick function of the chaos seed (never the loop's RNG), so
+//! enabling `spec.chaos` does not disturb the key stream and disabling
+//! it reproduces chaos-free timelines bit for bit.
+//!
+//! # Graceful degradation
+//!
+//! When the supervised server reports a *terminal* failure for a tick
+//! (retries exhausted, respawn budget gone), the runner falls back to
+//! the pre-computed *safe mapping* — all units on the healthiest device,
+//! picked from the offline front by [`safe_fallback_mapping`] — instead
+//! of aborting the run. The failed tick is recorded with
+//! `batch_accuracy = 0` and `degraded = true`; serving continues under
+//! the safe mapping (θ-triggers suppressed) until a health-probe
+//! cooldown of `health_cooldown` ticks passes without another terminal
+//! failure, at which point the pre-degradation mapping is restored and
+//! the degraded interval is closed into `Metrics::degraded_intervals`.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::metrics::Metrics;
 use super::offline::optimize_partitions_counted;
-use super::server::{InferJob, InferReply, InferenceServer};
+use super::server::{InferJob, InferenceServer, SupervisorPolicy, Ticket};
 use crate::dataset::EvalSet;
-use crate::faults::FaultEnv;
-use crate::nsga2::Nsga2Config;
+use crate::faults::{ChaosEngine, DeviceFaultProfile, FaultEnv};
+use crate::nsga2::{Individual, Nsga2Config};
 use crate::partition::{
     select_min_dacc_within_budget, CacheStats, Mapping, PartitionEvaluator,
 };
@@ -69,6 +84,15 @@ pub struct OnlineConfig {
     /// inference server at once. 1 = serve-one-wait-one (the legacy
     /// loop); results are bitwise identical at any depth.
     pub lookahead: usize,
+    /// Reply deadline per inference attempt (ms); 0 waits forever.
+    pub recv_timeout_ms: u64,
+    /// Retries per canary batch before its failure becomes terminal.
+    pub max_retries: usize,
+    /// Base retry backoff (ms), doubled per attempt.
+    pub backoff_ms: u64,
+    /// Ticks to keep serving on the safe mapping after a terminal
+    /// failure before re-admitting the degraded configuration.
+    pub health_cooldown: usize,
 }
 
 impl Default for OnlineConfig {
@@ -89,6 +113,22 @@ impl Default for OnlineConfig {
             cooldown: 10,
             seed: 11,
             lookahead: 1,
+            recv_timeout_ms: 5_000,
+            max_retries: 3,
+            backoff_ms: 5,
+            health_cooldown: 10,
+        }
+    }
+}
+
+impl OnlineConfig {
+    /// The server supervision budgets implied by this config.
+    pub fn supervisor_policy(&self) -> SupervisorPolicy {
+        SupervisorPolicy {
+            recv_timeout_ms: self.recv_timeout_ms,
+            max_retries: self.max_retries,
+            backoff_ms: self.backoff_ms,
+            ..SupervisorPolicy::default()
         }
     }
 }
@@ -104,6 +144,8 @@ pub struct TimelinePoint {
     pub rolling_accuracy: f64,
     pub mapping: Mapping,
     pub reconfigured: bool,
+    /// Tick served (or lost) under safe-mapping degradation.
+    pub degraded: bool,
 }
 
 /// Result of an online run.
@@ -118,12 +160,42 @@ pub struct OnlineOutcome {
     pub cache_lifetime: CacheStats,
 }
 
+/// Pick the degradation fallback: all units on the healthiest device
+/// (lowest combined fault multipliers). Prefer an offline-front member
+/// already of that shape (its objectives were vetted); otherwise
+/// construct the mapping directly.
+pub fn safe_fallback_mapping(
+    front: &[Individual],
+    profiles: &[DeviceFaultProfile],
+    num_units: usize,
+) -> Mapping {
+    let best = profiles
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            (a.w_mult + a.a_mult)
+                .partial_cmp(&(b.w_mult + b.a_mult))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    if let Some(member) = front.iter().find(|ind| ind.genome.iter().all(|&g| g == best)) {
+        return Mapping(member.genome.clone());
+    }
+    Mapping::all_on(best, num_units)
+}
+
 /// The online coordinator.
 pub struct OnlineRunner<'a, 'b> {
     pub cfg: OnlineConfig,
     pub server: &'a InferenceServer,
     pub evaluator: &'b mut PartitionEvaluator<'a>,
     pub clean_acc: f64,
+    /// Serving-failure injector (`ChaosEngine::disabled()` for none).
+    pub chaos: ChaosEngine,
+    /// Degradation fallback; `None` turns terminal inference failures
+    /// into run errors (the pre-resilience behaviour).
+    pub safe_mapping: Option<Mapping>,
 }
 
 impl OnlineRunner<'_, '_> {
@@ -142,6 +214,7 @@ impl OnlineRunner<'_, '_> {
         assert!(n_batches_avail > 0, "eval set smaller than a batch");
         let lookahead = self.cfg.lookahead.max(1);
         let tick_seconds = self.cfg.tick_seconds;
+        let stats0 = self.server.stats();
 
         let mut mapping = initial;
         let mut monitor = RollingMean::new(self.cfg.window);
@@ -150,12 +223,18 @@ impl OnlineRunner<'_, '_> {
         let mut rng = Rng::new(self.cfg.seed);
         let mut cooldown = 0usize;
 
+        // Degradation state: entry tick of the current outage, the
+        // mapping to restore, and the first tick eligible for re-entry.
+        let mut degraded_since: Option<usize> = None;
+        let mut pre_degrade: Option<Mapping> = None;
+        let mut degraded_until = 0usize;
+
         // Per-tick PRNG keys, drawn lazily but exactly once each and in
         // strictly increasing tick order — speculation must consume the
         // PRNG in the same order as the serial loop.
         let mut keys: Vec<[u32; 2]> = Vec::with_capacity(self.cfg.ticks);
         // In-flight speculative canary batches, in tick order.
-        let mut pending: VecDeque<(usize, Receiver<InferReply>)> = VecDeque::new();
+        let mut pending: VecDeque<(usize, Ticket)> = VecDeque::new();
         // Next tick not yet submitted to the server.
         let mut next_submit = 0usize;
 
@@ -165,8 +244,9 @@ impl OnlineRunner<'_, '_> {
                       keys: &mut Vec<[u32; 2]>,
                       rng: &mut Rng,
                       server: &InferenceServer,
-                      scenario: crate::faults::FaultScenario|
-         -> Result<Receiver<InferReply>> {
+                      scenario: crate::faults::FaultScenario,
+                      chaos: &ChaosEngine|
+         -> Result<Ticket> {
             while keys.len() <= tick {
                 keys.push([rng.next_u32(), rng.next_u32()]);
             }
@@ -180,29 +260,51 @@ impl OnlineRunner<'_, '_> {
             let bi = tick % n_batches_avail;
             let images = eval.batch_images(bi * batch, batch).to_vec();
             debug_assert_eq!(images.len(), batch * sample_len);
-            let (reply_tx, reply_rx) = std::sync::mpsc::channel();
             server.submit(InferJob {
                 images,
                 n_valid: batch,
                 rates,
                 key: keys[tick],
-                reply: reply_tx,
-            })?;
-            Ok(reply_rx)
+                plan: chaos.plan(tick),
+            })
         };
 
         for tick in 0..self.cfg.ticks {
+            // re-admit the pre-degradation mapping once the health probe
+            // cooldown has passed without another terminal failure
+            if let Some(start) = degraded_since {
+                if tick >= degraded_until {
+                    metrics.record_degraded_interval(start, degraded_until);
+                    if let Some(prev) = pre_degrade.take() {
+                        mapping = prev;
+                    }
+                    degraded_since = None;
+                    monitor = RollingMean::new(self.cfg.window);
+                    // in-flight batches were computed under the safe
+                    // mapping: discard and resubmit under the restored
+                    // one. Drain by *waiting* (not canceling): canceling
+                    // would leave the stale wire jobs racing the worker,
+                    // making the supervision counters timing-dependent.
+                    metrics.speculative_discarded += pending.len();
+                    for (_, t) in pending.drain(..) {
+                        let _ = self.server.wait(t);
+                    }
+                    next_submit = tick;
+                }
+            }
+
             // keep up to `lookahead` ticks in flight
             while next_submit < self.cfg.ticks && next_submit < tick + lookahead {
-                let rx = submit(
+                let ticket = submit(
                     next_submit,
                     &mapping,
                     &mut keys,
                     &mut rng,
                     self.server,
                     self.evaluator.scenario,
+                    &self.chaos,
                 )?;
-                pending.push_back((next_submit, rx));
+                pending.push_back((next_submit, ticket));
                 next_submit += 1;
             }
 
@@ -210,81 +312,159 @@ impl OnlineRunner<'_, '_> {
             let dev_w = env.dev_w_rates(t_s);
             let dev_a = env.dev_a_rates(t_s);
 
-            let (served_tick, rx) = pending.pop_front().expect("pipeline starved");
+            let (served_tick, ticket) = pending.pop_front().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "canary pipeline starved at tick {tick} \
+                     (lookahead {lookahead}, next_submit {next_submit})"
+                )
+            })?;
             debug_assert_eq!(served_tick, tick);
-            let reply = rx.recv().context("inference worker dropped reply")?;
-            metrics.record_batch(batch, reply.exec_ms);
 
-            let bi = tick % n_batches_avail;
-            let labels = eval.batch_labels(bi * batch, batch);
-            let hits = reply
-                .preds
-                .iter()
-                .zip(labels)
-                .filter(|(p, &l)| **p as i32 == l)
-                .count();
-            let acc = hits as f64 / batch as f64;
-            monitor.push(acc);
-            let rolling = monitor.mean().unwrap_or(acc);
+            let point = match self.server.wait(ticket) {
+                Ok(reply) => {
+                    metrics.record_batch(batch, reply.exec_ms);
 
-            // θ trigger (Algorithm 1 line 16)
-            let mut reconfigured = false;
-            if cooldown > 0 {
-                cooldown -= 1;
-            } else if monitor.is_warm() && self.clean_acc - rolling > self.cfg.theta {
-                let t0 = Instant::now();
-                // RunNSGAIIWithCurrentStats: current environment rates,
-                // seeded with the incumbent mapping. The rollover keeps
-                // cumulative cache telemetry even though the per-epoch
-                // view (correctly) starts from zero under the new rates.
-                let rollover = self.evaluator.set_env_rates(dev_w.clone(), dev_a.clone());
-                let (front, reopt_evals) = optimize_partitions_counted(
-                    self.evaluator,
-                    &self.cfg.reopt,
-                    true,
-                    vec![mapping.clone()],
-                    |_| {},
-                );
-                if let Some(chosen) = select_min_dacc_within_budget(
-                    &front,
-                    self.cfg.lat_budget,
-                    self.cfg.energy_budget,
-                ) {
-                    let new_mapping = Mapping(chosen.genome.clone());
-                    reconfigured = new_mapping != mapping;
-                    mapping = new_mapping;
+                    let bi = tick % n_batches_avail;
+                    let labels = eval.batch_labels(bi * batch, batch);
+                    let hits = reply
+                        .preds
+                        .iter()
+                        .zip(labels)
+                        .filter(|(p, &l)| **p as i32 == l)
+                        .count();
+                    let acc = hits as f64 / batch as f64;
+                    monitor.push(acc);
+                    let rolling = monitor.mean().unwrap_or(acc);
+                    let degraded_now = degraded_since.is_some();
+                    if degraded_now {
+                        metrics.degraded_ticks += 1;
+                    }
+
+                    // θ trigger (Algorithm 1 line 16); suppressed while
+                    // degraded — the safe mapping is not a candidate for
+                    // re-optimization, it is a refuge
+                    let mut reconfigured = false;
+                    if cooldown > 0 {
+                        cooldown -= 1;
+                    } else if !degraded_now
+                        && monitor.is_warm()
+                        && self.clean_acc - rolling > self.cfg.theta
+                    {
+                        let t0 = Instant::now();
+                        // RunNSGAIIWithCurrentStats: current environment
+                        // rates, seeded with the incumbent mapping. The
+                        // rollover keeps cumulative cache telemetry even
+                        // though the per-epoch view (correctly) starts
+                        // from zero under the new rates.
+                        let rollover =
+                            self.evaluator.set_env_rates(dev_w.clone(), dev_a.clone());
+                        let (front, reopt_evals) = optimize_partitions_counted(
+                            self.evaluator,
+                            &self.cfg.reopt,
+                            true,
+                            vec![mapping.clone()],
+                            |_| {},
+                        );
+                        if let Some(chosen) = select_min_dacc_within_budget(
+                            &front,
+                            self.cfg.lat_budget,
+                            self.cfg.energy_budget,
+                        ) {
+                            let new_mapping = Mapping(chosen.genome.clone());
+                            reconfigured = new_mapping != mapping;
+                            mapping = new_mapping;
+                        }
+                        metrics.record_reconfiguration(
+                            reopt_evals,
+                            t0.elapsed().as_secs_f64() * 1e3,
+                        );
+                        metrics.record_cache_epoch(rollover.ended_epoch);
+                        // reset the monitor so stale pre-reconfig samples
+                        // don't immediately re-trigger
+                        monitor = RollingMean::new(self.cfg.window);
+                        cooldown = self.cfg.cooldown;
+                        if reconfigured {
+                            // speculative batches were computed under the
+                            // old mapping: discard and resubmit from
+                            // tick+1 with the new mapping and the *same*
+                            // cached per-tick keys (drained by waiting,
+                            // see the re-admission path)
+                            metrics.speculative_discarded += pending.len();
+                            for (_, t) in pending.drain(..) {
+                                let _ = self.server.wait(t);
+                            }
+                            next_submit = tick + 1;
+                        }
+                    }
+
+                    TimelinePoint {
+                        tick,
+                        sim_time_s: t_s,
+                        env_rate_dev0: dev_w[0],
+                        batch_accuracy: acc,
+                        rolling_accuracy: rolling,
+                        mapping: mapping.clone(),
+                        reconfigured,
+                        degraded: degraded_now,
+                    }
                 }
-                metrics.record_reconfiguration(
-                    reopt_evals,
-                    t0.elapsed().as_secs_f64() * 1e3,
-                );
-                metrics.record_cache_epoch(rollover.ended_epoch);
-                // reset the monitor so stale pre-reconfig samples don't
-                // immediately re-trigger
-                monitor = RollingMean::new(self.cfg.window);
-                cooldown = self.cfg.cooldown;
-                if reconfigured {
-                    // speculative batches were computed under the old
-                    // mapping: discard and resubmit from tick+1 with the
-                    // new mapping and the *same* cached per-tick keys
+                Err(err) => {
+                    // terminal inference failure: degrade to the safe
+                    // mapping instead of aborting (when configured)
+                    if self.safe_mapping.is_none() {
+                        return Err(anyhow::Error::from(err).context(format!(
+                            "tick {tick}: inference failed terminally \
+                             and no safe mapping is configured"
+                        )));
+                    }
+                    let safe = self.safe_mapping.clone().expect("checked above");
+                    metrics.degradations += 1;
+                    metrics.degraded_ticks += 1;
+                    if degraded_since.is_none() {
+                        degraded_since = Some(tick);
+                        pre_degrade = Some(mapping.clone());
+                        monitor = RollingMean::new(self.cfg.window);
+                    }
+                    // every terminal failure (also while already
+                    // degraded) restarts the health-probe cooldown
+                    degraded_until = tick + 1 + self.cfg.health_cooldown;
+                    mapping = safe;
+                    // the failed tick's batch is lost; in-flight
+                    // speculation was computed under the failed mapping
+                    // (drained by waiting, see the re-admission path)
                     metrics.speculative_discarded += pending.len();
-                    pending.clear();
+                    for (_, t) in pending.drain(..) {
+                        let _ = self.server.wait(t);
+                    }
                     next_submit = tick + 1;
-                }
-            }
 
-            let point = TimelinePoint {
-                tick,
-                sim_time_s: t_s,
-                env_rate_dev0: dev_w[0],
-                batch_accuracy: acc,
-                rolling_accuracy: rolling,
-                mapping: mapping.clone(),
-                reconfigured,
+                    TimelinePoint {
+                        tick,
+                        sim_time_s: t_s,
+                        env_rate_dev0: dev_w[0],
+                        batch_accuracy: 0.0,
+                        rolling_accuracy: monitor.mean().unwrap_or(0.0),
+                        mapping: mapping.clone(),
+                        reconfigured: false,
+                        degraded: true,
+                    }
+                }
             };
             on_tick(&point);
             timeline.push(point);
         }
+
+        // close a still-open degraded interval at the run boundary
+        if let Some(start) = degraded_since {
+            metrics.record_degraded_interval(start, degraded_until.min(self.cfg.ticks));
+        }
+
+        // fold the supervision counters accumulated during this run
+        let sd = self.server.stats().delta_since(&stats0);
+        metrics.worker_respawns += sd.respawns;
+        metrics.retries += sd.retries;
+        metrics.transient_errors += sd.transient_errors;
+        metrics.timeouts += sd.timeouts;
 
         Ok(OnlineOutcome {
             timeline,
@@ -292,5 +472,40 @@ impl OnlineRunner<'_, '_> {
             final_mapping: mapping,
             cache_lifetime: self.evaluator.cache_lifetime_stats(),
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ind(genome: Vec<usize>) -> Individual {
+        Individual { genome, objectives: vec![0.0; 3], rank: 0, crowding: 0.0 }
+    }
+
+    #[test]
+    fn safe_fallback_prefers_front_member_on_healthiest_device() {
+        let profiles = DeviceFaultProfile::default_two_device(); // simba (1) is safest
+        let front = vec![ind(vec![0, 0, 0]), ind(vec![1, 1, 1]), ind(vec![0, 1, 0])];
+        let safe = safe_fallback_mapping(&front, &profiles, 3);
+        assert_eq!(safe, Mapping(vec![1, 1, 1]));
+    }
+
+    #[test]
+    fn safe_fallback_constructs_mapping_when_front_lacks_one() {
+        let profiles = DeviceFaultProfile::default_two_device();
+        let front = vec![ind(vec![0, 1, 0, 1])];
+        let safe = safe_fallback_mapping(&front, &profiles, 4);
+        assert_eq!(safe, Mapping::all_on(1, 4));
+    }
+
+    #[test]
+    fn supervisor_policy_mirrors_config() {
+        let cfg = OnlineConfig { recv_timeout_ms: 250, max_retries: 7, backoff_ms: 2, ..Default::default() };
+        let p = cfg.supervisor_policy();
+        assert_eq!(p.recv_timeout_ms, 250);
+        assert_eq!(p.max_retries, 7);
+        assert_eq!(p.backoff_ms, 2);
+        assert_eq!(p.max_respawns, SupervisorPolicy::default().max_respawns);
     }
 }

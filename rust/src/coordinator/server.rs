@@ -1,23 +1,70 @@
-//! Threaded inference server: the request-path event loop of the online
-//! phase (tokio is unavailable offline — this is a hand-rolled
-//! channel-based design, DESIGN.md §9).
+//! Supervised threaded inference server: the request-path event loop of
+//! the online phase (tokio is unavailable offline — this is a
+//! hand-rolled channel-based design, DESIGN.md §9).
 //!
-//! A dedicated worker thread owns the PJRT client and compiled executable
-//! (PJRT handles are not Send-safe to share, so the executable never
-//! leaves its thread); clients talk to it through an mpsc queue. Each job
-//! carries the fault-rate vectors its batch experiences (decided by the
-//! coordinator from the current mapping + environment) and a PRNG key.
+//! A dedicated worker thread owns the PJRT client and compiled
+//! executable (PJRT handles are not Send-safe to share, so the
+//! executable never leaves its thread); clients talk to it through an
+//! mpsc queue. Each job carries the fault-rate vectors its batch
+//! experiences (decided by the coordinator from the current mapping +
+//! environment), a PRNG key, and a [`ChaosPlan`] of injected serving
+//! failures (empty unless `spec.chaos` is enabled).
+//!
+//! # Supervision state machine
+//!
+//! The server keeps a ledger of every in-flight job (`pending`, keyed
+//! by monotonically increasing [`Ticket`]s) plus per-job retry budgets,
+//! and drives each wait through this loop:
+//!
+//! ```text
+//!            submit ── record in pending ──> send to worker
+//!                                                 │
+//!    ┌─────────────────────── wait(ticket) <──────┘
+//!    │
+//!    ├─ Ok(reply)            -> remove from pending, return reply
+//!    ├─ Err(Transient)       -> attempts += 1
+//!    │       attempts > max_retries -> InferError::Exhausted
+//!    │       else: exponential backoff (backoff_ms << attempt, capped),
+//!    │             resubmit the job to the live worker
+//!    ├─ recv timeout         -> attempts += 1
+//!    │       attempts > max_retries -> InferError::TimedOut
+//!    │       else: the worker is hung or the reply was lost on the
+//!    │             link — respawn the worker, resubmit ALL pending
+//!    ├─ channel disconnected -> the worker thread died (crash):
+//!    │       respawn budget exhausted -> InferError::Crashed
+//!    │       else: recompile on a fresh thread, resubmit ALL pending
+//!    │             jobs in ticket order, keep waiting
+//!    └─ Err(Fatal)           -> non-retryable backend error, returned
+//! ```
+//!
+//! Respawn never joins the old worker thread (a wedged PJRT call cannot
+//! be force-killed); the dead thread's queue is dropped and its
+//! `JoinHandle` detached. On a crash respawn the earliest pending job
+//! still flagged `crash` — the worker serves FIFO, so that is the one
+//! that killed it — has its flag consumed before resubmission: each
+//! planned crash kills exactly one worker no matter where in the
+//! pipeline it is detected, which makes respawn/retry counters
+//! deterministic. (Timeout respawns consume nothing: a pending crash
+//! that has not yet fired will still kill the replacement.)
+//! `shutdown()` joins the (live) worker and surfaces its `Result`,
+//! which `Drop` can only log.
+//!
+//! The supervisor serializes callers through one mutex; the online
+//! coordinator is single-threaded, so waits never contend.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::faults::RateVectors;
+use crate::faults::{ChaosPlan, RateVectors};
 use crate::model::Manifest;
 use crate::runtime::Runtime;
+use crate::util::prng::Rng;
 
 /// One inference job: a full batch of images (server batch size).
 pub struct InferJob {
@@ -27,7 +74,8 @@ pub struct InferJob {
     pub n_valid: usize,
     pub rates: RateVectors,
     pub key: [u32; 2],
-    pub reply: Sender<InferReply>,
+    /// Injected serving failures for this job (default: none).
+    pub plan: ChaosPlan,
 }
 
 /// Result of one job.
@@ -35,89 +83,346 @@ pub struct InferJob {
 pub struct InferReply {
     /// Top-1 predictions for the valid samples.
     pub preds: Vec<usize>,
-    /// Wall-clock execution time of the PJRT call (ms).
+    /// Wall-clock execution time of the inference call (ms), including
+    /// any injected link delay.
     pub exec_ms: f64,
 }
 
+/// Typed inference failure: callers see the real cause instead of a
+/// generic "worker dropped reply".
+#[derive(Clone, Debug, PartialEq)]
+pub enum InferError {
+    /// Retryable backend error (the supervisor retries these itself;
+    /// callers only see it via [`InferError::Exhausted`]).
+    Transient { detail: String },
+    /// The worker thread died and could not be (re)spawned.
+    Crashed { detail: String },
+    /// No reply within the recv deadline after exhausting retries.
+    TimedOut { waited_ms: u64, attempts: usize },
+    /// Transient failures persisted past the retry budget.
+    Exhausted { attempts: usize, last: String },
+    /// Non-retryable backend failure (bad literal, PJRT execute error).
+    Fatal { detail: String },
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::Transient { detail } => {
+                write!(f, "transient inference failure: {detail}")
+            }
+            InferError::Crashed { detail } => write!(f, "inference worker crashed: {detail}"),
+            InferError::TimedOut { waited_ms, attempts } => {
+                write!(f, "inference timed out after {attempts} attempts ({waited_ms} ms deadline)")
+            }
+            InferError::Exhausted { attempts, last } => {
+                write!(f, "inference retries exhausted after {attempts} attempts: {last}")
+            }
+            InferError::Fatal { detail } => write!(f, "inference backend failure: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+/// Retry/respawn budgets of the supervisor (see module doc).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SupervisorPolicy {
+    /// Reply deadline per attempt (ms); 0 waits forever.
+    pub recv_timeout_ms: u64,
+    /// Retries per job before a transient/timeout becomes terminal.
+    pub max_retries: usize,
+    /// Base backoff between retries (ms), doubled per attempt, capped
+    /// at 1s.
+    pub backoff_ms: u64,
+    /// Worker respawns per server lifetime before giving up.
+    pub max_respawns: usize,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> SupervisorPolicy {
+        SupervisorPolicy { recv_timeout_ms: 5_000, max_retries: 3, backoff_ms: 5, max_respawns: 32 }
+    }
+}
+
+/// Cumulative supervision counters (monotonic over the server's life).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ServerStats {
+    /// Worker threads (re)booted after the initial spawn.
+    pub respawns: usize,
+    /// Non-terminal retry attempts (transient or timeout).
+    pub retries: usize,
+    /// Transient errors reported by the worker.
+    pub transient_errors: usize,
+    /// Recv deadlines that expired.
+    pub timeouts: usize,
+    /// Worker threads observed dead (channel disconnect).
+    pub crashes: usize,
+}
+
+impl ServerStats {
+    /// Counters accumulated since an `earlier` snapshot.
+    pub fn delta_since(&self, earlier: &ServerStats) -> ServerStats {
+        ServerStats {
+            respawns: self.respawns - earlier.respawns,
+            retries: self.retries - earlier.retries,
+            transient_errors: self.transient_errors - earlier.transient_errors,
+            timeouts: self.timeouts - earlier.timeouts,
+            crashes: self.crashes - earlier.crashes,
+        }
+    }
+}
+
+/// What the worker thread serves with. `Artifacts` compiles the real
+/// PJRT executable; `Synthetic` uses the deterministic predictor from
+/// `bench::suite` (no artifacts required) — the chaos tests and
+/// `synthetic-L*` online runs are built on it.
+#[derive(Clone)]
+pub enum BackendSpec {
+    Artifacts { artifacts_dir: PathBuf, manifest: Manifest },
+    Synthetic { manifest: Manifest, exec_cost: Duration },
+}
+
+impl BackendSpec {
+    fn manifest(&self) -> &Manifest {
+        match self {
+            BackendSpec::Artifacts { manifest, .. } => manifest,
+            BackendSpec::Synthetic { manifest, .. } => manifest,
+        }
+    }
+}
+
+/// Opaque handle to an in-flight job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ticket(u64);
+
+/// Wire form of a job: images shared (respawn resubmits without
+/// cloning pixels), plus the per-attempt reply channel.
+struct WireJob {
+    images: Arc<Vec<f32>>,
+    n_valid: usize,
+    rates: RateVectors,
+    key: [u32; 2],
+    plan: ChaosPlan,
+    reply: Sender<std::result::Result<InferReply, InferError>>,
+}
+
 enum Cmd {
-    Infer(Box<InferJob>),
+    Infer(Box<WireJob>),
     Shutdown,
 }
 
-/// Handle to the serving thread.
-pub struct InferenceServer {
+struct Worker {
     tx: Sender<Cmd>,
     handle: Option<JoinHandle<Result<()>>>,
+}
+
+/// Supervisor-side record of an in-flight job.
+struct JobRec {
+    images: Arc<Vec<f32>>,
+    n_valid: usize,
+    rates: RateVectors,
+    key: [u32; 2],
+    /// Remaining injected failures; decremented as they are consumed so
+    /// resubmissions don't replay already-delivered faults.
+    plan: ChaosPlan,
+    attempts: usize,
+    rx: Receiver<std::result::Result<InferReply, InferError>>,
+}
+
+struct Inner {
+    worker: Worker,
+    pending: BTreeMap<u64, JobRec>,
+    next_ticket: u64,
+    stats: ServerStats,
+    shut_down: bool,
+}
+
+/// Handle to the supervised serving thread.
+pub struct InferenceServer {
+    backend: BackendSpec,
+    policy: SupervisorPolicy,
+    inner: Mutex<Inner>,
     pub batch: usize,
     pub num_units: usize,
     pub img_dims: (usize, usize, usize),
 }
 
 impl InferenceServer {
-    /// Spawn the worker: it compiles `model` from `artifacts_dir` on its
-    /// own thread and then serves jobs until shutdown.
+    /// Spawn a PJRT-backed worker with the default supervision policy:
+    /// it compiles `manifest` from `artifacts_dir` on its own thread
+    /// and then serves jobs until shutdown.
     pub fn spawn(
         artifacts_dir: PathBuf,
         manifest: Manifest,
         img_dims: (usize, usize, usize),
     ) -> Result<InferenceServer> {
-        let batch = manifest.batch;
-        let num_units = manifest.num_units;
-        let (tx, rx): (Sender<Cmd>, Receiver<Cmd>) = mpsc::channel();
-        // readiness handshake so spawn() fails fast on compile errors
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let dims = img_dims;
-        let handle = std::thread::Builder::new()
-            .name("afare-infer".into())
-            .spawn(move || -> Result<()> {
-                let rt = match Runtime::cpu() {
-                    Ok(rt) => rt,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return Ok(());
+        InferenceServer::spawn_with(
+            BackendSpec::Artifacts { artifacts_dir, manifest },
+            img_dims,
+            SupervisorPolicy::default(),
+        )
+    }
+
+    /// Spawn with an explicit backend and supervision policy.
+    pub fn spawn_with(
+        backend: BackendSpec,
+        img_dims: (usize, usize, usize),
+        policy: SupervisorPolicy,
+    ) -> Result<InferenceServer> {
+        let batch = backend.manifest().batch;
+        let num_units = backend.manifest().num_units;
+        let worker = boot_worker(&backend, img_dims)?;
+        Ok(InferenceServer {
+            backend,
+            policy,
+            inner: Mutex::new(Inner {
+                worker,
+                pending: BTreeMap::new(),
+                next_ticket: 0,
+                stats: ServerStats::default(),
+                shut_down: false,
+            }),
+            batch,
+            num_units,
+            img_dims,
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Submit a job (non-blocking); claim the reply with [`wait`].
+    ///
+    /// [`wait`]: InferenceServer::wait
+    pub fn submit(&self, job: InferJob) -> Result<Ticket> {
+        let mut inner = self.lock();
+        if inner.shut_down {
+            anyhow::bail!("inference server is shut down");
+        }
+        let ticket = Ticket(inner.next_ticket);
+        inner.next_ticket += 1;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        // record the job BEFORE sending: if the worker dies mid-send the
+        // respawn path finds (and resubmits) it like any in-flight job
+        inner.pending.insert(
+            ticket.0,
+            JobRec {
+                images: Arc::new(job.images),
+                n_valid: job.n_valid,
+                rates: job.rates,
+                key: job.key,
+                plan: job.plan,
+                attempts: 0,
+                rx: reply_rx,
+            },
+        );
+        let rec = &inner.pending[&ticket.0];
+        let wire = Cmd::Infer(Box::new(WireJob {
+            images: Arc::clone(&rec.images),
+            n_valid: rec.n_valid,
+            rates: rec.rates.clone(),
+            key: rec.key,
+            plan: rec.plan.clone(),
+            reply: reply_tx,
+        }));
+        if inner.worker.tx.send(wire).is_err() {
+            // the worker died between jobs (e.g. an injected crash from
+            // an earlier batch): replace it and resubmit everything
+            self.respawn_and_resubmit(&mut inner, "send to dead worker", true)?;
+        }
+        Ok(ticket)
+    }
+
+    /// Block until `ticket`'s job succeeds or fails terminally,
+    /// retrying / respawning per the supervision policy (module doc).
+    pub fn wait(&self, ticket: Ticket) -> std::result::Result<InferReply, InferError> {
+        let mut inner = self.lock();
+        loop {
+            let outcome = {
+                let rec = match inner.pending.get(&ticket.0) {
+                    Some(rec) => rec,
+                    None => {
+                        return Err(InferError::Fatal {
+                            detail: format!("unknown or canceled ticket {}", ticket.0),
+                        })
                     }
                 };
-                let model = match rt.load_model(&artifacts_dir, manifest) {
-                    Ok(m) => m,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return Ok(());
+                if self.policy.recv_timeout_ms == 0 {
+                    rec.rx.recv().map_err(|_| RecvTimeoutError::Disconnected)
+                } else {
+                    rec.rx.recv_timeout(Duration::from_millis(self.policy.recv_timeout_ms))
+                }
+            };
+            match outcome {
+                Ok(Ok(reply)) => {
+                    inner.pending.remove(&ticket.0);
+                    return Ok(reply);
+                }
+                Ok(Err(InferError::Transient { detail })) => {
+                    inner.stats.transient_errors += 1;
+                    let max_retries = self.policy.max_retries;
+                    let rec = inner.pending.get_mut(&ticket.0).expect("pending rec");
+                    rec.attempts += 1;
+                    // this transient burst unit is consumed
+                    rec.plan.transient_failures = rec.plan.transient_failures.saturating_sub(1);
+                    let attempts = rec.attempts;
+                    if attempts > max_retries {
+                        inner.pending.remove(&ticket.0);
+                        return Err(InferError::Exhausted { attempts, last: detail });
                     }
-                };
-                let _ = ready_tx.send(Ok(()));
-                while let Ok(cmd) = rx.recv() {
-                    match cmd {
-                        Cmd::Shutdown => break,
-                        Cmd::Infer(job) => {
-                            let t0 = Instant::now();
-                            let lit = model.image_literal(&job.images, dims.0, dims.1, dims.2)?;
-                            let logits = model.run_batch(&lit, &job.rates, job.key)?;
-                            let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-                            let mut preds = model.argmax_predictions(&logits);
-                            preds.truncate(job.n_valid);
-                            // receiver may have gone away; that's fine
-                            let _ = job.reply.send(InferReply { preds, exec_ms });
-                        }
+                    inner.stats.retries += 1;
+                    let backoff = self
+                        .policy
+                        .backoff_ms
+                        .saturating_mul(1u64 << ((attempts - 1).min(6) as u32))
+                        .min(1_000);
+                    if backoff > 0 {
+                        std::thread::sleep(Duration::from_millis(backoff));
+                    }
+                    if self.resubmit_one(&mut inner, ticket.0).is_err() {
+                        // worker died while we were backing off
+                        self.respawn_and_resubmit(&mut inner, "worker died during retry", true)?;
                     }
                 }
-                Ok(())
-            })
-            .context("spawning inference worker")?;
-        ready_rx
-            .recv()
-            .context("inference worker died before ready")?
-            .context("inference worker failed to initialize")?;
-        Ok(InferenceServer { tx, handle: Some(handle), batch, num_units, img_dims })
+                Ok(Err(other)) => {
+                    // Fatal (and any future non-retryable kind): surface as-is
+                    inner.pending.remove(&ticket.0);
+                    return Err(other);
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // worker thread died with the job in flight
+                    self.respawn_and_resubmit(&mut inner, "worker channel disconnected", true)?;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    inner.stats.timeouts += 1;
+                    let max_retries = self.policy.max_retries;
+                    let waited_ms = self.policy.recv_timeout_ms;
+                    let rec = inner.pending.get_mut(&ticket.0).expect("pending rec");
+                    rec.attempts += 1;
+                    // an injected link drop ate this reply; consume it
+                    rec.plan.drop_replies = rec.plan.drop_replies.saturating_sub(1);
+                    let attempts = rec.attempts;
+                    if attempts > max_retries {
+                        inner.pending.remove(&ticket.0);
+                        return Err(InferError::TimedOut { waited_ms, attempts });
+                    }
+                    inner.stats.retries += 1;
+                    // a silent worker is indistinguishable from a hang:
+                    // replace it and resubmit everything pending
+                    self.respawn_and_resubmit(&mut inner, "recv timeout", false)?;
+                }
+            }
+        }
     }
 
-    /// Submit a job (non-blocking); reply arrives on the job's channel.
-    pub fn submit(&self, job: InferJob) -> Result<()> {
-        self.tx
-            .send(Cmd::Infer(Box::new(job)))
-            .map_err(|_| anyhow::anyhow!("inference worker gone"))
+    /// Forget an in-flight job; its eventual reply (if any) is dropped.
+    pub fn cancel(&self, ticket: Ticket) {
+        self.lock().pending.remove(&ticket.0);
     }
 
-    /// Convenience: synchronous round-trip for one batch.
+    /// Convenience: synchronous round-trip for one (chaos-free) batch.
     pub fn infer_blocking(
         &self,
         images: Vec<f32>,
@@ -125,18 +430,287 @@ impl InferenceServer {
         rates: RateVectors,
         key: [u32; 2],
     ) -> Result<InferReply> {
+        self.infer_blocking_with(images, n_valid, rates, key, ChaosPlan::default())
+    }
+
+    /// Synchronous round-trip with an explicit chaos plan.
+    pub fn infer_blocking_with(
+        &self,
+        images: Vec<f32>,
+        n_valid: usize,
+        rates: RateVectors,
+        key: [u32; 2],
+        plan: ChaosPlan,
+    ) -> Result<InferReply> {
+        let ticket = self.submit(InferJob { images, n_valid, rates, key, plan })?;
+        Ok(self.wait(ticket)?)
+    }
+
+    /// Snapshot of the supervision counters.
+    pub fn stats(&self) -> ServerStats {
+        self.lock().stats
+    }
+
+    /// Stop the worker and surface its thread `Result` (Drop can only
+    /// log failures; call this on clean shutdown paths).
+    pub fn shutdown(&self) -> Result<()> {
+        let mut inner = self.lock();
+        if inner.shut_down {
+            return Ok(());
+        }
+        inner.shut_down = true;
+        let _ = inner.worker.tx.send(Cmd::Shutdown);
+        if let Some(handle) = inner.worker.handle.take() {
+            match handle.join() {
+                Ok(result) => result.context("inference worker exited with error")?,
+                Err(_) => anyhow::bail!("inference worker panicked"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Replace a dead (or presumed-hung) worker and resubmit every
+    /// pending job in ticket order. The old thread is detached, never
+    /// joined. `crashed` distinguishes observed death from timeouts.
+    fn respawn_and_resubmit(
+        &self,
+        inner: &mut Inner,
+        reason: &str,
+        crashed: bool,
+    ) -> std::result::Result<(), InferError> {
+        if crashed {
+            inner.stats.crashes += 1;
+            // the worker serves FIFO, so the job that killed it is the
+            // earliest pending one still flagged `crash`; consume exactly
+            // that flag. Later crash-flagged jobs keep theirs and will
+            // kill the replacement in turn — one planned crash, one dead
+            // worker, at any pipeline depth.
+            if let Some(rec) = inner.pending.values_mut().find(|r| r.plan.crash) {
+                rec.plan.crash = false;
+            }
+        }
+        inner.stats.respawns += 1;
+        if inner.stats.respawns > self.policy.max_respawns {
+            return Err(InferError::Crashed {
+                detail: format!(
+                    "respawn budget exhausted ({} respawns; last reason: {reason})",
+                    inner.stats.respawns - 1
+                ),
+            });
+        }
+        let fresh = boot_worker(&self.backend, self.img_dims).map_err(|e| InferError::Crashed {
+            detail: format!("respawn after {reason} failed: {e:#}"),
+        })?;
+        // dropping the old Worker closes its queue and detaches its handle
+        inner.worker = fresh;
+        let tickets: Vec<u64> = inner.pending.keys().copied().collect();
+        for t in tickets {
+            self.resubmit_one(inner, t).map_err(|_| InferError::Crashed {
+                detail: "fresh inference worker died immediately".into(),
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Re-send one pending job on a fresh reply channel.
+    fn resubmit_one(&self, inner: &mut Inner, ticket: u64) -> std::result::Result<(), ()> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.submit(InferJob { images, n_valid, rates, key, reply: reply_tx })?;
-        reply_rx.recv().context("inference worker dropped reply")
+        let rec = inner.pending.get_mut(&ticket).expect("resubmit: ticket pending");
+        rec.rx = reply_rx;
+        let wire = Cmd::Infer(Box::new(WireJob {
+            images: Arc::clone(&rec.images),
+            n_valid: rec.n_valid,
+            rates: rec.rates.clone(),
+            key: rec.key,
+            plan: rec.plan.clone(),
+            reply: reply_tx,
+        }));
+        inner.worker.tx.send(wire).map_err(|_| ())
     }
 }
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        let _ = self.tx.send(Cmd::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        let mut inner = self.lock();
+        if inner.shut_down {
+            return;
         }
+        let _ = inner.worker.tx.send(Cmd::Shutdown);
+        if let Some(handle) = inner.worker.handle.take() {
+            match handle.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("inference worker exited with error: {e:#}"),
+                Err(_) => eprintln!("inference worker panicked"),
+            }
+        }
+    }
+}
+
+/// The model a worker thread serves with.
+enum WorkerModel {
+    Compiled(crate::runtime::CompiledModel),
+    Synthetic { manifest: Manifest, exec_cost: Duration },
+}
+
+impl WorkerModel {
+    fn num_classes(&self) -> usize {
+        match self {
+            WorkerModel::Compiled(m) => m.manifest.num_classes,
+            WorkerModel::Synthetic { manifest, .. } => manifest.num_classes,
+        }
+    }
+
+    fn predict(
+        &self,
+        images: &[f32],
+        dims: (usize, usize, usize),
+        rates: &RateVectors,
+        key: [u32; 2],
+    ) -> Result<Vec<usize>> {
+        match self {
+            WorkerModel::Compiled(m) => {
+                let lit = m.image_literal(images, dims.0, dims.1, dims.2)?;
+                let logits = m.run_batch(&lit, rates, key)?;
+                Ok(m.argmax_predictions(&logits))
+            }
+            WorkerModel::Synthetic { manifest, exec_cost } => {
+                if !exec_cost.is_zero() {
+                    std::thread::sleep(*exec_cost);
+                }
+                let sample_len = dims.0 * dims.1 * dims.2;
+                Ok(crate::bench::suite::synthetic_predictions(
+                    images,
+                    sample_len,
+                    manifest.num_classes,
+                    rates,
+                    key,
+                ))
+            }
+        }
+    }
+}
+
+/// Boot one worker thread with a readiness handshake, so callers fail
+/// fast (with the worker's own error) on compile problems.
+fn boot_worker(backend: &BackendSpec, img_dims: (usize, usize, usize)) -> Result<Worker> {
+    let (tx, rx): (Sender<Cmd>, Receiver<Cmd>) = mpsc::channel();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let backend = backend.clone();
+    let handle = std::thread::Builder::new()
+        .name("afare-infer".into())
+        .spawn(move || worker_main(backend, img_dims, rx, ready_tx))
+        .context("spawning inference worker")?;
+    let mut worker = Worker { tx, handle: Some(handle) };
+    let ready = ready_rx.recv();
+    match ready {
+        Ok(Ok(())) => Ok(worker),
+        Ok(Err(e)) => {
+            // surface the JoinHandle result alongside the init error
+            if let Some(h) = worker.handle.take() {
+                let _ = h.join();
+            }
+            Err(e.context("inference worker failed to initialize"))
+        }
+        Err(_) => {
+            let detail = match worker.handle.take().map(|h| h.join()) {
+                Some(Ok(Err(e))) => format!("worker error: {e:#}"),
+                Some(Err(_)) => "worker panicked".into(),
+                _ => "no error reported".into(),
+            };
+            Err(anyhow::anyhow!("inference worker died before ready ({detail})"))
+        }
+    }
+}
+
+fn worker_main(
+    backend: BackendSpec,
+    dims: (usize, usize, usize),
+    rx: Receiver<Cmd>,
+    ready_tx: Sender<Result<()>>,
+) -> Result<()> {
+    // artifacts mode keeps the PJRT client alive next to the executable
+    let mut _rt_guard: Option<Runtime> = None;
+    let model = match backend {
+        BackendSpec::Artifacts { artifacts_dir, manifest } => {
+            let rt = match Runtime::cpu() {
+                Ok(rt) => rt,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return Ok(());
+                }
+            };
+            let compiled = match rt.load_model(&artifacts_dir, manifest) {
+                Ok(m) => m,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return Ok(());
+                }
+            };
+            _rt_guard = Some(rt);
+            WorkerModel::Compiled(compiled)
+        }
+        BackendSpec::Synthetic { manifest, exec_cost } => {
+            WorkerModel::Synthetic { manifest, exec_cost }
+        }
+    };
+    let _ = ready_tx.send(Ok(()));
+    // Reply channels of injected link drops are parked here (not dropped):
+    // the supervisor must observe a *timeout* — a closed channel would
+    // read as a worker crash and the drop would never be consumed.
+    let mut parked_drops: Vec<Sender<std::result::Result<InferReply, InferError>>> = Vec::new();
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Shutdown => break,
+            Cmd::Infer(job) => {
+                if job.plan.crash {
+                    // simulated device/worker crash: die without
+                    // replying; the supervisor sees the closed channels
+                    anyhow::bail!("chaos: injected worker crash");
+                }
+                if job.plan.transient_failures > 0 {
+                    let _ = job.reply.send(Err(InferError::Transient {
+                        detail: "chaos: injected transient PJRT error".into(),
+                    }));
+                    continue;
+                }
+                let t0 = Instant::now();
+                match model.predict(&job.images, dims, &job.rates, job.key) {
+                    Err(e) => {
+                        let _ = job
+                            .reply
+                            .send(Err(InferError::Fatal { detail: format!("{e:#}") }));
+                    }
+                    Ok(mut preds) => {
+                        preds.truncate(job.n_valid);
+                        if job.plan.corrupt {
+                            corrupt_predictions(&mut preds, model.num_classes(), job.key);
+                        }
+                        let exec_ms = t0.elapsed().as_secs_f64() * 1e3 + job.plan.delay_ms;
+                        if job.plan.drop_replies > 0 {
+                            // reply lost on the link; keep serving
+                            parked_drops.push(job.reply);
+                            continue;
+                        }
+                        // receiver may have gone away; that's fine
+                        let _ = job.reply.send(Ok(InferReply { preds, exec_ms }));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Deterministic reply corruption: every prediction is shifted to a
+/// different class by a key-seeded stream (pure in (preds, key)).
+fn corrupt_predictions(preds: &mut [usize], num_classes: usize, key: [u32; 2]) {
+    if num_classes < 2 {
+        return;
+    }
+    let key64 = ((key[0] as u64) << 32) | key[1] as u64;
+    let mut rng = Rng::new(key64 ^ 0xC0A2_55ED_5EED_F00D);
+    for p in preds.iter_mut() {
+        *p = (*p + 1 + rng.below(num_classes - 1)) % num_classes;
     }
 }
 
@@ -220,5 +794,35 @@ mod tests {
         assert_eq!(n, 2);
         assert_eq!(imgs, vec![1.0, 2.0, 2.0, 2.0]);
         assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn infer_error_displays_cause() {
+        let e = InferError::TimedOut { waited_ms: 250, attempts: 4 };
+        assert!(e.to_string().contains("250 ms"));
+        let e = InferError::Exhausted { attempts: 4, last: "boom".into() };
+        assert!(e.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn stats_delta_is_componentwise() {
+        let a = ServerStats { respawns: 1, retries: 2, transient_errors: 3, timeouts: 0, crashes: 1 };
+        let b = ServerStats { respawns: 4, retries: 6, transient_errors: 3, timeouts: 2, crashes: 2 };
+        let d = b.delta_since(&a);
+        assert_eq!(d, ServerStats { respawns: 3, retries: 4, transient_errors: 0, timeouts: 2, crashes: 1 });
+    }
+
+    #[test]
+    fn corruption_is_deterministic_and_always_wrong() {
+        let orig = vec![0usize, 3, 9, 5];
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        corrupt_predictions(&mut a, 10, [7, 8]);
+        corrupt_predictions(&mut b, 10, [7, 8]);
+        assert_eq!(a, b);
+        for (x, y) in a.iter().zip(&orig) {
+            assert_ne!(x, y, "corrupted prediction equals the original");
+            assert!(*x < 10);
+        }
     }
 }

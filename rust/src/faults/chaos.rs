@@ -1,0 +1,241 @@
+//! Deterministic chaos injection for the serving runtime.
+//!
+//! The fault environment (`faults::env`) perturbs the *model tensors*;
+//! this module perturbs the *serving system itself*: the inference
+//! worker thread, the job queue, and the links between partition
+//! devices. Failures are planned per tick by a seeded, stateless
+//! engine, so a chaos run is bitwise-reproducible for a fixed seed and
+//! independent of pipeline lookahead or wall-clock timing.
+//!
+//! Components compose like `DriftComponent` stacks: each component is
+//! an independent Bernoulli stream with its own (seed, tick, index)
+//! PRNG, optionally windowed to a tick range. The engine is off by
+//! default (`ChaosEngine::disabled()`), in which case every plan is a
+//! no-op and the serving path is byte-identical to a chaos-free build.
+
+use crate::util::prng::Rng;
+
+/// One class of injectable serving failure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChaosKind {
+    /// Kill the inference worker thread without replying; the
+    /// supervisor observes the closed channel and must respawn.
+    WorkerCrash,
+    /// The worker reports a transient (retryable) PJRT-style error for
+    /// the next `burst` attempts of the affected job.
+    TransientError { burst: u32 },
+    /// The link eats the worker's reply: the next `burst` replies of
+    /// the affected job are silently dropped, forcing recv timeouts.
+    LinkDrop { burst: u32 },
+    /// Inter-device link congestion: adds `ms` to the reported
+    /// execution latency (feeds `Metrics::exec_summary`).
+    LinkDelay { ms: f64 },
+    /// Bit-flips on the reply path: predictions arrive deterministically
+    /// scrambled (never equal to the clean prediction).
+    ReplyCorrupt,
+}
+
+/// A chaos stream: a failure kind fired with probability `rate` per
+/// tick, optionally limited to the half-open tick window
+/// `[from_tick, until_tick)` (`until_tick == 0` means unbounded).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosComponent {
+    pub kind: ChaosKind,
+    pub rate: f64,
+    pub from_tick: usize,
+    pub until_tick: usize,
+}
+
+impl ChaosComponent {
+    fn new(kind: ChaosKind, rate: f64) -> ChaosComponent {
+        ChaosComponent { kind, rate, from_tick: 0, until_tick: 0 }
+    }
+
+    pub fn crash(rate: f64) -> ChaosComponent {
+        ChaosComponent::new(ChaosKind::WorkerCrash, rate)
+    }
+
+    pub fn transient(rate: f64, burst: u32) -> ChaosComponent {
+        ChaosComponent::new(ChaosKind::TransientError { burst }, rate)
+    }
+
+    pub fn drop(rate: f64, burst: u32) -> ChaosComponent {
+        ChaosComponent::new(ChaosKind::LinkDrop { burst }, rate)
+    }
+
+    pub fn delay(rate: f64, ms: f64) -> ChaosComponent {
+        ChaosComponent::new(ChaosKind::LinkDelay { ms }, rate)
+    }
+
+    pub fn corrupt(rate: f64) -> ChaosComponent {
+        ChaosComponent::new(ChaosKind::ReplyCorrupt, rate)
+    }
+
+    /// Restrict the component to ticks in `[from, until)`.
+    pub fn window(mut self, from: usize, until: usize) -> ChaosComponent {
+        self.from_tick = from;
+        self.until_tick = until;
+        self
+    }
+
+    fn armed(&self, tick: usize) -> bool {
+        tick >= self.from_tick && (self.until_tick == 0 || tick < self.until_tick)
+    }
+}
+
+/// The failures planned for one tick's inference job. Attached to the
+/// job when it is submitted; the worker and supervisor act it out.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosPlan {
+    pub crash: bool,
+    pub transient_failures: u32,
+    pub drop_replies: u32,
+    pub delay_ms: f64,
+    pub corrupt: bool,
+}
+
+impl ChaosPlan {
+    pub fn is_noop(&self) -> bool {
+        !self.crash
+            && self.transient_failures == 0
+            && self.drop_replies == 0
+            && self.delay_ms == 0.0
+            && !self.corrupt
+    }
+}
+
+/// Seeded, stateless chaos planner. `plan(tick)` is a pure function of
+/// (seed, components, tick): each (tick, component) pair gets an
+/// independent PRNG stream, so plans never consume shared randomness
+/// and reordering queries cannot change outcomes.
+#[derive(Clone, Debug)]
+pub struct ChaosEngine {
+    seed: u64,
+    components: Vec<ChaosComponent>,
+}
+
+impl ChaosEngine {
+    pub fn new(seed: u64, components: Vec<ChaosComponent>) -> ChaosEngine {
+        ChaosEngine { seed, components }
+    }
+
+    /// An engine that never injects anything.
+    pub fn disabled() -> ChaosEngine {
+        ChaosEngine { seed: 0, components: Vec::new() }
+    }
+
+    /// The default failure mix used by `--chaos`: rare crashes, small
+    /// retryable transient/drop bursts (below the default retry budget,
+    /// so they degrade latency rather than terminate runs), and
+    /// moderate link congestion.
+    pub fn default_stack() -> Vec<ChaosComponent> {
+        vec![
+            ChaosComponent::crash(0.02),
+            ChaosComponent::transient(0.06, 1),
+            ChaosComponent::drop(0.02, 1),
+            ChaosComponent::delay(0.15, 25.0),
+            ChaosComponent::corrupt(0.04),
+        ]
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        !self.components.is_empty()
+    }
+
+    /// Plan the failures for `tick`'s job. Pure and allocation-free.
+    pub fn plan(&self, tick: usize) -> ChaosPlan {
+        let mut plan = ChaosPlan::default();
+        for (ci, comp) in self.components.iter().enumerate() {
+            if !comp.armed(tick) {
+                continue;
+            }
+            let stream = self
+                .seed
+                .wrapping_add((tick as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_add((ci as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
+            let mut rng = Rng::new(stream);
+            if !rng.chance(comp.rate) {
+                continue;
+            }
+            match comp.kind {
+                ChaosKind::WorkerCrash => plan.crash = true,
+                ChaosKind::TransientError { burst } => plan.transient_failures += burst,
+                ChaosKind::LinkDrop { burst } => plan.drop_replies += burst,
+                ChaosKind::LinkDelay { ms } => plan.delay_ms += ms,
+                ChaosKind::ReplyCorrupt => plan.corrupt = true,
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_engine_is_noop_everywhere() {
+        let eng = ChaosEngine::disabled();
+        assert!(!eng.is_enabled());
+        for tick in 0..256 {
+            assert!(eng.plan(tick).is_noop());
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_query_order_free() {
+        let eng = ChaosEngine::new(99, ChaosEngine::default_stack());
+        let forward: Vec<ChaosPlan> = (0..64).map(|t| eng.plan(t)).collect();
+        let backward: Vec<ChaosPlan> = (0..64).rev().map(|t| eng.plan(t)).collect();
+        let backward: Vec<ChaosPlan> = backward.into_iter().rev().collect();
+        assert_eq!(forward, backward);
+        let again: Vec<ChaosPlan> =
+            (0..64).map(|t| ChaosEngine::new(99, ChaosEngine::default_stack()).plan(t)).collect();
+        assert_eq!(forward, again);
+    }
+
+    #[test]
+    fn rate_one_always_fires_rate_zero_never() {
+        let eng = ChaosEngine::new(5, vec![ChaosComponent::crash(1.0), ChaosComponent::corrupt(0.0)]);
+        for tick in 0..32 {
+            let plan = eng.plan(tick);
+            assert!(plan.crash, "tick {tick}");
+            assert!(!plan.corrupt, "tick {tick}");
+        }
+    }
+
+    #[test]
+    fn window_limits_arming() {
+        let eng = ChaosEngine::new(7, vec![ChaosComponent::transient(1.0, 2).window(5, 8)]);
+        for tick in 0..16 {
+            let plan = eng.plan(tick);
+            if (5..8).contains(&tick) {
+                assert_eq!(plan.transient_failures, 2, "tick {tick}");
+            } else {
+                assert!(plan.is_noop(), "tick {tick}");
+            }
+        }
+    }
+
+    #[test]
+    fn components_compose_additively() {
+        let eng = ChaosEngine::new(3, vec![
+            ChaosComponent::delay(1.0, 10.0),
+            ChaosComponent::delay(1.0, 15.0),
+            ChaosComponent::transient(1.0, 1),
+            ChaosComponent::transient(1.0, 2),
+        ]);
+        let plan = eng.plan(0);
+        assert_eq!(plan.delay_ms, 25.0);
+        assert_eq!(plan.transient_failures, 3);
+    }
+
+    #[test]
+    fn seeds_decorrelate_streams() {
+        let a = ChaosEngine::new(1, vec![ChaosComponent::crash(0.5)]);
+        let b = ChaosEngine::new(2, vec![ChaosComponent::crash(0.5)]);
+        let pa: Vec<bool> = (0..64).map(|t| a.plan(t).crash).collect();
+        let pb: Vec<bool> = (0..64).map(|t| b.plan(t).crash).collect();
+        assert_ne!(pa, pb);
+    }
+}

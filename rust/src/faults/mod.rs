@@ -8,10 +8,12 @@
 //! constraints" — faults restricted to layers mapped to a given
 //! accelerator).
 
+pub mod chaos;
 mod env;
 mod profile;
 mod scenario;
 
+pub use chaos::{ChaosComponent, ChaosEngine, ChaosKind, ChaosPlan};
 pub use env::{DriftComponent, DriftWave, FaultEnv};
 pub use profile::DeviceFaultProfile;
 pub use scenario::FaultScenario;

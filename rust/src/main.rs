@@ -18,16 +18,24 @@
 //! CLI flags > AFARE_* env > --spec/--config file > defaults.
 //! Every subcommand supports `--format json [--out <file>]`.
 
+use std::time::Duration;
+
 use anyhow::{bail, Result};
 
 use afarepart::baselines::{CnnParted, FaultUnaware};
+use afarepart::bench::suite::{
+    synthetic_eval_set, synthetic_manifest, synthetic_sensitivity, synthetic_units,
+};
 use afarepart::cli::Args;
+use afarepart::coordinator::metrics::Metrics;
 use afarepart::coordinator::server::InferenceServer;
-use afarepart::coordinator::{OfflineOutcome, OnlineRunner};
+use afarepart::coordinator::{
+    safe_fallback_mapping, BackendSpec, OfflineOutcome, OnlineOutcome, OnlineRunner,
+};
 use afarepart::experiment::Experiment;
 use afarepart::faults::RateVectors;
 use afarepart::model::Manifest;
-use afarepart::partition::{Mapping, PartitionEvaluator};
+use afarepart::partition::{DaccMode, EngineConfig, Mapping, PartitionEvaluator};
 use afarepart::spec::campaign::run_campaign;
 use afarepart::spec::outcome::{
     emit_json, CompareReport, CompareRow, InfoReport, InfoUnit, OfflineReport, OnlineReport,
@@ -37,7 +45,7 @@ use afarepart::spec::{CampaignSpec, ExperimentSpec};
 use afarepart::util::fmt::{pct, Table};
 use afarepart::util::json::Value;
 
-const BOOL_FLAGS: &[&str] = &["surrogate", "link-cost", "verbose", "help"];
+const BOOL_FLAGS: &[&str] = &["surrogate", "link-cost", "chaos", "verbose", "help"];
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -98,9 +106,15 @@ fn print_help() {
            --theta <f>              accuracy-drop threshold (default 0.05)\n\
            --ticks <n>              serving ticks (default 120)\n\
            --lookahead <n>          canary pipeline depth (0 = derive from eval-threads;\n\
-                                    timeline is identical at any depth)\n\n\
-         The platform topology (device list, fault multipliers, link) and\n\
-         composable drift schedules are spec-file-only — see docs/spec.md."
+                                    timeline is identical at any depth)\n\
+           --chaos                  enable the spec's chaos-injection stack\n\
+           --chaos-seed <n>         chaos PRNG seed (independent of --seed)\n\n\
+         `--model synthetic-L<n>` serves the artifact-free fixture model\n\
+         (no PJRT artifacts needed) — the chaos/resilience smoke path.\n\
+         The platform topology (device list, fault multipliers, link),\n\
+         composable drift schedules, chaos component stacks, and the\n\
+         supervision knobs (recv_timeout_ms, max_retries, backoff_ms,\n\
+         health_cooldown) are spec-file-only — see docs/spec.md."
     );
 }
 
@@ -322,7 +336,75 @@ fn describe(tool: &str, ev: &mut PartitionEvaluator, mapping: &Mapping) -> Resul
     })
 }
 
+/// Per-tick progress line shared by both online paths.
+fn print_tick(p: &afarepart::coordinator::TimelinePoint) {
+    if p.tick % 10 == 0 || p.reconfigured || p.degraded {
+        println!(
+            "  t={:5.1}s FR(dev0)={:.2} acc={} rolling={} map={}{}{}",
+            p.sim_time_s,
+            p.env_rate_dev0,
+            pct(p.batch_accuracy),
+            pct(p.rolling_accuracy),
+            p.mapping.display(),
+            if p.reconfigured { "  <-- REPARTITIONED" } else { "" },
+            if p.degraded { "  [DEGRADED]" } else { "" },
+        );
+    }
+}
+
+/// Supervision / degradation counters, printed only when they fired.
+fn print_resilience_summary(m: &Metrics) {
+    if m.worker_respawns + m.retries + m.transient_errors + m.timeouts > 0 {
+        println!(
+            "supervision: {} worker respawn(s), {} retry(ies) ({} transient errors, {} timeouts)",
+            m.worker_respawns, m.retries, m.transient_errors, m.timeouts,
+        );
+    }
+    if m.degradations > 0 {
+        let spans: Vec<String> = m
+            .degraded_intervals
+            .iter()
+            .map(|&(s, e)| format!("[{s}, {e})"))
+            .collect();
+        println!(
+            "degraded: {} outage(s), {} tick(s) on the safe mapping: {}",
+            m.degradations,
+            m.degraded_ticks,
+            spans.join(" "),
+        );
+    }
+}
+
+fn print_online_summary(out: &OnlineOutcome) {
+    println!(
+        "\nserved {} batches; {} reconfigurations; final mapping {}",
+        out.metrics.batches_served,
+        out.metrics.reconfigurations,
+        out.final_mapping.display()
+    );
+    if out.metrics.speculative_discarded > 0 {
+        println!(
+            "speculative canary batches discarded on reconfiguration: {}",
+            out.metrics.speculative_discarded
+        );
+    }
+    print_resilience_summary(&out.metrics);
+    println!(
+        "dAcc cache lifetime: {} hits / {} misses across {} environment epoch(s)",
+        out.cache_lifetime.hits,
+        out.cache_lifetime.misses,
+        out.metrics.cache_epochs_closed + 1,
+    );
+    if let Some(s) = out.metrics.exec_summary() {
+        println!("exec: mean {:.2} ms  p95 {:.2} ms", s.mean, s.p95);
+    }
+}
+
 fn cmd_online(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Result<()> {
+    if let Some(n) = synthetic_units(&spec.model) {
+        // Artifact-free serving world: no PJRT, pure synthetic backend.
+        return cmd_online_synthetic(spec, args, format, n);
+    }
     let exp = load_experiment(spec)?;
     let online_cfg = spec.online.to_online_config(exp.eval_threads());
     // The complete environment, drift stack included, comes from the
@@ -338,17 +420,30 @@ fn cmd_online(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Resul
             env.drift.len(),
             online_cfg.lookahead,
         );
+        if spec.chaos.enabled {
+            println!(
+                "chaos: enabled (seed {}, {} components)",
+                spec.chaos.seed,
+                spec.chaos.components.len()
+            );
+        }
     }
 
-    // offline phase first for the initial P*
+    // offline phase first for the initial P* (and the front the safe
+    // degradation mapping is drawn from)
     let (out, _) = run_offline(spec, &exp)?;
+    let safe = safe_fallback_mapping(&out.front, &exp.profiles, exp.model.num_units());
     let initial = out.deployed;
     if !format.is_json() {
-        println!("initial P* = {}", initial.display());
+        println!("initial P* = {}  (safe fallback {})", initial.display(), safe.display());
     }
 
     let manifest = Manifest::load(&exp.index.manifest_path(&spec.model))?;
-    let server = InferenceServer::spawn(spec.artifacts_dir.clone(), manifest, exp.img_dims())?;
+    let server = InferenceServer::spawn_with(
+        BackendSpec::Artifacts { artifacts_dir: spec.artifacts_dir.clone(), manifest },
+        exp.img_dims(),
+        online_cfg.supervisor_policy(),
+    )?;
     // exact-mode re-optimization by default (see examples/online_reconfig.rs
     // for why the surrogate is usually not enough); --surrogate switches the
     // evaluator to the measured sensitivity table (load_experiment measured it).
@@ -361,44 +456,129 @@ fn cmd_online(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Resul
         server: &server,
         evaluator: &mut reopt_ev,
         clean_acc: exp.clean_acc,
+        chaos: spec.chaos.to_engine(),
+        safe_mapping: Some(safe),
     };
     let quiet = format.is_json();
     let out = runner.run(&exp.eval_set, &env, initial.clone(), |p| {
-        if !quiet && (p.tick % 10 == 0 || p.reconfigured) {
-            println!(
-                "  t={:5.1}s FR(dev0)={:.2} acc={} rolling={} map={}{}",
-                p.sim_time_s,
-                p.env_rate_dev0,
-                pct(p.batch_accuracy),
-                pct(p.rolling_accuracy),
-                p.mapping.display(),
-                if p.reconfigured { "  <-- REPARTITIONED" } else { "" }
-            );
+        if !quiet {
+            print_tick(p);
         }
     })?;
+    server.shutdown()?;
     let report = OnlineReport::from_outcome(&spec.model, theta, lookahead, &initial, &out);
     if !format.is_json() {
+        print_online_summary(&out);
+    }
+    emit(format, args, &report.to_json())
+}
+
+/// `synthetic-L<n>` online serving: the fixture manifest + sensitivity
+/// table of `bench::suite` with the deterministic synthetic prediction
+/// backend, so chaos/resilience runs (and `make chaos-smoke`) need no
+/// compiled artifacts.
+fn cmd_online_synthetic(
+    spec: &ExperimentSpec,
+    args: &Args,
+    format: OutputFormat,
+    n: usize,
+) -> Result<()> {
+    const DIMS: (usize, usize, usize) = (4, 4, 3);
+    let manifest = synthetic_manifest(n);
+    let table = synthetic_sensitivity(n);
+    let threads = if spec.eval_threads == 0 {
+        EngineConfig::auto().threads
+    } else {
+        spec.eval_threads
+    };
+    let online_cfg = spec.online.to_online_config(threads);
+    let (platform, profiles) = spec.platform.build();
+    let env = spec.fault_env.build(profiles.clone())?;
+    if !format.is_json() {
         println!(
-            "\nserved {} batches; {} reconfigurations; final mapping {}",
-            out.metrics.batches_served,
-            out.metrics.reconfigurations,
-            out.final_mapping.display()
+            "online: model={} (synthetic) base FR={} θ={} ticks={} drift components={} lookahead={}",
+            spec.model,
+            spec.fault_env.fault_rate,
+            online_cfg.theta,
+            online_cfg.ticks,
+            env.drift.len(),
+            online_cfg.lookahead,
         );
-        if out.metrics.speculative_discarded > 0 {
+        if spec.chaos.enabled {
             println!(
-                "speculative canary batches discarded on reconfiguration: {}",
-                out.metrics.speculative_discarded
+                "chaos: enabled (seed {}, {} components)",
+                spec.chaos.seed,
+                spec.chaos.components.len()
             );
         }
-        println!(
-            "dAcc cache lifetime: {} hits / {} misses across {} environment epoch(s)",
-            out.cache_lifetime.hits,
-            out.cache_lifetime.misses,
-            out.metrics.cache_epochs_closed + 1,
-        );
-        if let Some(s) = out.metrics.exec_summary() {
-            println!("PJRT exec: mean {:.2} ms  p95 {:.2} ms", s.mean, s.p95);
+    }
+
+    // offline phase at the t = 0 environment for the initial P* and the
+    // safe fallback — the same evaluator construction as campaign cells.
+    let nsga2 = spec.optimizer.to_nsga2(spec.seed);
+    let mut ev = PartitionEvaluator::new(
+        &manifest,
+        &platform,
+        env.dev_w_rates(0.0),
+        env.dev_a_rates(0.0),
+        spec.fault_env.scenario,
+        table.clean_acc,
+        spec.link_cost,
+        DaccMode::SyntheticExact { table: &table, cost: Duration::ZERO },
+    )
+    .with_parallelism(threads);
+    let off = spec.selection.optimize_and_deploy(&mut ev, &nsga2, |_| {})?;
+    let safe = safe_fallback_mapping(&off.front, &profiles, manifest.num_units);
+    let initial = off.deployed;
+    if !format.is_json() {
+        println!("initial P* = {}  (safe fallback {})", initial.display(), safe.display());
+    }
+
+    let server = InferenceServer::spawn_with(
+        BackendSpec::Synthetic { manifest: manifest.clone(), exec_cost: Duration::ZERO },
+        DIMS,
+        online_cfg.supervisor_policy(),
+    )?;
+    let eval_set = synthetic_eval_set(
+        manifest.batch * 8,
+        DIMS.0,
+        DIMS.1,
+        DIMS.2,
+        manifest.num_classes,
+        spec.seed,
+    );
+    let mut reopt_ev = PartitionEvaluator::new(
+        &manifest,
+        &platform,
+        env.dev_w_rates(0.0),
+        env.dev_a_rates(0.0),
+        spec.fault_env.scenario,
+        table.clean_acc,
+        spec.link_cost,
+        DaccMode::SyntheticExact { table: &table, cost: Duration::ZERO },
+    )
+    .with_parallelism(threads);
+
+    let theta = online_cfg.theta;
+    let lookahead = online_cfg.lookahead;
+    let mut runner = OnlineRunner {
+        cfg: online_cfg,
+        server: &server,
+        evaluator: &mut reopt_ev,
+        clean_acc: table.clean_acc,
+        chaos: spec.chaos.to_engine(),
+        safe_mapping: Some(safe),
+    };
+    let quiet = format.is_json();
+    let out = runner.run(&eval_set, &env, initial.clone(), |p| {
+        if !quiet {
+            print_tick(p);
         }
+    })?;
+    server.shutdown()?;
+    let report = OnlineReport::from_outcome(&spec.model, theta, lookahead, &initial, &out);
+    if !format.is_json() {
+        print_online_summary(&out);
     }
     emit(format, args, &report.to_json())
 }

@@ -17,7 +17,7 @@ use anyhow::{bail, Context, Result};
 use super::outcome::OfflineReport;
 use super::schema::*;
 use super::ExperimentSpec;
-use crate::bench::suite::{synthetic_manifest, synthetic_sensitivity};
+use crate::bench::suite::{synthetic_manifest, synthetic_sensitivity, synthetic_units};
 use crate::experiment::Experiment;
 use crate::faults::{DriftComponent, FaultEnv, FaultScenario};
 use crate::partition::{DaccMode, EngineConfig, PartitionEvaluator};
@@ -251,11 +251,6 @@ impl CampaignReport {
             ),
         ])
     }
-}
-
-/// `synthetic-L<n>` → `Some(n)`: the artifact-free fixture models.
-fn synthetic_units(model: &str) -> Option<usize> {
-    model.strip_prefix("synthetic-L").and_then(|s| s.parse().ok())
 }
 
 /// Run every cell of the campaign through the batched evaluation engine.

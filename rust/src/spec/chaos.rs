@@ -1,0 +1,227 @@
+//! Declarative chaos injection: the `spec.chaos` section. Off by
+//! default; when enabled, composable serving-failure components (worker
+//! crashes, transient errors, link drops/delays, reply corruption) are
+//! planned per tick by a seeded [`ChaosEngine`] — the serving-system
+//! analogue of the `fault_env.drift` stack.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::schema::*;
+use crate::faults::{ChaosComponent, ChaosEngine, ChaosKind};
+use crate::util::json::{self, Value};
+
+pub(crate) fn chaos_component_from_json(v: &Value, ctx: &str) -> Result<ChaosComponent> {
+    let obj = expect_obj(v, ctx)?;
+    let kind = require_str(obj, "kind", ctx)?.to_string();
+    let rate = match f64_field(obj, "rate", ctx)? {
+        Some(x) => x,
+        None => bail!("{ctx}: missing required key \"rate\""),
+    };
+    if !(0.0..=1.0).contains(&rate) {
+        bail!("{ctx}.rate: {rate} outside [0, 1]");
+    }
+    let burst = |obj: &BTreeMap<String, Value>| -> Result<u32> {
+        match usize_field(obj, "burst", ctx)? {
+            Some(b) if b >= 1 => Ok(b as u32),
+            Some(b) => bail!("{ctx}.burst: {b} must be >= 1"),
+            None => Ok(1),
+        }
+    };
+    let window_keys: &[&str] = &["from_tick", "until_tick"];
+    let with_window = |mut keys: Vec<&'static str>| -> Vec<&'static str> {
+        keys.extend_from_slice(window_keys);
+        keys
+    };
+    let chaos_kind = match kind.as_str() {
+        "worker-crash" => {
+            reject_unknown(obj, &with_window(vec!["kind", "rate"]), ctx)?;
+            ChaosKind::WorkerCrash
+        }
+        "transient-error" => {
+            reject_unknown(obj, &with_window(vec!["kind", "rate", "burst"]), ctx)?;
+            ChaosKind::TransientError { burst: burst(obj)? }
+        }
+        "link-drop" => {
+            reject_unknown(obj, &with_window(vec!["kind", "rate", "burst"]), ctx)?;
+            ChaosKind::LinkDrop { burst: burst(obj)? }
+        }
+        "link-delay" => {
+            reject_unknown(obj, &with_window(vec!["kind", "rate", "ms"]), ctx)?;
+            let ms = match f64_field(obj, "ms", ctx)? {
+                Some(x) if x >= 0.0 => x,
+                Some(x) => bail!("{ctx}.ms: {x} must be >= 0"),
+                None => bail!("{ctx}: chaos kind \"link-delay\" requires key \"ms\""),
+            };
+            ChaosKind::LinkDelay { ms }
+        }
+        "reply-corrupt" => {
+            reject_unknown(obj, &with_window(vec!["kind", "rate"]), ctx)?;
+            ChaosKind::ReplyCorrupt
+        }
+        other => bail!(
+            "{ctx}.kind: unknown chaos kind {other:?} (known: worker-crash, \
+             transient-error, link-drop, link-delay, reply-corrupt)"
+        ),
+    };
+    let from_tick = usize_field(obj, "from_tick", ctx)?.unwrap_or(0);
+    let until_tick = usize_field(obj, "until_tick", ctx)?.unwrap_or(0);
+    if until_tick != 0 && until_tick <= from_tick {
+        bail!("{ctx}: until_tick {until_tick} must exceed from_tick {from_tick} (or be 0)");
+    }
+    Ok(ChaosComponent { kind: chaos_kind, rate, from_tick, until_tick })
+}
+
+pub(crate) fn chaos_component_to_json(c: &ChaosComponent) -> Value {
+    let mut pairs = match &c.kind {
+        ChaosKind::WorkerCrash => vec![("kind", json::s("worker-crash"))],
+        ChaosKind::TransientError { burst } => vec![
+            ("kind", json::s("transient-error")),
+            ("burst", json::num(*burst as f64)),
+        ],
+        ChaosKind::LinkDrop { burst } => {
+            vec![("kind", json::s("link-drop")), ("burst", json::num(*burst as f64))]
+        }
+        ChaosKind::LinkDelay { ms } => {
+            vec![("kind", json::s("link-delay")), ("ms", json::num(*ms))]
+        }
+        ChaosKind::ReplyCorrupt => vec![("kind", json::s("reply-corrupt"))],
+    };
+    pairs.push(("rate", json::num(c.rate)));
+    pairs.push(("from_tick", json::num(c.from_tick as f64)));
+    pairs.push(("until_tick", json::num(c.until_tick as f64)));
+    json::obj(pairs)
+}
+
+/// The declarative chaos section.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosSpec {
+    /// Master switch; `false` keeps the serving path chaos-free (and
+    /// byte-identical to a build without this module).
+    pub enabled: bool,
+    /// Chaos PRNG seed — independent of the serving loop's seed, so
+    /// toggling chaos never perturbs canary keys.
+    pub seed: u64,
+    /// Component stack; defaults to [`ChaosEngine::default_stack`].
+    pub components: Vec<ChaosComponent>,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec { enabled: false, seed: 1337, components: ChaosEngine::default_stack() }
+    }
+}
+
+impl ChaosSpec {
+    pub(crate) fn apply_json(&mut self, obj: &BTreeMap<String, Value>, ctx: &str) -> Result<()> {
+        reject_unknown(obj, &["enabled", "seed", "components"], ctx)?;
+        if let Some(b) = bool_field(obj, "enabled", ctx)? {
+            self.enabled = b;
+        }
+        if let Some(s) = u64_field(obj, "seed", ctx)? {
+            self.seed = s;
+        }
+        if let Some(v) = obj.get("components") {
+            let ctx = format!("{ctx}.components");
+            self.components = expect_arr(v, &ctx)?
+                .iter()
+                .enumerate()
+                .map(|(i, c)| chaos_component_from_json(c, &format!("{ctx}[{i}]")))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("enabled", Value::Bool(self.enabled)),
+            ("seed", json::num(self.seed as f64)),
+            ("components", json::arr(self.components.iter().map(chaos_component_to_json))),
+        ])
+    }
+
+    /// Materialize the engine; a disabled spec plans nothing.
+    pub fn to_engine(&self) -> ChaosEngine {
+        if self.enabled {
+            ChaosEngine::new(self.seed, self.components.clone())
+        } else {
+            ChaosEngine::disabled()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_off_with_the_standard_stack() {
+        let spec = ChaosSpec::default();
+        assert!(!spec.enabled);
+        assert_eq!(spec.components, ChaosEngine::default_stack());
+        assert!(!spec.to_engine().is_enabled());
+        assert!(spec.to_engine().plan(17).is_noop());
+    }
+
+    #[test]
+    fn components_parse_with_windows_and_bursts() {
+        let mut spec = ChaosSpec::default();
+        let v = crate::util::json::parse(
+            r#"{"enabled": true, "seed": 7, "components": [
+                {"kind": "worker-crash", "rate": 0.1},
+                {"kind": "transient-error", "rate": 0.5, "burst": 2, "from_tick": 5, "until_tick": 9},
+                {"kind": "link-drop", "rate": 0.2},
+                {"kind": "link-delay", "rate": 1.0, "ms": 12.5},
+                {"kind": "reply-corrupt", "rate": 0.3}
+            ]}"#,
+        )
+        .unwrap();
+        spec.apply_json(v.as_obj().unwrap(), "chaos").unwrap();
+        assert!(spec.enabled);
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.components.len(), 5);
+        assert_eq!(
+            spec.components[1],
+            ChaosComponent::transient(0.5, 2).window(5, 9)
+        );
+        assert!(spec.to_engine().is_enabled());
+    }
+
+    #[test]
+    fn component_round_trips_through_json() {
+        for comp in [
+            ChaosComponent::crash(0.25),
+            ChaosComponent::transient(0.5, 3).window(2, 10),
+            ChaosComponent::drop(0.1, 2),
+            ChaosComponent::delay(1.0, 40.0),
+            ChaosComponent::corrupt(0.02),
+        ] {
+            let v = chaos_component_to_json(&comp);
+            let back = chaos_component_from_json(&v, "c").unwrap();
+            assert_eq!(back, comp);
+        }
+    }
+
+    #[test]
+    fn bad_components_rejected() {
+        for (src, why) in [
+            (r#"{"kind": "worker-crash", "rate": 0.1, "burst": 2}"#, "burst on crash"),
+            (r#"{"kind": "link-delay", "rate": 0.5}"#, "delay without ms"),
+            (r#"{"kind": "meteor", "rate": 0.5}"#, "unknown kind"),
+            (r#"{"kind": "worker-crash", "rate": 1.5}"#, "rate out of range"),
+            (r#"{"kind": "link-drop", "rate": 0.5, "burst": 0}"#, "zero burst"),
+            (r#"{"kind": "worker-crash", "rate": 0.1, "from_tick": 9, "until_tick": 3}"#, "inverted window"),
+        ] {
+            let v = crate::util::json::parse(src).unwrap();
+            assert!(chaos_component_from_json(&v, "c").is_err(), "{why}");
+        }
+    }
+
+    #[test]
+    fn unknown_section_key_rejected() {
+        let mut spec = ChaosSpec::default();
+        let v = crate::util::json::parse(r#"{"enable": true}"#).unwrap();
+        assert!(spec.apply_json(v.as_obj().unwrap(), "chaos").is_err());
+    }
+}

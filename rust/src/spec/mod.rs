@@ -25,6 +25,7 @@
 //! See `docs/spec.md` for the key-by-key schema reference.
 
 pub mod campaign;
+pub mod chaos;
 pub mod faultenv;
 pub mod online;
 pub mod outcome;
@@ -37,6 +38,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 pub use self::campaign::{CampaignSpec, DriftCell};
+pub use self::chaos::ChaosSpec;
 pub use self::faultenv::FaultEnvSpec;
 pub use self::online::OnlineSpec;
 pub use self::platform::{AccelKind, DeviceEntry, LinkSpec, PlatformSpec};
@@ -246,6 +248,8 @@ pub struct ExperimentSpec {
     pub optimizer: OptimizerSpec,
     pub selection: SelectionSpec,
     pub online: OnlineSpec,
+    /// Serving-system chaos injection (off by default).
+    pub chaos: ChaosSpec,
 }
 
 impl Default for ExperimentSpec {
@@ -264,6 +268,7 @@ impl Default for ExperimentSpec {
             optimizer: OptimizerSpec::default(),
             selection: SelectionSpec::default(),
             online: OnlineSpec::default(),
+            chaos: ChaosSpec::default(),
         }
     }
 }
@@ -282,6 +287,7 @@ const TOP_LEVEL_KEYS: &[&str] = &[
     "optimizer",
     "selection",
     "online",
+    "chaos",
 ];
 
 impl ExperimentSpec {
@@ -329,6 +335,9 @@ impl ExperimentSpec {
         if let Some(v) = obj.get("online") {
             self.online.apply_json(expect_obj(v, "spec.online")?, "spec.online")?;
         }
+        if let Some(v) = obj.get("chaos") {
+            self.chaos.apply_json(expect_obj(v, "spec.chaos")?, "spec.chaos")?;
+        }
         Ok(())
     }
 
@@ -363,6 +372,7 @@ impl ExperimentSpec {
             ("optimizer", self.optimizer.to_json()),
             ("selection", self.selection.to_json()),
             ("online", self.online.to_json()),
+            ("chaos", self.chaos.to_json()),
         ])
     }
 
@@ -422,6 +432,10 @@ impl ExperimentSpec {
         if args.has_flag("link-cost") {
             self.link_cost = true;
         }
+        if args.has_flag("chaos") {
+            self.chaos.enabled = true;
+        }
+        self.chaos.seed = args.get_u64("chaos-seed", self.chaos.seed);
         self.seed = args.get_u64("seed", self.seed);
         Ok(())
     }
@@ -479,7 +493,7 @@ mod tests {
 
     fn args(raw: &[&str]) -> Args {
         let raw: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
-        Args::parse(&raw, &["surrogate", "link-cost", "verbose", "help"])
+        Args::parse(&raw, &["surrogate", "link-cost", "chaos", "verbose", "help"])
     }
 
     #[test]
@@ -538,6 +552,18 @@ mod tests {
             assert_eq!(SelectionPolicy::parse(p.as_str()), Some(p));
         }
         assert_eq!(SelectionPolicy::parse("best-effort"), None);
+    }
+
+    #[test]
+    fn chaos_flag_enables_injection() {
+        let a = args(&["online", "--chaos", "--chaos-seed", "77"]);
+        let spec = ExperimentSpec::resolve_with(&a, |_| None).unwrap();
+        assert!(spec.chaos.enabled);
+        assert_eq!(spec.chaos.seed, 77);
+        // default: off, with the standard component stack ready to arm
+        let quiet = ExperimentSpec::resolve_with(&args(&["online"]), |_| None).unwrap();
+        assert!(!quiet.chaos.enabled);
+        assert!(!quiet.chaos.to_engine().is_enabled());
     }
 
     #[test]

@@ -39,6 +39,15 @@ pub struct OnlineSpec {
     /// pre-pipelined serving loop). The timeline is bitwise identical at
     /// any depth — see `coordinator::online`.
     pub lookahead: usize,
+    /// Reply deadline per inference attempt (ms); 0 waits forever.
+    pub recv_timeout_ms: u64,
+    /// Retries per canary batch before its failure becomes terminal.
+    pub max_retries: usize,
+    /// Base retry backoff (ms), doubled per attempt.
+    pub backoff_ms: u64,
+    /// Ticks on the safe mapping after a terminal failure before the
+    /// degraded configuration is re-admitted.
+    pub health_cooldown: usize,
 }
 
 impl Default for OnlineSpec {
@@ -57,6 +66,10 @@ impl Default for OnlineSpec {
             cooldown: c.cooldown,
             seed: c.seed,
             lookahead: 0,
+            recv_timeout_ms: c.recv_timeout_ms,
+            max_retries: c.max_retries,
+            backoff_ms: c.backoff_ms,
+            health_cooldown: c.health_cooldown,
         }
     }
 }
@@ -78,6 +91,10 @@ impl OnlineSpec {
                 "cooldown",
                 "seed",
                 "lookahead",
+                "recv_timeout_ms",
+                "max_retries",
+                "backoff_ms",
+                "health_cooldown",
             ],
             ctx,
         )?;
@@ -117,6 +134,18 @@ impl OnlineSpec {
         if let Some(x) = usize_field(obj, "lookahead", ctx)? {
             self.lookahead = x;
         }
+        if let Some(x) = u64_field(obj, "recv_timeout_ms", ctx)? {
+            self.recv_timeout_ms = x;
+        }
+        if let Some(x) = usize_field(obj, "max_retries", ctx)? {
+            self.max_retries = x;
+        }
+        if let Some(x) = u64_field(obj, "backoff_ms", ctx)? {
+            self.backoff_ms = x;
+        }
+        if let Some(x) = usize_field(obj, "health_cooldown", ctx)? {
+            self.health_cooldown = x;
+        }
         Ok(())
     }
 
@@ -134,6 +163,10 @@ impl OnlineSpec {
             ("cooldown", json::num(self.cooldown as f64)),
             ("seed", json::num(self.seed as f64)),
             ("lookahead", json::num(self.lookahead as f64)),
+            ("recv_timeout_ms", json::num(self.recv_timeout_ms as f64)),
+            ("max_retries", json::num(self.max_retries as f64)),
+            ("backoff_ms", json::num(self.backoff_ms as f64)),
+            ("health_cooldown", json::num(self.health_cooldown as f64)),
         ])
     }
 
@@ -161,6 +194,10 @@ impl OnlineSpec {
             } else {
                 self.lookahead
             },
+            recv_timeout_ms: self.recv_timeout_ms,
+            max_retries: self.max_retries,
+            backoff_ms: self.backoff_ms,
+            health_cooldown: self.health_cooldown,
         }
     }
 }
@@ -182,6 +219,26 @@ mod tests {
         assert_eq!(cfg.reopt.seed, legacy.reopt.seed);
         assert_eq!(cfg.cooldown, legacy.cooldown);
         assert_eq!(cfg.lookahead, 1);
+        assert_eq!(cfg.recv_timeout_ms, legacy.recv_timeout_ms);
+        assert_eq!(cfg.max_retries, legacy.max_retries);
+        assert_eq!(cfg.backoff_ms, legacy.backoff_ms);
+        assert_eq!(cfg.health_cooldown, legacy.health_cooldown);
+    }
+
+    #[test]
+    fn supervision_keys_parse() {
+        let mut spec = OnlineSpec::default();
+        let v = crate::util::json::parse(
+            r#"{"recv_timeout_ms": 250, "max_retries": 5, "backoff_ms": 2, "health_cooldown": 4}"#,
+        )
+        .unwrap();
+        spec.apply_json(v.as_obj().unwrap(), "online").unwrap();
+        assert_eq!(spec.recv_timeout_ms, 250);
+        assert_eq!(spec.max_retries, 5);
+        assert_eq!(spec.backoff_ms, 2);
+        assert_eq!(spec.health_cooldown, 4);
+        let cfg = spec.to_online_config(1);
+        assert_eq!(cfg.supervisor_policy().recv_timeout_ms, 250);
     }
 
     #[test]

@@ -158,6 +158,14 @@ pub struct OnlineReport {
     pub speculative_discarded: usize,
     pub cache_lifetime_hits: usize,
     pub cache_lifetime_misses: usize,
+    pub worker_respawns: usize,
+    pub retries: usize,
+    pub transient_errors: usize,
+    pub timeouts: usize,
+    pub degradations: usize,
+    pub degraded_ticks: usize,
+    /// Half-open `[start, end)` tick intervals spent degraded.
+    pub degraded_intervals: Vec<(usize, usize)>,
     pub exec_mean_ms: Option<f64>,
     pub exec_p95_ms: Option<f64>,
     pub timeline: Vec<TimelineEntry>,
@@ -173,6 +181,7 @@ pub struct TimelineEntry {
     pub rolling_accuracy: f64,
     pub mapping: String,
     pub reconfigured: bool,
+    pub degraded: bool,
 }
 
 impl OnlineReport {
@@ -196,6 +205,13 @@ impl OnlineReport {
             speculative_discarded: out.metrics.speculative_discarded,
             cache_lifetime_hits: out.cache_lifetime.hits,
             cache_lifetime_misses: out.cache_lifetime.misses,
+            worker_respawns: out.metrics.worker_respawns,
+            retries: out.metrics.retries,
+            transient_errors: out.metrics.transient_errors,
+            timeouts: out.metrics.timeouts,
+            degradations: out.metrics.degradations,
+            degraded_ticks: out.metrics.degraded_ticks,
+            degraded_intervals: out.metrics.degraded_intervals.clone(),
             exec_mean_ms: exec.as_ref().map(|s| s.mean),
             exec_p95_ms: exec.as_ref().map(|s| s.p95),
             timeline: out
@@ -209,6 +225,7 @@ impl OnlineReport {
                     rolling_accuracy: p.rolling_accuracy,
                     mapping: p.mapping.display(),
                     reconfigured: p.reconfigured,
+                    degraded: p.degraded,
                 })
                 .collect(),
         }
@@ -224,6 +241,7 @@ impl OnlineReport {
                 ("rolling_accuracy", json::num(p.rolling_accuracy)),
                 ("mapping", json::s(&p.mapping)),
                 ("reconfigured", Value::Bool(p.reconfigured)),
+                ("degraded", Value::Bool(p.degraded)),
             ])
         });
         let mut fields = vec![
@@ -239,6 +257,18 @@ impl OnlineReport {
             ("speculative_discarded", json::num(self.speculative_discarded as f64)),
             ("cache_lifetime_hits", json::num(self.cache_lifetime_hits as f64)),
             ("cache_lifetime_misses", json::num(self.cache_lifetime_misses as f64)),
+            ("worker_respawns", json::num(self.worker_respawns as f64)),
+            ("retries", json::num(self.retries as f64)),
+            ("transient_errors", json::num(self.transient_errors as f64)),
+            ("timeouts", json::num(self.timeouts as f64)),
+            ("degradations", json::num(self.degradations as f64)),
+            ("degraded_ticks", json::num(self.degraded_ticks as f64)),
+            (
+                "degraded_intervals",
+                json::arr(self.degraded_intervals.iter().map(|&(s, e)| {
+                    json::arr([json::num(s as f64), json::num(e as f64)])
+                })),
+            ),
             ("timeline", json::arr(timeline)),
         ];
         if let Some(m) = self.exec_mean_ms {

@@ -1,0 +1,437 @@
+//! Resilience tests for the chaos-injection layer, the supervised
+//! inference server, and graceful degradation (ISSUE 6): every injected
+//! failure class must be survived (or surfaced as its typed terminal
+//! error) with deterministic counters, chaos-enabled timelines must be
+//! bitwise identical across repeats and pipeline depths, and terminal
+//! failures must degrade to the safe mapping and recover.
+//!
+//! Everything runs on the artifact-free synthetic backend, so the suite
+//! needs no PJRT artifacts and no wall-clock luck: predictions are a
+//! pure function of (images, rates, key).
+
+use std::time::Duration;
+
+use afarepart::bench::suite::{synthetic_eval_set, synthetic_manifest, synthetic_sensitivity};
+use afarepart::coordinator::{
+    BackendSpec, InferError, InferJob, InferenceServer, OnlineConfig, OnlineOutcome,
+    OnlineRunner, ServerStats, SupervisorPolicy, TimelinePoint,
+};
+use afarepart::faults::{
+    ChaosComponent, ChaosEngine, ChaosPlan, DeviceFaultProfile, FaultEnv, FaultScenario,
+    RateVectors,
+};
+use afarepart::hw::Platform;
+use afarepart::partition::{DaccMode, Mapping, PartitionEvaluator};
+
+const UNITS: usize = 6;
+const DIMS: (usize, usize, usize) = (4, 4, 3);
+const BATCH: usize = 8;
+
+/// Fast supervision policy for the server-level tests: no backoff sleep.
+fn fast_policy() -> SupervisorPolicy {
+    SupervisorPolicy { backoff_ms: 0, ..SupervisorPolicy::default() }
+}
+
+fn synth_server(policy: SupervisorPolicy) -> InferenceServer {
+    InferenceServer::spawn_with(
+        BackendSpec::Synthetic { manifest: synthetic_manifest(UNITS), exec_cost: Duration::ZERO },
+        DIMS,
+        policy,
+    )
+    .expect("synthetic server spawns without artifacts")
+}
+
+/// One batch of synthetic images plus the predictions a fault-free
+/// worker must return for them (the ground-truth labels).
+fn one_batch() -> (Vec<f32>, Vec<usize>) {
+    let eval = synthetic_eval_set(BATCH, DIMS.0, DIMS.1, DIMS.2, 10, 42);
+    let expect = eval.labels.iter().map(|&l| l as usize).collect();
+    (eval.images, expect)
+}
+
+#[test]
+fn worker_crash_respawns_and_serves_identical_predictions() {
+    let server = synth_server(fast_policy());
+    let (images, expect) = one_batch();
+    let zeros = RateVectors::zeros(UNITS);
+
+    let plan = ChaosPlan { crash: true, ..Default::default() };
+    let crashed = server
+        .infer_blocking_with(images.clone(), BATCH, zeros.clone(), [3, 7], plan)
+        .expect("crash is absorbed by respawn");
+    let clean = server.infer_blocking(images, BATCH, zeros, [3, 7]).unwrap();
+    assert_eq!(crashed.preds, clean.preds, "respawned worker must compute the same batch");
+    assert_eq!(crashed.preds, expect);
+
+    let s = server.stats();
+    assert_eq!(s.crashes, 1);
+    assert_eq!(s.respawns, 1);
+    assert_eq!((s.retries, s.transient_errors, s.timeouts), (0, 0, 0));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn transient_burst_is_retried_to_success() {
+    let server = synth_server(fast_policy());
+    let (images, expect) = one_batch();
+
+    let plan = ChaosPlan { transient_failures: 2, ..Default::default() };
+    let reply = server
+        .infer_blocking_with(images, BATCH, RateVectors::zeros(UNITS), [1, 2], plan)
+        .expect("burst of 2 fits in the retry budget of 3");
+    assert_eq!(reply.preds, expect);
+
+    let s = server.stats();
+    assert_eq!(s.transient_errors, 2);
+    assert_eq!(s.retries, 2);
+    assert_eq!((s.respawns, s.crashes, s.timeouts), (0, 0, 0));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn transient_exhaustion_is_a_typed_terminal_error() {
+    let server = synth_server(fast_policy());
+    let (images, _) = one_batch();
+
+    let plan = ChaosPlan { transient_failures: 10, ..Default::default() };
+    let ticket = server
+        .submit(InferJob {
+            images,
+            n_valid: BATCH,
+            rates: RateVectors::zeros(UNITS),
+            key: [1, 2],
+            plan,
+        })
+        .unwrap();
+    match server.wait(ticket) {
+        Err(InferError::Exhausted { attempts, .. }) => assert_eq!(attempts, 4),
+        other => panic!("expected Exhausted after max_retries, got {other:?}"),
+    }
+    let s = server.stats();
+    assert_eq!(s.transient_errors, 4); // initial attempt + 3 retries
+    assert_eq!(s.retries, 3);
+    assert_eq!(s.respawns, 0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn dropped_reply_times_out_then_respawn_recovers() {
+    let server = synth_server(SupervisorPolicy {
+        recv_timeout_ms: 50,
+        backoff_ms: 0,
+        ..SupervisorPolicy::default()
+    });
+    let (images, expect) = one_batch();
+
+    let plan = ChaosPlan { drop_replies: 1, ..Default::default() };
+    let reply = server
+        .infer_blocking_with(images, BATCH, RateVectors::zeros(UNITS), [5, 9], plan)
+        .expect("one lost reply is retried after the recv timeout");
+    assert_eq!(reply.preds, expect);
+
+    let s = server.stats();
+    assert_eq!(s.timeouts, 1);
+    assert_eq!(s.respawns, 1);
+    assert_eq!(s.crashes, 0, "a lost reply is a timeout, not a crash");
+    assert_eq!(s.retries, 1);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn persistent_reply_loss_is_a_typed_timeout() {
+    let server = synth_server(SupervisorPolicy {
+        recv_timeout_ms: 25,
+        max_retries: 2,
+        backoff_ms: 0,
+        ..SupervisorPolicy::default()
+    });
+    let (images, _) = one_batch();
+
+    let plan = ChaosPlan { drop_replies: 10, ..Default::default() };
+    let ticket = server
+        .submit(InferJob {
+            images,
+            n_valid: BATCH,
+            rates: RateVectors::zeros(UNITS),
+            key: [5, 9],
+            plan,
+        })
+        .unwrap();
+    match server.wait(ticket) {
+        Err(InferError::TimedOut { waited_ms, attempts }) => {
+            assert_eq!(waited_ms, 25);
+            assert_eq!(attempts, 3);
+        }
+        other => panic!("expected TimedOut, got {other:?}"),
+    }
+    let s = server.stats();
+    assert_eq!(s.timeouts, 3);
+    assert_eq!(s.retries, 2);
+    assert_eq!(s.respawns, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn link_delay_inflates_reported_latency() {
+    let server = synth_server(fast_policy());
+    let (images, expect) = one_batch();
+
+    let plan = ChaosPlan { delay_ms: 25.0, ..Default::default() };
+    let reply = server
+        .infer_blocking_with(images, BATCH, RateVectors::zeros(UNITS), [2, 4], plan)
+        .unwrap();
+    assert!(reply.exec_ms >= 25.0, "delay must feed exec_ms (got {})", reply.exec_ms);
+    assert_eq!(reply.preds, expect, "delay must not change predictions");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn reply_corruption_is_deterministic_and_always_wrong() {
+    let server = synth_server(fast_policy());
+    let (images, _) = one_batch();
+    let zeros = RateVectors::zeros(UNITS);
+
+    let plan = ChaosPlan { corrupt: true, ..Default::default() };
+    let a = server
+        .infer_blocking_with(images.clone(), BATCH, zeros.clone(), [8, 8], plan.clone())
+        .unwrap();
+    let b = server
+        .infer_blocking_with(images.clone(), BATCH, zeros.clone(), [8, 8], plan)
+        .unwrap();
+    let clean = server.infer_blocking(images, BATCH, zeros, [8, 8]).unwrap();
+    assert_eq!(a.preds, b.preds, "corruption is keyed, not time-dependent");
+    assert_eq!(a.preds.len(), clean.preds.len());
+    for (c, k) in a.preds.iter().zip(&clean.preds) {
+        assert_ne!(c, k, "every corrupted prediction lands on a different class");
+    }
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Online-runner level: full serving loops under chaos.
+// ---------------------------------------------------------------------------
+
+/// Run a synthetic online serving loop and return (outcome, final server
+/// stats). The world mirrors the `synthetic-L<n>` campaign cells.
+fn run_online(
+    chaos: ChaosEngine,
+    safe: Option<Mapping>,
+    cfg: OnlineConfig,
+    initial: Mapping,
+) -> (OnlineOutcome, ServerStats) {
+    let manifest = synthetic_manifest(UNITS);
+    let table = synthetic_sensitivity(UNITS);
+    let platform = Platform::default_two_device();
+    let env = FaultEnv {
+        base_rate: 0.08,
+        profiles: DeviceFaultProfile::default_two_device(),
+        drift: Vec::new(),
+    };
+    let eval = synthetic_eval_set(BATCH * 4, DIMS.0, DIMS.1, DIMS.2, 10, 42);
+    let server = InferenceServer::spawn_with(
+        BackendSpec::Synthetic { manifest: manifest.clone(), exec_cost: Duration::ZERO },
+        DIMS,
+        cfg.supervisor_policy(),
+    )
+    .unwrap();
+    let mut ev = PartitionEvaluator::new(
+        &manifest,
+        &platform,
+        env.dev_w_rates(0.0),
+        env.dev_a_rates(0.0),
+        FaultScenario::InputWeight,
+        table.clean_acc,
+        false,
+        DaccMode::SyntheticExact { table: &table, cost: Duration::ZERO },
+    );
+    let mut runner = OnlineRunner {
+        cfg,
+        server: &server,
+        evaluator: &mut ev,
+        clean_acc: table.clean_acc,
+        chaos,
+        safe_mapping: safe,
+    };
+    let out = runner.run(&eval, &env, initial, |_| {}).unwrap();
+    let stats = server.stats();
+    server.shutdown().unwrap();
+    (out, stats)
+}
+
+/// Bitwise timeline fingerprint: the comparison key of every
+/// determinism assertion below.
+fn fingerprint(tl: &[TimelinePoint]) -> Vec<(usize, u64, u64, Vec<usize>, bool, bool)> {
+    tl.iter()
+        .map(|p| {
+            (
+                p.tick,
+                p.batch_accuracy.to_bits(),
+                p.rolling_accuracy.to_bits(),
+                p.mapping.0.clone(),
+                p.reconfigured,
+                p.degraded,
+            )
+        })
+        .collect()
+}
+
+/// Crash/transient/delay/corrupt mix (no drops: their recv timeouts are
+/// real wall-clock waits and belong to the server-level tests above).
+/// The windowed rate-1.0 crash guarantees at least one worker death
+/// regardless of what the probabilistic streams roll.
+fn busy_chaos() -> ChaosEngine {
+    ChaosEngine::new(
+        99,
+        vec![
+            ChaosComponent::crash(1.0).window(4, 5),
+            ChaosComponent::crash(0.15),
+            ChaosComponent::transient(0.25, 1),
+            ChaosComponent::delay(0.3, 5.0),
+            ChaosComponent::corrupt(0.2),
+        ],
+    )
+}
+
+fn chaos_cfg(lookahead: usize) -> OnlineConfig {
+    OnlineConfig { ticks: 30, lookahead, backoff_ms: 0, health_cooldown: 3, ..Default::default() }
+}
+
+#[test]
+fn chaos_timeline_is_deterministic_and_lookahead_invariant() {
+    let initial = Mapping::all_on(0, UNITS);
+    let safe = Some(Mapping::all_on(1, UNITS));
+    let (a, stats_a) = run_online(busy_chaos(), safe.clone(), chaos_cfg(1), initial.clone());
+    let (b, _) = run_online(busy_chaos(), safe.clone(), chaos_cfg(3), initial.clone());
+    let (c, stats_c) = run_online(busy_chaos(), safe, chaos_cfg(1), initial);
+
+    assert!(
+        a.timeline.iter().any(|p| p.batch_accuracy < 1.0),
+        "the mix must actually perturb some batches"
+    );
+    assert_eq!(
+        fingerprint(&a.timeline),
+        fingerprint(&b.timeline),
+        "timeline must be bitwise identical at any pipeline depth"
+    );
+    assert_eq!(
+        fingerprint(&a.timeline),
+        fingerprint(&c.timeline),
+        "timeline must be bitwise identical across repeats"
+    );
+    assert_eq!(stats_a, stats_c, "supervision counters must repeat exactly");
+    assert!(stats_a.crashes > 0, "the windowed rate-1.0 crash must fire");
+    assert_eq!(stats_a.respawns, stats_a.crashes, "no timeouts in this mix");
+    assert_eq!(a.metrics.worker_respawns, stats_a.respawns);
+    assert_eq!(a.metrics.transient_errors, stats_a.transient_errors);
+}
+
+#[test]
+fn disabled_chaos_leaves_serving_untouched_at_any_lookahead() {
+    let initial = Mapping::all_on(0, UNITS);
+    let (a, stats_a) = run_online(ChaosEngine::disabled(), None, chaos_cfg(1), initial.clone());
+    let (b, stats_b) = run_online(ChaosEngine::disabled(), None, chaos_cfg(3), initial);
+
+    assert_eq!(fingerprint(&a.timeline), fingerprint(&b.timeline));
+    for stats in [stats_a, stats_b] {
+        assert_eq!(stats, ServerStats::default(), "chaos off => no supervision events");
+    }
+    for out in [&a, &b] {
+        assert!(out.timeline.iter().all(|p| !p.degraded));
+        assert_eq!(out.metrics.degradations, 0);
+        assert_eq!(out.metrics.degraded_ticks, 0);
+        assert!(out.metrics.degraded_intervals.is_empty());
+        assert_eq!(out.metrics.worker_respawns, 0);
+        assert_eq!(out.metrics.retries, 0);
+    }
+}
+
+#[test]
+fn terminal_failure_degrades_to_safe_mapping_and_recovers() {
+    // tick 5 fires a transient burst far past the retry budget of 1 —
+    // a guaranteed terminal Exhausted — then the environment is quiet.
+    let chaos = ChaosEngine::new(7, vec![ChaosComponent::transient(1.0, 9).window(5, 6)]);
+    let cfg = OnlineConfig {
+        ticks: 12,
+        lookahead: 2,
+        theta: 10.0, // never repartition: isolate the degradation path
+        max_retries: 1,
+        backoff_ms: 0,
+        health_cooldown: 3,
+        ..Default::default()
+    };
+    let initial = Mapping::all_on(0, UNITS);
+    let safe = Mapping::all_on(1, UNITS);
+    let (out, _) = run_online(chaos, Some(safe.clone()), cfg, initial.clone());
+
+    // entry: the failed tick serves nothing, switches to the safe mapping
+    assert!(out.timeline[5].degraded);
+    assert_eq!(out.timeline[5].batch_accuracy, 0.0);
+    assert_eq!(out.timeline[5].mapping, safe);
+    // ticks 6..9 serve on the safe mapping under the health-probe cooldown
+    for t in 6..9 {
+        assert!(out.timeline[t].degraded, "tick {t} still degraded");
+        assert_eq!(out.timeline[t].mapping, safe);
+    }
+    // re-admission at tick 9 = 5 + 1 + health_cooldown restores P*
+    assert!(!out.timeline[9].degraded);
+    assert_eq!(out.timeline[9].mapping, initial);
+    assert!(out.timeline[10..].iter().all(|p| !p.degraded));
+
+    assert_eq!(out.metrics.degradations, 1);
+    assert_eq!(out.metrics.degraded_ticks, 4);
+    assert_eq!(out.metrics.degraded_intervals, vec![(5, 9)]);
+    assert_eq!(out.metrics.transient_errors, 2); // initial attempt + 1 retry
+    assert_eq!(out.metrics.retries, 1);
+    assert_eq!(out.final_mapping, initial);
+}
+
+#[test]
+fn terminal_failure_without_safe_mapping_is_a_run_error() {
+    let chaos = ChaosEngine::new(7, vec![ChaosComponent::transient(1.0, 9).window(2, 3)]);
+    let manifest = synthetic_manifest(UNITS);
+    let table = synthetic_sensitivity(UNITS);
+    let platform = Platform::default_two_device();
+    let env = FaultEnv {
+        base_rate: 0.08,
+        profiles: DeviceFaultProfile::default_two_device(),
+        drift: Vec::new(),
+    };
+    let eval = synthetic_eval_set(BATCH * 4, DIMS.0, DIMS.1, DIMS.2, 10, 42);
+    let cfg = OnlineConfig {
+        ticks: 8,
+        max_retries: 1,
+        backoff_ms: 0,
+        ..Default::default()
+    };
+    let server = InferenceServer::spawn_with(
+        BackendSpec::Synthetic { manifest: manifest.clone(), exec_cost: Duration::ZERO },
+        DIMS,
+        cfg.supervisor_policy(),
+    )
+    .unwrap();
+    let mut ev = PartitionEvaluator::new(
+        &manifest,
+        &platform,
+        env.dev_w_rates(0.0),
+        env.dev_a_rates(0.0),
+        FaultScenario::InputWeight,
+        table.clean_acc,
+        false,
+        DaccMode::SyntheticExact { table: &table, cost: Duration::ZERO },
+    );
+    let mut runner = OnlineRunner {
+        cfg,
+        server: &server,
+        evaluator: &mut ev,
+        clean_acc: table.clean_acc,
+        chaos,
+        safe_mapping: None,
+    };
+    let err = runner
+        .run(&eval, &env, Mapping::all_on(0, UNITS), |_| {})
+        .expect_err("no safe mapping configured: terminal failures abort the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("tick 2"), "error must carry the failing tick: {msg}");
+    assert!(msg.contains("no safe mapping"), "error must explain the policy: {msg}");
+    server.shutdown().unwrap();
+}

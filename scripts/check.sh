@@ -11,6 +11,16 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== clippy (lint gate) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --release --all-targets -- -D warnings
+else
+    echo "clippy unavailable; skipping lint gate"
+fi
+
+echo "== chaos smoke (resilient serving determinism) =="
+bash scripts/chaos_smoke.sh
+
 echo "== bench_perf (eval-engine section, fast budgets) =="
 AFARE_BENCH_FAST=1 cargo bench --bench bench_perf
 
