@@ -3,17 +3,22 @@
 #   make check        build + tests + eval-engine perf gate (scripts/check.sh)
 #   make chaos-smoke  chaos-enabled synthetic online run: must survive the
 #                     default failure stack and be bitwise-deterministic
+#   make trace-smoke  traced synthetic online run: the JSONL event trace
+#                     must be schema-valid and bitwise repeat-deterministic
 #   make artifacts    regenerate the compiled model artifacts (needs the
 #                     python/JAX build-time stack; the rust binary only
 #                     consumes the result)
 
-.PHONY: check chaos-smoke artifacts
+.PHONY: check chaos-smoke trace-smoke artifacts
 
 check:
 	bash scripts/check.sh
 
 chaos-smoke:
 	bash scripts/chaos_smoke.sh
+
+trace-smoke:
+	bash scripts/trace_smoke.sh
 
 artifacts:
 	python3 python/compile/aot.py

@@ -18,6 +18,7 @@ use afarepart::coordinator::{OfflineRunner, OnlineConfig, OnlineRunner};
 use afarepart::experiment::Experiment;
 use afarepart::faults::{ChaosEngine, DriftComponent, FaultEnv, FaultScenario};
 use afarepart::model::Manifest;
+use afarepart::obs::Telemetry;
 use afarepart::util::fmt::pct;
 
 fn main() -> Result<()> {
@@ -90,6 +91,7 @@ fn main() -> Result<()> {
         // injection and degradation are `afarepart online --chaos` territory
         chaos: ChaosEngine::disabled(),
         safe_mapping: None,
+        telemetry: Telemetry::disabled(),
     };
 
     println!("[e2e] serving 120 ticks; attack begins at t=40s; θ = {}", pct(cfg.theta));

@@ -1,5 +1,12 @@
 //! Coordinator metrics: counters + latency samples exported by both phases.
+//!
+//! Every `record_*` mutation is mirrored into the run's
+//! [`crate::obs::MetricRegistry`] (when telemetry is enabled), so the
+//! Prometheus snapshot and the report fields can never disagree. The
+//! public fields remain the source of truth for `OnlineReport` — their
+//! values are byte-for-byte what they were before the registry existed.
 
+use crate::obs::Telemetry;
 use crate::partition::CacheStats;
 use crate::util::stats::{summarize, Summary};
 
@@ -35,19 +42,32 @@ pub struct Metrics {
     pub degraded_intervals: Vec<(usize, usize)>,
     exec_ms: Vec<f64>,
     reopt_ms: Vec<f64>,
+    telemetry: Telemetry,
 }
 
 impl Metrics {
+    /// A metrics accumulator that mirrors every recording into the run's
+    /// registry. `Metrics::default()` keeps telemetry disabled.
+    pub fn with_telemetry(telemetry: Telemetry) -> Metrics {
+        Metrics { telemetry, ..Metrics::default() }
+    }
+
     pub fn record_batch(&mut self, n_valid: usize, exec_ms: f64) {
         self.batches_served += 1;
         self.samples_served += n_valid;
         self.exec_ms.push(exec_ms);
+        self.telemetry.counter_add("serve_batches_total", 1);
+        self.telemetry.counter_add("serve_samples_total", n_valid as u64);
+        self.telemetry.observe_ms("serve_exec_ms", exec_ms);
     }
 
     pub fn record_reconfiguration(&mut self, evals: usize, wall_ms: f64) {
         self.reconfigurations += 1;
         self.reopt_evaluations += evals;
         self.reopt_ms.push(wall_ms);
+        self.telemetry.counter_add("serve_reconfigurations_total", 1);
+        self.telemetry.counter_add("serve_reopt_evaluations_total", evals as u64);
+        self.telemetry.observe_ms("serve_reopt_ms", wall_ms);
     }
 
     /// Fold a closed cache epoch (see `PartitionEvaluator::set_env_rates`)
@@ -56,21 +76,65 @@ impl Metrics {
         self.cache_epochs_closed += 1;
         self.closed_epoch_cache.hits += epoch.hits;
         self.closed_epoch_cache.misses += epoch.misses;
+        self.telemetry.counter_add("serve_cache_epochs_closed_total", 1);
+        self.telemetry.counter_add("serve_cache_epoch_hits_total", epoch.hits as u64);
+        self.telemetry.counter_add("serve_cache_epoch_misses_total", epoch.misses as u64);
     }
 
-    /// Record a degraded interval `[start, end)`; contiguous intervals
-    /// are merged so re-entries during one outage read as one span.
+    /// A terminal inference failure pushed the runner onto the safe
+    /// mapping (or restarted its health-probe cooldown).
+    pub fn record_degradation(&mut self) {
+        self.degradations += 1;
+        self.telemetry.counter_add("serve_degradations_total", 1);
+    }
+
+    /// One tick served (or lost) under safe-mapping degradation.
+    pub fn record_degraded_tick(&mut self) {
+        self.degraded_ticks += 1;
+        self.telemetry.counter_add("serve_degraded_ticks_total", 1);
+    }
+
+    /// Speculative canary batches discarded by a mapping change.
+    pub fn record_speculative_discard(&mut self, n: usize) {
+        self.speculative_discarded += n;
+        self.telemetry.counter_add("serve_speculative_discarded_total", n as u64);
+    }
+
+    /// Fold the supervision counters accumulated by the inference server
+    /// over this run (a `ServerStats` delta). Deliberately NOT mirrored
+    /// into the registry: `InferenceServer` bumps `server_*_total` live
+    /// at the same points it mutates `ServerStats`, so mirroring the
+    /// end-of-run delta here would double-count.
+    pub fn record_supervision(
+        &mut self,
+        respawns: usize,
+        retries: usize,
+        transient_errors: usize,
+        timeouts: usize,
+    ) {
+        self.worker_respawns += respawns;
+        self.retries += retries;
+        self.transient_errors += transient_errors;
+        self.timeouts += timeouts;
+    }
+
+    /// Record a degraded interval `[start, end)`. Half-open: `end` is the
+    /// first non-degraded tick. Adjacent (`last.end == start`) and
+    /// overlapping (`last.end > start`) intervals merge into the previous
+    /// span so re-entries during one outage read as one interval; empty
+    /// intervals (`end <= start`) are ignored.
     pub fn record_degraded_interval(&mut self, start: usize, end: usize) {
         if end <= start {
             return;
         }
         if let Some(last) = self.degraded_intervals.last_mut() {
-            if last.1 == start {
-                last.1 = end;
+            if last.1 >= start {
+                last.1 = last.1.max(end);
                 return;
             }
         }
         self.degraded_intervals.push((start, end));
+        self.telemetry.counter_add("serve_degraded_intervals_total", 1);
     }
 
     pub fn exec_summary(&self) -> Option<Summary> {
@@ -131,10 +195,83 @@ mod tests {
         assert_eq!(m.degraded_intervals, vec![(5, 12), (20, 22)]);
     }
 
+    /// Half-open semantics: `[5, 6)` is exactly tick 5. An adjacent
+    /// single-tick interval extends the previous span by one.
+    #[test]
+    fn degraded_intervals_single_tick() {
+        let mut m = Metrics::default();
+        m.record_degraded_interval(5, 6);
+        assert_eq!(m.degraded_intervals, vec![(5, 6)]);
+        m.record_degraded_interval(6, 7);
+        assert_eq!(m.degraded_intervals, vec![(5, 7)]);
+        m.record_degraded_interval(9, 10);
+        assert_eq!(m.degraded_intervals, vec![(5, 7), (9, 10)]);
+    }
+
+    /// Overlapping re-entries (a terminal failure restarting the health
+    /// cooldown inside a still-open outage) fold into one span; a
+    /// contained interval must not shrink the previous end.
+    #[test]
+    fn degraded_intervals_merge_when_overlapping() {
+        let mut m = Metrics::default();
+        m.record_degraded_interval(5, 12);
+        m.record_degraded_interval(10, 15); // overlaps the open span
+        assert_eq!(m.degraded_intervals, vec![(5, 15)]);
+        m.record_degraded_interval(6, 8); // fully contained: no-op
+        assert_eq!(m.degraded_intervals, vec![(5, 15)]);
+        m.record_degraded_interval(15, 16); // adjacent after merging
+        assert_eq!(m.degraded_intervals, vec![(5, 16)]);
+    }
+
     #[test]
     fn empty_summaries_none() {
         let m = Metrics::default();
         assert!(m.exec_summary().is_none());
         assert!(m.reopt_summary().is_none());
+    }
+
+    /// Every record_* mirrors into the registry; report fields and the
+    /// exported counters can never disagree.
+    #[test]
+    fn telemetry_mirrors_recordings() {
+        let t = Telemetry::enabled();
+        let mut m = Metrics::with_telemetry(t.clone());
+        m.record_batch(64, 5.0);
+        m.record_batch(64, 6.0);
+        m.record_reconfiguration(120, 300.0);
+        m.record_cache_epoch(CacheStats { hits: 30, misses: 10 });
+        m.record_degradation();
+        m.record_degraded_tick();
+        m.record_degraded_tick();
+        m.record_speculative_discard(3);
+        m.record_supervision(1, 4, 2, 1);
+        m.record_degraded_interval(5, 9);
+        assert_eq!(t.counter_get("serve_batches_total"), m.batches_served as u64);
+        assert_eq!(t.counter_get("serve_samples_total"), m.samples_served as u64);
+        assert_eq!(
+            t.counter_get("serve_reconfigurations_total"),
+            m.reconfigurations as u64
+        );
+        assert_eq!(
+            t.counter_get("serve_reopt_evaluations_total"),
+            m.reopt_evaluations as u64
+        );
+        assert_eq!(t.counter_get("serve_cache_epoch_hits_total"), 30);
+        assert_eq!(t.counter_get("serve_degradations_total"), m.degradations as u64);
+        assert_eq!(t.counter_get("serve_degraded_ticks_total"), m.degraded_ticks as u64);
+        assert_eq!(
+            t.counter_get("serve_speculative_discarded_total"),
+            m.speculative_discarded as u64
+        );
+        // supervision deltas fold into the report fields but are NOT
+        // re-mirrored: the server bumps server_*_total live
+        assert_eq!(m.worker_respawns, 1);
+        assert_eq!(t.counter_get("server_respawns_total"), 0);
+        assert_eq!(
+            t.counter_get("serve_degraded_intervals_total"),
+            m.degraded_intervals.len() as u64
+        );
+        let snap = t.snapshot().unwrap();
+        assert_eq!(snap.histograms.get("serve_exec_ms").unwrap().count, 2);
     }
 }

@@ -78,12 +78,15 @@ pub fn optimize_partitions_counted(
     seeds: Vec<Mapping>,
     mut on_gen: impl FnMut(&GenStats),
 ) -> (Vec<Individual>, usize) {
+    // the optimizer shares the evaluator's telemetry handle, so its
+    // generation spans land in the same registry/trace as eval batches
+    let telemetry = ev.telemetry().clone();
     let mut problem = PartitionProblem {
         ev,
         three_obj,
         seeds: seeds.into_iter().map(|m| m.0).collect(),
     };
-    let mut opt = Nsga2::new(cfg.clone());
+    let mut opt = Nsga2::new(cfg.clone()).with_telemetry(telemetry);
     let front = opt.run(&mut problem, &mut on_gen);
     (front, opt.evaluations())
 }

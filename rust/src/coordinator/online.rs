@@ -54,9 +54,11 @@ use super::server::{InferJob, InferenceServer, SupervisorPolicy, Ticket};
 use crate::dataset::EvalSet;
 use crate::faults::{ChaosEngine, DeviceFaultProfile, FaultEnv};
 use crate::nsga2::{Individual, Nsga2Config};
+use crate::obs::Telemetry;
 use crate::partition::{
     select_min_dacc_within_budget, CacheStats, Mapping, PartitionEvaluator,
 };
+use crate::util::json::{num, Value};
 use crate::util::prng::Rng;
 use crate::util::stats::RollingMean;
 
@@ -196,6 +198,10 @@ pub struct OnlineRunner<'a, 'b> {
     /// Degradation fallback; `None` turns terminal inference failures
     /// into run errors (the pre-resilience behaviour).
     pub safe_mapping: Option<Mapping>,
+    /// Observability handle ([`Telemetry::disabled`] for none). Ticks,
+    /// reconfigurations, and degradation transitions emit spans/events
+    /// from this (coordinating) thread only, in tick order.
+    pub telemetry: Telemetry,
 }
 
 impl OnlineRunner<'_, '_> {
@@ -216,9 +222,10 @@ impl OnlineRunner<'_, '_> {
         let tick_seconds = self.cfg.tick_seconds;
         let stats0 = self.server.stats();
 
+        let telemetry = self.telemetry.clone();
         let mut mapping = initial;
         let mut monitor = RollingMean::new(self.cfg.window);
-        let mut metrics = Metrics::default();
+        let mut metrics = Metrics::with_telemetry(telemetry.clone());
         let mut timeline = Vec::with_capacity(self.cfg.ticks);
         let mut rng = Rng::new(self.cfg.seed);
         let mut cooldown = 0usize;
@@ -270,11 +277,22 @@ impl OnlineRunner<'_, '_> {
         };
 
         for tick in 0..self.cfg.ticks {
+            let mut tick_span = telemetry.span("online.tick");
+            tick_span.note("tick", num(tick as f64));
             // re-admit the pre-degradation mapping once the health probe
             // cooldown has passed without another terminal failure
             if let Some(start) = degraded_since {
                 if tick >= degraded_until {
                     metrics.record_degraded_interval(start, degraded_until);
+                    telemetry.trace_event(
+                        "degrade_exit",
+                        Some("online.degrade"),
+                        &[
+                            ("tick", num(tick as f64)),
+                            ("start", num(start as f64)),
+                            ("end", num(degraded_until as f64)),
+                        ],
+                    );
                     if let Some(prev) = pre_degrade.take() {
                         mapping = prev;
                     }
@@ -285,7 +303,7 @@ impl OnlineRunner<'_, '_> {
                     // one. Drain by *waiting* (not canceling): canceling
                     // would leave the stale wire jobs racing the worker,
                     // making the supervision counters timing-dependent.
-                    metrics.speculative_discarded += pending.len();
+                    metrics.record_speculative_discard(pending.len());
                     for (_, t) in pending.drain(..) {
                         let _ = self.server.wait(t);
                     }
@@ -337,7 +355,7 @@ impl OnlineRunner<'_, '_> {
                     let rolling = monitor.mean().unwrap_or(acc);
                     let degraded_now = degraded_since.is_some();
                     if degraded_now {
-                        metrics.degraded_ticks += 1;
+                        metrics.record_degraded_tick();
                     }
 
                     // θ trigger (Algorithm 1 line 16); suppressed while
@@ -351,6 +369,8 @@ impl OnlineRunner<'_, '_> {
                         && self.clean_acc - rolling > self.cfg.theta
                     {
                         let t0 = Instant::now();
+                        let mut reopt_span = telemetry.span("online.reconfig");
+                        reopt_span.note("tick", num(tick as f64));
                         // RunNSGAIIWithCurrentStats: current environment
                         // rates, seeded with the incumbent mapping. The
                         // rollover keeps cumulative cache telemetry even
@@ -374,6 +394,9 @@ impl OnlineRunner<'_, '_> {
                             reconfigured = new_mapping != mapping;
                             mapping = new_mapping;
                         }
+                        reopt_span.note("evaluations", num(reopt_evals as f64));
+                        reopt_span.note("changed", Value::Bool(reconfigured));
+                        drop(reopt_span);
                         metrics.record_reconfiguration(
                             reopt_evals,
                             t0.elapsed().as_secs_f64() * 1e3,
@@ -389,7 +412,7 @@ impl OnlineRunner<'_, '_> {
                             // tick+1 with the new mapping and the *same*
                             // cached per-tick keys (drained by waiting,
                             // see the re-admission path)
-                            metrics.speculative_discarded += pending.len();
+                            metrics.record_speculative_discard(pending.len());
                             for (_, t) in pending.drain(..) {
                                 let _ = self.server.wait(t);
                             }
@@ -418,12 +441,17 @@ impl OnlineRunner<'_, '_> {
                         )));
                     }
                     let safe = self.safe_mapping.clone().expect("checked above");
-                    metrics.degradations += 1;
-                    metrics.degraded_ticks += 1;
+                    metrics.record_degradation();
+                    metrics.record_degraded_tick();
                     if degraded_since.is_none() {
                         degraded_since = Some(tick);
                         pre_degrade = Some(mapping.clone());
                         monitor = RollingMean::new(self.cfg.window);
+                        telemetry.trace_event(
+                            "degrade_enter",
+                            Some("online.degrade"),
+                            &[("tick", num(tick as f64))],
+                        );
                     }
                     // every terminal failure (also while already
                     // degraded) restarts the health-probe cooldown
@@ -432,7 +460,7 @@ impl OnlineRunner<'_, '_> {
                     // the failed tick's batch is lost; in-flight
                     // speculation was computed under the failed mapping
                     // (drained by waiting, see the re-admission path)
-                    metrics.speculative_discarded += pending.len();
+                    metrics.record_speculative_discard(pending.len());
                     for (_, t) in pending.drain(..) {
                         let _ = self.server.wait(t);
                     }
@@ -450,6 +478,8 @@ impl OnlineRunner<'_, '_> {
                     }
                 }
             };
+            tick_span.note("reconfigured", Value::Bool(point.reconfigured));
+            tick_span.note("degraded", Value::Bool(point.degraded));
             on_tick(&point);
             timeline.push(point);
         }
@@ -461,10 +491,7 @@ impl OnlineRunner<'_, '_> {
 
         // fold the supervision counters accumulated during this run
         let sd = self.server.stats().delta_since(&stats0);
-        metrics.worker_respawns += sd.respawns;
-        metrics.retries += sd.retries;
-        metrics.transient_errors += sd.transient_errors;
-        metrics.timeouts += sd.timeouts;
+        metrics.record_supervision(sd.respawns, sd.retries, sd.transient_errors, sd.timeouts);
 
         Ok(OnlineOutcome {
             timeline,

@@ -63,7 +63,9 @@ use anyhow::{Context, Result};
 
 use crate::faults::{ChaosPlan, RateVectors};
 use crate::model::Manifest;
+use crate::obs::Telemetry;
 use crate::runtime::Runtime;
+use crate::util::json::{num, s as jstr};
 use crate::util::prng::Rng;
 
 /// One inference job: a full batch of images (server batch size).
@@ -236,6 +238,11 @@ struct Inner {
     next_ticket: u64,
     stats: ServerStats,
     shut_down: bool,
+    /// Mirrors every `stats` mutation into the run's registry and emits
+    /// supervision trace events. Lives under the supervisor mutex, so
+    /// events interleave with the coordinator's tick events in a
+    /// deterministic order (failures are chaos-injected, never timed).
+    telemetry: Telemetry,
 }
 
 /// Handle to the supervised serving thread.
@@ -282,6 +289,7 @@ impl InferenceServer {
                 next_ticket: 0,
                 stats: ServerStats::default(),
                 shut_down: false,
+                telemetry: Telemetry::disabled(),
             }),
             batch,
             num_units,
@@ -291,6 +299,13 @@ impl InferenceServer {
 
     fn lock(&self) -> MutexGuard<'_, Inner> {
         self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Attach the run's telemetry handle. Supervision counters
+    /// (`server_*_total`) and retry/respawn trace events are then
+    /// emitted at the same points as [`ServerStats`] mutations.
+    pub fn set_telemetry(&self, telemetry: Telemetry) {
+        self.lock().telemetry = telemetry;
     }
 
     /// Submit a job (non-blocking); claim the reply with [`wait`].
@@ -362,6 +377,7 @@ impl InferenceServer {
                 }
                 Ok(Err(InferError::Transient { detail })) => {
                     inner.stats.transient_errors += 1;
+                    inner.telemetry.counter_add("server_transient_errors_total", 1);
                     let max_retries = self.policy.max_retries;
                     let rec = inner.pending.get_mut(&ticket.0).expect("pending rec");
                     rec.attempts += 1;
@@ -373,6 +389,16 @@ impl InferenceServer {
                         return Err(InferError::Exhausted { attempts, last: detail });
                     }
                     inner.stats.retries += 1;
+                    inner.telemetry.counter_add("server_retries_total", 1);
+                    inner.telemetry.trace_event(
+                        "server_retry",
+                        Some("server.supervise"),
+                        &[
+                            ("ticket", num(ticket.0 as f64)),
+                            ("attempts", num(attempts as f64)),
+                            ("reason", jstr("transient")),
+                        ],
+                    );
                     let backoff = self
                         .policy
                         .backoff_ms
@@ -397,6 +423,7 @@ impl InferenceServer {
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     inner.stats.timeouts += 1;
+                    inner.telemetry.counter_add("server_timeouts_total", 1);
                     let max_retries = self.policy.max_retries;
                     let waited_ms = self.policy.recv_timeout_ms;
                     let rec = inner.pending.get_mut(&ticket.0).expect("pending rec");
@@ -409,6 +436,16 @@ impl InferenceServer {
                         return Err(InferError::TimedOut { waited_ms, attempts });
                     }
                     inner.stats.retries += 1;
+                    inner.telemetry.counter_add("server_retries_total", 1);
+                    inner.telemetry.trace_event(
+                        "server_retry",
+                        Some("server.supervise"),
+                        &[
+                            ("ticket", num(ticket.0 as f64)),
+                            ("attempts", num(attempts as f64)),
+                            ("reason", jstr("timeout")),
+                        ],
+                    );
                     // a silent worker is indistinguishable from a hang:
                     // replace it and resubmit everything pending
                     self.respawn_and_resubmit(&mut inner, "recv timeout", false)?;
@@ -480,6 +517,7 @@ impl InferenceServer {
     ) -> std::result::Result<(), InferError> {
         if crashed {
             inner.stats.crashes += 1;
+            inner.telemetry.counter_add("server_crashes_total", 1);
             // the worker serves FIFO, so the job that killed it is the
             // earliest pending one still flagged `crash`; consume exactly
             // that flag. Later crash-flagged jobs keep theirs and will
@@ -490,6 +528,16 @@ impl InferenceServer {
             }
         }
         inner.stats.respawns += 1;
+        inner.telemetry.counter_add("server_respawns_total", 1);
+        inner.telemetry.trace_event(
+            "server_respawn",
+            Some("server.supervise"),
+            &[
+                ("reason", jstr(reason)),
+                ("crashed", crate::util::json::Value::Bool(crashed)),
+                ("pending", num(inner.pending.len() as f64)),
+            ],
+        );
         if inner.stats.respawns > self.policy.max_respawns {
             return Err(InferError::Crashed {
                 detail: format!(

@@ -115,14 +115,29 @@ impl Experiment {
     }
 
     /// Measure (and cache) the layer sensitivity table for surrogate mode.
+    /// The (layer, rate) sweep parallelizes across the configured
+    /// `eval_threads`; results are bitwise identical to the serial sweep.
     pub fn measure_sensitivity(&mut self, rate_grid: &[f32]) -> Result<&SensitivityTable> {
+        self.measure_sensitivity_with(rate_grid, &crate::obs::Telemetry::disabled())
+    }
+
+    /// [`Experiment::measure_sensitivity`] with a telemetry handle: the
+    /// sweep emits a `sensitivity.measure` span plus one `sensitivity.cell`
+    /// event per (unit, rate, fault-kind) cell, in deterministic order.
+    pub fn measure_sensitivity_with(
+        &mut self,
+        rate_grid: &[f32],
+        telemetry: &crate::obs::Telemetry,
+    ) -> Result<&SensitivityTable> {
         if self.sensitivity.is_none() {
-            let table = SensitivityTable::measure(
+            let table = SensitivityTable::measure_with(
                 &self.model,
                 &self.acc_eval,
                 rate_grid,
                 self.cfg.dacc_batches,
                 0xA11CE,
+                self.eval_threads(),
+                telemetry,
             )?;
             self.sensitivity = Some(table);
         }

@@ -32,6 +32,7 @@ pub mod faults;
 pub mod hw;
 pub mod model;
 pub mod nsga2;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod spec;

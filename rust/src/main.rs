@@ -35,6 +35,7 @@ use afarepart::coordinator::{
 use afarepart::experiment::Experiment;
 use afarepart::faults::RateVectors;
 use afarepart::model::Manifest;
+use afarepart::obs::Telemetry;
 use afarepart::partition::{DaccMode, EngineConfig, Mapping, PartitionEvaluator};
 use afarepart::spec::campaign::run_campaign;
 use afarepart::spec::outcome::{
@@ -45,7 +46,7 @@ use afarepart::spec::{CampaignSpec, ExperimentSpec};
 use afarepart::util::fmt::{pct, Table};
 use afarepart::util::json::Value;
 
-const BOOL_FLAGS: &[&str] = &["surrogate", "link-cost", "chaos", "verbose", "help"];
+const BOOL_FLAGS: &[&str] = &["surrogate", "link-cost", "chaos", "telemetry", "verbose", "help"];
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -88,7 +89,11 @@ fn print_help() {
            --spec <file.json>       load an ExperimentSpec first (--config is an alias;\n\
                                     for campaign: a CampaignSpec {{base, grid}})\n\
            --format <text|json>     output format (default text)\n\
-           --out <file>             write the JSON report to a file\n\n\
+           --out <file>             write the JSON report to a file\n\
+           --telemetry              enable the metric registry; the report gains a\n\
+                                    `telemetry` Prometheus snapshot (off by default)\n\
+           --trace <file>           also append a deterministic JSONL event trace\n\
+                                    (implies --telemetry; see docs/observability.md)\n\n\
          EXPERIMENT:\n\
            --model <alexnet|squeezenet|resnet18>   model artifact (default alexnet)\n\
            --artifacts <dir>        artifacts directory (default ./artifacts)\n\
@@ -132,15 +137,17 @@ fn emit(format: OutputFormat, args: &Args, report: &Value) -> Result<()> {
 /// the batched evaluation engine, deployed per the spec's selection
 /// policy.
 fn run_offline(spec: &ExperimentSpec, exp: &Experiment) -> Result<(OfflineOutcome, usize)> {
-    run_offline_verbose(spec, exp, false)
+    run_offline_verbose(spec, exp, false, &Telemetry::disabled())
 }
 
 fn run_offline_verbose(
     spec: &ExperimentSpec,
     exp: &Experiment,
     verbose: bool,
+    telemetry: &Telemetry,
 ) -> Result<(OfflineOutcome, usize)> {
     let mut ev = exp.partition_evaluator(spec.fault_env.scenario);
+    ev.set_telemetry(telemetry.clone());
     let nsga2 = spec.optimizer.to_nsga2(spec.seed);
     let out = spec.selection.optimize_and_deploy(&mut ev, &nsga2, |gs| {
         if verbose {
@@ -160,17 +167,18 @@ fn run_offline_verbose(
 /// Load the spec's experiment; in surrogate mode, measure the layer
 /// sensitivity table the evaluator composes (otherwise `--surrogate`
 /// would silently fall back to exact injection).
-fn load_experiment(spec: &ExperimentSpec) -> Result<Experiment> {
+fn load_experiment(spec: &ExperimentSpec, telemetry: &Telemetry) -> Result<Experiment> {
     let mut exp = Experiment::from_spec(spec)?;
     if spec.surrogate {
-        exp.measure_sensitivity(&[0.05, 0.1, 0.2, 0.4])?;
+        exp.measure_sensitivity_with(&[0.05, 0.1, 0.2, 0.4], telemetry)?;
     }
     Ok(exp)
 }
 
 fn cmd_offline(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Result<()> {
     let verbose = args.has_flag("verbose") && !format.is_json();
-    let exp = load_experiment(spec)?;
+    let telemetry = spec.telemetry.build()?;
+    let exp = load_experiment(spec, &telemetry)?;
     if !format.is_json() {
         println!(
             "offline: model={} FR={} scenario={} pop={} gens={} mode={} eval-threads={} policy={}",
@@ -184,8 +192,8 @@ fn cmd_offline(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Resu
             spec.selection.policy.as_str(),
         );
     }
-    let (out, threads) = run_offline_verbose(spec, &exp, verbose)?;
-    let report = OfflineReport::from_outcome(
+    let (out, threads) = run_offline_verbose(spec, &exp, verbose, &telemetry)?;
+    let mut report = OfflineReport::from_outcome(
         &spec.model,
         spec.fault_env.scenario.label(),
         spec.fault_env.fault_rate,
@@ -195,6 +203,8 @@ fn cmd_offline(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Resu
         threads,
         &out,
     );
+    report.telemetry = telemetry.prometheus();
+    telemetry.flush()?;
     if !format.is_json() {
         let mut t = Table::new(&["mapping", "latency ms", "energy mJ", "dAcc"]);
         for ind in &out.front {
@@ -274,7 +284,7 @@ fn cmd_sweep(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Result
 }
 
 fn cmd_compare(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Result<()> {
-    let exp = load_experiment(spec)?;
+    let exp = load_experiment(spec, &Telemetry::disabled())?;
     if !format.is_json() {
         println!(
             "compare: model={} FR={} scenario={} (pop {}, gens {})",
@@ -405,7 +415,8 @@ fn cmd_online(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Resul
         // Artifact-free serving world: no PJRT, pure synthetic backend.
         return cmd_online_synthetic(spec, args, format, n);
     }
-    let exp = load_experiment(spec)?;
+    let telemetry = spec.telemetry.build()?;
+    let exp = load_experiment(spec, &telemetry)?;
     let online_cfg = spec.online.to_online_config(exp.eval_threads());
     // The complete environment, drift stack included, comes from the
     // spec (build() validates component device indices).
@@ -431,7 +442,7 @@ fn cmd_online(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Resul
 
     // offline phase first for the initial P* (and the front the safe
     // degradation mapping is drawn from)
-    let (out, _) = run_offline(spec, &exp)?;
+    let (out, _) = run_offline_verbose(spec, &exp, false, &telemetry)?;
     let safe = safe_fallback_mapping(&out.front, &exp.profiles, exp.model.num_units());
     let initial = out.deployed;
     if !format.is_json() {
@@ -444,10 +455,12 @@ fn cmd_online(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Resul
         exp.img_dims(),
         online_cfg.supervisor_policy(),
     )?;
+    server.set_telemetry(telemetry.clone());
     // exact-mode re-optimization by default (see examples/online_reconfig.rs
     // for why the surrogate is usually not enough); --surrogate switches the
     // evaluator to the measured sensitivity table (load_experiment measured it).
     let mut reopt_ev = exp.partition_evaluator(spec.fault_env.scenario);
+    reopt_ev.set_telemetry(telemetry.clone());
 
     let theta = online_cfg.theta;
     let lookahead = online_cfg.lookahead;
@@ -458,6 +471,7 @@ fn cmd_online(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Resul
         clean_acc: exp.clean_acc,
         chaos: spec.chaos.to_engine(),
         safe_mapping: Some(safe),
+        telemetry: telemetry.clone(),
     };
     let quiet = format.is_json();
     let out = runner.run(&exp.eval_set, &env, initial.clone(), |p| {
@@ -466,7 +480,9 @@ fn cmd_online(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Resul
         }
     })?;
     server.shutdown()?;
-    let report = OnlineReport::from_outcome(&spec.model, theta, lookahead, &initial, &out);
+    let mut report = OnlineReport::from_outcome(&spec.model, theta, lookahead, &initial, &out);
+    report.telemetry = telemetry.prometheus();
+    telemetry.flush()?;
     if !format.is_json() {
         print_online_summary(&out);
     }
@@ -515,6 +531,7 @@ fn cmd_online_synthetic(
 
     // offline phase at the t = 0 environment for the initial P* and the
     // safe fallback — the same evaluator construction as campaign cells.
+    let telemetry = spec.telemetry.build()?;
     let nsga2 = spec.optimizer.to_nsga2(spec.seed);
     let mut ev = PartitionEvaluator::new(
         &manifest,
@@ -526,7 +543,8 @@ fn cmd_online_synthetic(
         spec.link_cost,
         DaccMode::SyntheticExact { table: &table, cost: Duration::ZERO },
     )
-    .with_parallelism(threads);
+    .with_parallelism(threads)
+    .with_telemetry(telemetry.clone());
     let off = spec.selection.optimize_and_deploy(&mut ev, &nsga2, |_| {})?;
     let safe = safe_fallback_mapping(&off.front, &profiles, manifest.num_units);
     let initial = off.deployed;
@@ -539,6 +557,7 @@ fn cmd_online_synthetic(
         DIMS,
         online_cfg.supervisor_policy(),
     )?;
+    server.set_telemetry(telemetry.clone());
     let eval_set = synthetic_eval_set(
         manifest.batch * 8,
         DIMS.0,
@@ -557,7 +576,8 @@ fn cmd_online_synthetic(
         spec.link_cost,
         DaccMode::SyntheticExact { table: &table, cost: Duration::ZERO },
     )
-    .with_parallelism(threads);
+    .with_parallelism(threads)
+    .with_telemetry(telemetry.clone());
 
     let theta = online_cfg.theta;
     let lookahead = online_cfg.lookahead;
@@ -568,6 +588,7 @@ fn cmd_online_synthetic(
         clean_acc: table.clean_acc,
         chaos: spec.chaos.to_engine(),
         safe_mapping: Some(safe),
+        telemetry: telemetry.clone(),
     };
     let quiet = format.is_json();
     let out = runner.run(&eval_set, &env, initial.clone(), |p| {
@@ -576,7 +597,9 @@ fn cmd_online_synthetic(
         }
     })?;
     server.shutdown()?;
-    let report = OnlineReport::from_outcome(&spec.model, theta, lookahead, &initial, &out);
+    let mut report = OnlineReport::from_outcome(&spec.model, theta, lookahead, &initial, &out);
+    report.telemetry = telemetry.prometheus();
+    telemetry.flush()?;
     if !format.is_json() {
         print_online_summary(&out);
     }

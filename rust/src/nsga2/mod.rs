@@ -32,6 +32,8 @@ pub use crowding::crowding_distance;
 pub use hypervolume::{front_hypervolume, hypervolume};
 pub use sort::{dominates, fast_non_dominated_sort};
 
+use crate::obs::Telemetry;
+use crate::util::json::num;
 use crate::util::prng::Rng;
 
 /// One candidate solution with its evaluated objective vector (minimized).
@@ -102,12 +104,20 @@ pub struct Nsga2 {
     cfg: Nsga2Config,
     rng: Rng,
     evaluations: usize,
+    telemetry: Telemetry,
 }
 
 impl Nsga2 {
     pub fn new(cfg: Nsga2Config) -> Self {
         let rng = Rng::new(cfg.seed);
-        Nsga2 { cfg, rng, evaluations: 0 }
+        Nsga2 { cfg, rng, evaluations: 0, telemetry: Telemetry::disabled() }
+    }
+
+    /// Attach the run's telemetry handle (builder form). Each generation
+    /// then emits an `opt.generation` span from the optimizer thread.
+    pub fn with_telemetry(mut self, telemetry: Telemetry) -> Self {
+        self.telemetry = telemetry;
+        self
     }
 
     pub fn evaluations(&self) -> usize {
@@ -221,6 +231,12 @@ impl Nsga2 {
         let len = problem.genome_len();
         let alphabet = problem.alphabet();
         assert!(alphabet >= 1 && len >= 1);
+        // clone the (refcounted) handle: spans borrow the telemetry,
+        // and `self` is mutably borrowed throughout the loop
+        let telemetry = self.telemetry.clone();
+        let mut run_span = telemetry.span("opt.run");
+        run_span.note("pop_size", num(self.cfg.pop_size as f64));
+        run_span.note("generations", num(self.cfg.generations as f64));
 
         // initial population: seeds first, then random fill
         let mut genomes: Vec<Vec<usize>> = problem
@@ -236,6 +252,8 @@ impl Nsga2 {
         Self::rank_population(&mut pop);
 
         for generation in 0..self.cfg.generations {
+            let mut gen_span = telemetry.span("opt.generation");
+            gen_span.note("generation", num(generation as f64));
             // variation first: collect the full offspring generation so it
             // can be evaluated as one batch. Parents are borrowed from the
             // population (cloned exactly once, inside crossover); the PRNG
@@ -287,13 +305,18 @@ impl Nsga2 {
                     pop.iter().map(|i| i.objectives[k]).fold(f64::INFINITY, f64::min)
                 })
                 .collect();
+            let front_size = pop.iter().filter(|i| i.rank == 0).count();
+            gen_span.note("front_size", num(front_size as f64));
+            gen_span.note("evaluations", num(self.evaluations as f64));
+            telemetry.counter_add("opt_generations_total", 1);
             on_generation(&GenStats {
                 generation,
-                front_size: pop.iter().filter(|i| i.rank == 0).count(),
+                front_size,
                 best_per_objective: best,
                 evaluations: self.evaluations,
             });
         }
+        run_span.note("evaluations", num(self.evaluations as f64));
 
         let mut front: Vec<Individual> =
             pop.into_iter().filter(|i| i.rank == 0).collect();

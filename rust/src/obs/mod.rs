@@ -1,0 +1,231 @@
+//! Deterministic observability subsystem: metric registry, hierarchical
+//! span timing, JSONL event trace, and Prometheus snapshot export.
+//!
+//! Everything routes through one cheap, cloneable [`Telemetry`] handle:
+//!
+//! ```text
+//!   Telemetry ──┬── MetricRegistry   lock-striped counters / gauges /
+//!               │                    fixed-bucket histograms (p50/95/99)
+//!               ├── Span             scope-guard wall timing -> histograms
+//!               │                    + one logical trace event per span
+//!               └── TraceWriter      append-only JSONL (--trace <file>),
+//!                                    schema-versioned, bitwise-deterministic
+//! ```
+//!
+//! **Off by default.** [`Telemetry::disabled`] carries no allocation and
+//! every recording method early-outs on one `Option` branch, so
+//! instrumentation sites cost nothing measurable on the hot path (gated
+//! <2% by `BENCH_telemetry_overhead.json`, see `benches/bench_perf.rs`).
+//!
+//! **Determinism contract.** Trace events are emitted only from
+//! coordinating threads in logical order (tick, generation, batch
+//! ordinal), never from fan-out workers, and never carry wall-clock
+//! values; wall times go to registry histograms, which deterministic
+//! consumers strip (`scripts/trace_smoke.sh`). Given the same spec and
+//! seed, a `--trace` file is bitwise identical at any `eval_threads`.
+
+pub mod prometheus;
+pub mod registry;
+pub mod span;
+pub mod trace;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+pub use registry::{Histogram, MetricRegistry, MetricSnapshot, MS_BUCKETS};
+pub use span::Span;
+pub use trace::{TraceWriter, TRACE_SCHEMA_VERSION};
+
+use crate::util::json::Value;
+
+struct TelemetryInner {
+    registry: MetricRegistry,
+    trace: Option<Mutex<TraceWriter>>,
+    /// Latched on the first trace write error so one bad disk doesn't
+    /// spam stderr per event.
+    trace_failed: AtomicBool,
+}
+
+/// Shared handle to the run's telemetry (see module doc). Cloning is a
+/// refcount bump; a disabled handle is a `None` and costs one branch
+/// per recording call.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    inner: Option<Arc<TelemetryInner>>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("enabled", &self.is_enabled())
+            .field("trace", &self.has_trace())
+            .finish()
+    }
+}
+
+impl Telemetry {
+    /// The no-op handle every component starts with.
+    pub fn disabled() -> Telemetry {
+        Telemetry { inner: None }
+    }
+
+    /// Registry-only telemetry (no trace file).
+    pub fn enabled() -> Telemetry {
+        Telemetry {
+            inner: Some(Arc::new(TelemetryInner {
+                registry: MetricRegistry::new(),
+                trace: None,
+                trace_failed: AtomicBool::new(false),
+            })),
+        }
+    }
+
+    /// Registry + JSONL trace appended to `path` (truncated on open).
+    pub fn with_trace(path: &Path) -> Result<Telemetry> {
+        let writer = TraceWriter::create(path)?;
+        Ok(Telemetry {
+            inner: Some(Arc::new(TelemetryInner {
+                registry: MetricRegistry::new(),
+                trace: Some(Mutex::new(writer)),
+                trace_failed: AtomicBool::new(false),
+            })),
+        })
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Whether a trace file is attached.
+    pub fn has_trace(&self) -> bool {
+        self.inner.as_ref().map(|i| i.trace.is_some()).unwrap_or(false)
+    }
+
+    /// Add to a monotonic counter; no-op when disabled.
+    pub fn counter_add(&self, name: &str, delta: u64) {
+        if let Some(inner) = &self.inner {
+            inner.registry.counter_add(name, delta);
+        }
+    }
+
+    /// Current counter value (0 when disabled or never touched).
+    pub fn counter_get(&self, name: &str) -> u64 {
+        match &self.inner {
+            Some(inner) => inner.registry.counter_get(name),
+            None => 0,
+        }
+    }
+
+    /// Set a gauge; no-op when disabled.
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        if let Some(inner) = &self.inner {
+            inner.registry.gauge_set(name, v);
+        }
+    }
+
+    /// Record a wall-time histogram observation; no-op when disabled.
+    pub fn observe_ms(&self, name: &str, ms: f64) {
+        if let Some(inner) = &self.inner {
+            inner.registry.observe_ms(name, ms);
+        }
+    }
+
+    /// Open a scope-guard span (inert when disabled).
+    pub fn span(&self, path: &str) -> Span<'_> {
+        Span::new(self, path)
+    }
+
+    /// Emit one trace event with deterministic logical fields. No-op
+    /// without an attached trace file. Callers must only invoke this
+    /// from coordinating threads, in logical order (module doc).
+    pub fn trace_event(&self, kind: &str, span: Option<&str>, fields: &[(&str, Value)]) {
+        let Some(inner) = &self.inner else { return };
+        let Some(trace) = &inner.trace else { return };
+        let mut w = trace.lock().unwrap();
+        if let Err(e) = w.emit(kind, span, fields) {
+            if !inner.trace_failed.swap(true, Ordering::Relaxed) {
+                eprintln!("warning: trace disabled after write error: {e:#}");
+            }
+        }
+    }
+
+    /// Point-in-time metric snapshot (`None` when disabled).
+    pub fn snapshot(&self) -> Option<MetricSnapshot> {
+        self.inner.as_ref().map(|i| i.registry.snapshot())
+    }
+
+    /// Prometheus text-format snapshot (`None` when disabled).
+    pub fn prometheus(&self) -> Option<String> {
+        self.snapshot().map(|s| prometheus::render(&s))
+    }
+
+    /// Flush the trace file, if any.
+    pub fn flush(&self) -> Result<()> {
+        if let Some(inner) = &self.inner {
+            if let Some(trace) = &inner.trace {
+                trace.lock().unwrap().flush()?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+
+    #[test]
+    fn disabled_handle_is_fully_inert() {
+        let t = Telemetry::disabled();
+        assert!(!t.is_enabled());
+        assert!(!t.has_trace());
+        t.counter_add("x_total", 5);
+        t.gauge_set("g", 1.0);
+        t.observe_ms("h_ms", 0.1);
+        t.trace_event("tick", None, &[("tick", num(0.0))]);
+        assert_eq!(t.counter_get("x_total"), 0);
+        assert!(t.snapshot().is_none());
+        assert!(t.prometheus().is_none());
+        t.flush().unwrap();
+    }
+
+    #[test]
+    fn enabled_handle_records_and_renders() {
+        let t = Telemetry::enabled();
+        t.counter_add("evals_total", 3);
+        t.counter_add("evals_total", 4);
+        t.gauge_set("front_size", 9.0);
+        assert_eq!(t.counter_get("evals_total"), 7);
+        let text = t.prometheus().unwrap();
+        assert!(text.contains("afare_evals_total 7"));
+        assert!(text.contains("afare_front_size 9"));
+    }
+
+    #[test]
+    fn clones_share_one_registry() {
+        let t = Telemetry::enabled();
+        let u = t.clone();
+        u.counter_add("shared_total", 2);
+        assert_eq!(t.counter_get("shared_total"), 2);
+    }
+
+    #[test]
+    fn trace_handle_writes_events() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("afare_obs_mod_test_{}.jsonl", std::process::id()));
+        {
+            let t = Telemetry::with_trace(&path).unwrap();
+            assert!(t.has_trace());
+            t.trace_event("tick", Some("online.tick"), &[("tick", num(1.0))]);
+            t.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().nth(1).unwrap().contains("\"kind\":\"tick\""));
+        std::fs::remove_file(&path).ok();
+    }
+}

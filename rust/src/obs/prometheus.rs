@@ -1,0 +1,109 @@
+//! Prometheus text-exposition rendering of a [`MetricSnapshot`].
+//!
+//! The snapshot string is folded into `RunOutcome` JSON under the
+//! `telemetry` key (only when telemetry is enabled, so disabled-run
+//! goldens stay bitwise identical). Names are prefixed `afare_` and
+//! sanitized to `[a-zA-Z0-9_]`; histograms render cumulative buckets
+//! plus `_sum`/`_count` and bucket-estimated `p50`/`p95`/`p99` gauges.
+//!
+//! Histogram values are wall-clock-derived and therefore
+//! nondeterministic across runs; deterministic consumers (the trace
+//! smoke gate) strip histogram families and compare only counters and
+//! gauges — see `docs/observability.md`.
+
+use std::fmt::Write as _;
+
+use crate::obs::registry::{MetricSnapshot, MS_BUCKETS};
+
+/// Prometheus-legal metric name: `afare_` prefix, everything outside
+/// `[a-zA-Z0-9_]` mapped to `_`.
+pub fn metric_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 6);
+    out.push_str("afare_");
+    for c in name.chars() {
+        out.push(if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' });
+    }
+    out
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render a snapshot in the text exposition format, families sorted by
+/// name (counters, then gauges, then histograms).
+pub fn render(snap: &MetricSnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let n = metric_name(name);
+        let _ = writeln!(out, "# TYPE {n} counter");
+        let _ = writeln!(out, "{n} {v}");
+    }
+    for (name, v) in &snap.gauges {
+        let n = metric_name(name);
+        let _ = writeln!(out, "# TYPE {n} gauge");
+        let _ = writeln!(out, "{n} {}", fmt_f64(*v));
+    }
+    for (name, h) in &snap.histograms {
+        let n = metric_name(name);
+        let _ = writeln!(out, "# TYPE {n} histogram");
+        let mut cum = 0u64;
+        for (i, count) in h.buckets.iter().enumerate() {
+            cum += count;
+            let le = if i < MS_BUCKETS.len() { fmt_f64(MS_BUCKETS[i]) } else { "+Inf".into() };
+            let _ = writeln!(out, "{n}_bucket{{le=\"{le}\"}} {cum}");
+        }
+        let _ = writeln!(out, "{n}_sum {}", fmt_f64(h.sum));
+        let _ = writeln!(out, "{n}_count {}", h.count);
+        for (q, v) in [("p50", h.p50()), ("p95", h.p95()), ("p99", h.p99())] {
+            let _ = writeln!(out, "# TYPE {n}_{q} gauge");
+            let _ = writeln!(out, "{n}_{q} {}", fmt_f64(v));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::MetricRegistry;
+
+    #[test]
+    fn sanitizes_names() {
+        assert_eq!(metric_name("online.tick-ms"), "afare_online_tick_ms");
+        assert_eq!(metric_name("evals_total"), "afare_evals_total");
+    }
+
+    #[test]
+    fn renders_all_families() {
+        let r = MetricRegistry::new();
+        r.counter_add("evals_total", 7);
+        r.gauge_set("front_size", 12.0);
+        r.observe_ms("tick_ms", 0.3);
+        r.observe_ms("tick_ms", 40.0);
+        let text = render(&r.snapshot());
+        assert!(text.contains("# TYPE afare_evals_total counter\nafare_evals_total 7\n"));
+        assert!(text.contains("# TYPE afare_front_size gauge\nafare_front_size 12\n"));
+        assert!(text.contains("afare_tick_ms_bucket{le=\"0.5\"} 1"));
+        assert!(text.contains("afare_tick_ms_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("afare_tick_ms_count 2"));
+        assert!(text.contains("afare_tick_ms_p50 0.5"));
+    }
+
+    #[test]
+    fn buckets_are_cumulative() {
+        let r = MetricRegistry::new();
+        for v in [0.02, 0.02, 0.3, 7.0] {
+            r.observe_ms("x_ms", v);
+        }
+        let text = render(&r.snapshot());
+        assert!(text.contains("afare_x_ms_bucket{le=\"0.05\"} 2"));
+        assert!(text.contains("afare_x_ms_bucket{le=\"0.5\"} 3"));
+        assert!(text.contains("afare_x_ms_bucket{le=\"10\"} 4"));
+        assert!(text.contains("afare_x_ms_bucket{le=\"+Inf\"} 4"));
+    }
+}

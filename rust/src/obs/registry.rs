@@ -1,0 +1,252 @@
+//! Lock-striped metric registry: monotonic counters, gauges, and
+//! fixed-bucket wall-time histograms with bucket-estimated p50/p95/p99.
+//!
+//! The registry is the aggregation side of the observability subsystem
+//! (DESIGN: `docs/observability.md`). Metrics are keyed by flat
+//! snake_case names and sharded across [`NUM_STRIPES`] mutexes by name
+//! hash, so worker threads recording into *different* metrics never
+//! contend, and threads recording into the *same* metric contend only
+//! with each other — never with the evaluation hot path, which records
+//! nothing unless telemetry is enabled (see [`crate::obs::Telemetry`]).
+//!
+//! Everything here is order-insensitive: counters and histograms are
+//! commutative aggregates, so concurrent recording from worker threads
+//! cannot make a snapshot nondeterministic in *which values* it holds —
+//! only wall-clock-derived values themselves are nondeterministic, and
+//! those are quantized out of any golden output by the exporters.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
+
+/// Number of mutex stripes (same sharding degree as `DaccCache`).
+const NUM_STRIPES: usize = 16;
+
+/// Fixed histogram bucket upper bounds, in milliseconds. The final
+/// implicit bucket is +inf. Chosen to straddle everything from a cache
+/// probe (~µs) to a full reoptimization (~seconds).
+pub const MS_BUCKETS: [f64; 12] =
+    [0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 50.0, 100.0, 500.0, 1000.0, 5000.0];
+
+/// One fixed-bucket histogram. `buckets[i]` counts observations with
+/// `v <= MS_BUCKETS[i]`; the last slot counts the +inf overflow.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: vec![0; MS_BUCKETS.len() + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    fn observe(&mut self, v: f64) {
+        let idx = MS_BUCKETS.iter().position(|&ub| v <= ub).unwrap_or(MS_BUCKETS.len());
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Bucket-resolution quantile estimate: the upper bound of the
+    /// first bucket whose cumulative count reaches `q * count` (the
+    /// observed max for the overflow bucket). Exact to one bucket.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return if i < MS_BUCKETS.len() { MS_BUCKETS[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+#[derive(Default)]
+struct Stripe {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// Point-in-time copy of every metric, name-sorted (BTreeMap) so all
+/// exports iterate in one deterministic order.
+#[derive(Clone, Debug, Default)]
+pub struct MetricSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+/// Lock-striped metric store (see module doc).
+pub struct MetricRegistry {
+    stripes: Vec<Mutex<Stripe>>,
+}
+
+impl Default for MetricRegistry {
+    fn default() -> MetricRegistry {
+        MetricRegistry::new()
+    }
+}
+
+impl MetricRegistry {
+    pub fn new() -> MetricRegistry {
+        MetricRegistry { stripes: (0..NUM_STRIPES).map(|_| Mutex::new(Stripe::default())).collect() }
+    }
+
+    fn stripe(&self, name: &str) -> &Mutex<Stripe> {
+        let mut h = DefaultHasher::new();
+        name.hash(&mut h);
+        &self.stripes[(h.finish() as usize) % NUM_STRIPES]
+    }
+
+    /// Add to a monotonic counter (created at 0 on first touch).
+    pub fn counter_add(&self, name: &str, delta: u64) {
+        let mut s = self.stripe(name).lock().unwrap();
+        *s.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Current value of a counter (0 if never touched).
+    pub fn counter_get(&self, name: &str) -> u64 {
+        let s = self.stripe(name).lock().unwrap();
+        s.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to an absolute value.
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        let mut s = self.stripe(name).lock().unwrap();
+        s.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record one wall-time observation (milliseconds) into a
+    /// fixed-bucket histogram.
+    pub fn observe_ms(&self, name: &str, ms: f64) {
+        let mut s = self.stripe(name).lock().unwrap();
+        s.histograms.entry(name.to_string()).or_default().observe(ms);
+    }
+
+    /// Consistent point-in-time copy: stripes are locked one at a time
+    /// (metrics never span stripes, so per-metric consistency holds).
+    pub fn snapshot(&self) -> MetricSnapshot {
+        let mut snap = MetricSnapshot::default();
+        for stripe in &self.stripes {
+            let s = stripe.lock().unwrap();
+            for (k, v) in &s.counters {
+                snap.counters.insert(k.clone(), *v);
+            }
+            for (k, v) in &s.gauges {
+                snap.gauges.insert(k.clone(), *v);
+            }
+            for (k, v) in &s.histograms {
+                snap.histograms.insert(k.clone(), v.clone());
+            }
+        }
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot_sorts() {
+        let r = MetricRegistry::new();
+        r.counter_add("b_total", 2);
+        r.counter_add("a_total", 1);
+        r.counter_add("b_total", 3);
+        assert_eq!(r.counter_get("b_total"), 5);
+        assert_eq!(r.counter_get("never"), 0);
+        let snap = r.snapshot();
+        let names: Vec<&str> = snap.counters.keys().map(|s| s.as_str()).collect();
+        assert_eq!(names, vec!["a_total", "b_total"]);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let r = MetricRegistry::new();
+        r.gauge_set("g", 1.0);
+        r.gauge_set("g", -2.5);
+        assert_eq!(r.snapshot().gauges["g"], -2.5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = Histogram::default();
+        for _ in 0..90 {
+            h.observe(0.4); // bucket ub 0.5
+        }
+        for _ in 0..10 {
+            h.observe(400.0); // bucket ub 500
+        }
+        assert_eq!(h.count, 100);
+        assert_eq!(h.p50(), 0.5);
+        assert_eq!(h.p95(), 500.0);
+        assert_eq!(h.p99(), 500.0);
+        assert_eq!(h.min, 0.4);
+        assert_eq!(h.max, 400.0);
+    }
+
+    #[test]
+    fn histogram_overflow_bucket_reports_max() {
+        let mut h = Histogram::default();
+        h.observe(9_999.0);
+        assert_eq!(h.buckets[MS_BUCKETS.len()], 1);
+        assert_eq!(h.p99(), 9_999.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.p50(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_counting_is_exact() {
+        let r = std::sync::Arc::new(MetricRegistry::new());
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let r = std::sync::Arc::clone(&r);
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        r.counter_add("hits_total", 1);
+                        r.observe_ms("lat_ms", 0.2);
+                    }
+                });
+            }
+        });
+        assert_eq!(r.counter_get("hits_total"), 4000);
+        assert_eq!(r.snapshot().histograms["lat_ms"].count, 4000);
+    }
+}

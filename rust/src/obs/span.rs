@@ -1,0 +1,102 @@
+//! Hierarchical scope-guard span timing.
+//!
+//! A [`Span`] measures the wall-clock duration of a lexical scope and,
+//! on drop, (a) records the duration into the registry histogram
+//! `span_<path>_ms` and (b) emits one `span` trace event carrying the
+//! span path plus any logical fields attached with [`Span::note`] —
+//! but **never** the wall duration itself, which would break the
+//! bitwise-determinism contract of the trace (wall times live only in
+//! histograms, which are quantized out of golden outputs).
+//!
+//! Hierarchy is expressed through dotted paths: `span.child("x")`
+//! yields path `parent.x`. On a disabled [`Telemetry`] handle every
+//! constructor returns an inert guard whose creation and drop cost is
+//! a branch and two empty (non-allocating) containers.
+
+use std::time::Instant;
+
+use crate::obs::Telemetry;
+use crate::util::json::Value;
+
+/// Scope guard for one timed region; see module doc.
+pub struct Span<'a> {
+    t: &'a Telemetry,
+    path: String,
+    start: Option<Instant>,
+    fields: Vec<(String, Value)>,
+}
+
+impl<'a> Span<'a> {
+    pub(crate) fn new(t: &'a Telemetry, path: &str) -> Span<'a> {
+        if t.is_enabled() {
+            Span { t, path: path.to_string(), start: Some(Instant::now()), fields: Vec::new() }
+        } else {
+            Span { t, path: String::new(), start: None, fields: Vec::new() }
+        }
+    }
+
+    /// Start a child span with path `<self>.<name>`. The child borrows
+    /// the same telemetry handle, so it must close before the parent.
+    pub fn child(&self, name: &str) -> Span<'a> {
+        if self.start.is_none() {
+            return Span { t: self.t, path: String::new(), start: None, fields: Vec::new() };
+        }
+        Span::new(self.t, &format!("{}.{name}", self.path))
+    }
+
+    /// Attach a deterministic logical field (tick, generation, counts)
+    /// to the span's trace event. No-op when disabled.
+    pub fn note(&mut self, key: &str, v: Value) {
+        if self.start.is_some() {
+            self.fields.push((key.to_string(), v));
+        }
+    }
+
+    /// The dotted span path ("" when disabled).
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let ms = start.elapsed().as_secs_f64() * 1e3;
+        let metric = format!("span_{}_ms", self.path.replace('.', "_"));
+        self.t.observe_ms(&metric, ms);
+        let fields: Vec<(&str, Value)> =
+            self.fields.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        self.t.trace_event("span", Some(&self.path), &fields);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let t = Telemetry::disabled();
+        let mut sp = t.span("opt.generation");
+        sp.note("generation", num(1.0));
+        let child = sp.child("evaluate");
+        assert_eq!(child.path(), "");
+        drop(child);
+        drop(sp);
+    }
+
+    #[test]
+    fn span_records_histogram_and_path() {
+        let t = Telemetry::enabled();
+        {
+            let mut sp = t.span("opt.generation");
+            sp.note("generation", num(0.0));
+            let c = sp.child("evaluate");
+            assert_eq!(c.path(), "opt.generation.evaluate");
+        }
+        let snap = t.snapshot().expect("enabled telemetry has a snapshot");
+        assert_eq!(snap.histograms["span_opt_generation_ms"].count, 1);
+        assert_eq!(snap.histograms["span_opt_generation_evaluate_ms"].count, 1);
+    }
+}

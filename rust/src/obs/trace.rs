@@ -1,0 +1,137 @@
+//! Append-only JSONL event trace (`--trace <file>`).
+//!
+//! One JSON object per line, every line self-describing with a
+//! `schema` version, a strictly increasing `seq`, and a `kind`. The
+//! trace is part of the run's *deterministic* output: given the same
+//! spec and seed, two runs produce bitwise-identical files at any
+//! `eval_threads` — so events carry only logical coordinates (tick,
+//! generation, batch ordinal, counts) and never wall-clock durations;
+//! wall times go to the registry histograms instead and are quantized
+//! out of every golden (see `docs/observability.md`).
+//!
+//! Determinism is guaranteed structurally: events are emitted only
+//! from coordinating threads (the optimizer / online / measurement
+//! loops), never from fan-out workers, so `seq` order is a pure
+//! function of the run's logical schedule.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{num, obj, s, to_string, Value};
+
+/// Version stamped on every trace line; bump on any schema change.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// Keys reserved for the envelope; event fields must not use them.
+const RESERVED: [&str; 4] = ["schema", "seq", "kind", "span"];
+
+/// Buffered JSONL writer with a monotonic sequence number.
+pub struct TraceWriter {
+    out: BufWriter<File>,
+    seq: u64,
+}
+
+impl TraceWriter {
+    /// Create (truncate) `path` and write the `trace_start` header
+    /// event.
+    pub fn create(path: &Path) -> Result<TraceWriter> {
+        let file = File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        let mut w = TraceWriter { out: BufWriter::new(file), seq: 0 };
+        w.emit("trace_start", None, &[])?;
+        Ok(w)
+    }
+
+    /// Append one event line: envelope (`schema`, `seq`, `kind`,
+    /// optional `span` path) plus the given logical fields. Keys are
+    /// emitted name-sorted (the JSON layer is BTreeMap-backed), so the
+    /// byte form is independent of field order at the call site.
+    pub fn emit(&mut self, kind: &str, span: Option<&str>, fields: &[(&str, Value)]) -> Result<()> {
+        let mut pairs: Vec<(&str, Value)> = vec![
+            ("schema", num(TRACE_SCHEMA_VERSION as f64)),
+            ("seq", num(self.seq as f64)),
+            ("kind", s(kind)),
+        ];
+        if let Some(path) = span {
+            pairs.push(("span", s(path)));
+        }
+        for (k, v) in fields {
+            debug_assert!(!RESERVED.contains(k), "trace field {k:?} shadows an envelope key");
+            pairs.push((k, v.clone()));
+        }
+        writeln!(self.out, "{}", to_string(&obj(pairs))).context("writing trace event")?;
+        self.seq += 1;
+        Ok(())
+    }
+
+    /// Events written so far (including the header).
+    pub fn events(&self) -> u64 {
+        self.seq
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush().context("flushing trace file")
+    }
+}
+
+impl Drop for TraceWriter {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("afare_trace_test_{}_{name}.jsonl", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn lines_are_schema_stamped_and_sequenced() {
+        let path = tmp("seq");
+        {
+            let mut w = TraceWriter::create(&path).unwrap();
+            w.emit("tick", Some("online.tick"), &[("tick", num(3.0))]).unwrap();
+            w.emit("tick", Some("online.tick"), &[("tick", num(4.0))]).unwrap();
+            assert_eq!(w.events(), 3);
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for (i, line) in lines.iter().enumerate() {
+            let v = json::parse(line).unwrap();
+            assert_eq!(v.get("schema").and_then(|x| x.as_f64()), Some(1.0));
+            assert_eq!(v.get("seq").and_then(|x| x.as_f64()), Some(i as f64));
+        }
+        let head = json::parse(lines[0]).unwrap();
+        assert_eq!(head.get("kind").and_then(|v| v.as_str()), Some("trace_start"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn identical_emission_is_bitwise_identical() {
+        let pa = tmp("det_a");
+        let pb = tmp("det_b");
+        for p in [&pa, &pb] {
+            let mut w = TraceWriter::create(p).unwrap();
+            for t in 0..5 {
+                w.emit("tick", Some("online.tick"), &[("tick", num(t as f64))]).unwrap();
+            }
+            w.flush().unwrap();
+        }
+        let a = std::fs::read(&pa).unwrap();
+        let b = std::fs::read(&pb).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+    }
+}

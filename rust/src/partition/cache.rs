@@ -23,7 +23,7 @@
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::faults::RateVectors;
@@ -67,17 +67,31 @@ pub struct CacheRollover {
     pub entries_dropped: usize,
 }
 
+/// Pack (hits, misses) into one u64 — hits in the high 32 bits, misses
+/// in the low 32 — so a full batch attribution is ONE `fetch_add` and a
+/// snapshot is ONE `load`: readers can never observe hits from one
+/// instant paired with misses from another (the torn-read bug the
+/// separate `AtomicUsize` pair had). 32 bits per scope bounds each
+/// counter at ~4.2e9 per epoch/lifetime — orders of magnitude beyond
+/// any run this system performs.
+fn pack(hits: usize, misses: usize) -> u64 {
+    debug_assert!(hits < (1 << 32) && misses < (1 << 32), "cache counter overflow");
+    ((hits as u64) << 32) | (misses as u64)
+}
+
+fn unpack(word: u64) -> CacheStats {
+    CacheStats { hits: (word >> 32) as usize, misses: (word & 0xFFFF_FFFF) as usize }
+}
+
 /// Exact memo cache for fault-injected accuracy. Thread-safe: all
 /// operations take `&self`.
 #[derive(Debug)]
 pub struct DaccCache {
     shards: Vec<Mutex<HashMap<Vec<u16>, f64>>>,
-    // epoch counters (reset by clear)
-    hits: AtomicUsize,
-    misses: AtomicUsize,
-    // lifetime counters (never reset)
-    lifetime_hits: AtomicUsize,
-    lifetime_misses: AtomicUsize,
+    /// Epoch (hits, misses), packed; reset by `clear`.
+    epoch: AtomicU64,
+    /// Lifetime (hits, misses), packed; never reset.
+    lifetime: AtomicU64,
 }
 
 impl Default for DaccCache {
@@ -90,10 +104,8 @@ impl DaccCache {
     pub fn new() -> DaccCache {
         DaccCache {
             shards: (0..NUM_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
-            hits: AtomicUsize::new(0),
-            misses: AtomicUsize::new(0),
-            lifetime_hits: AtomicUsize::new(0),
-            lifetime_misses: AtomicUsize::new(0),
+            epoch: AtomicU64::new(0),
+            lifetime: AtomicU64::new(0),
         }
     }
 
@@ -137,16 +149,26 @@ impl DaccCache {
         self.shard(&key).lock().unwrap().insert(key, acc);
     }
 
+    /// Attribute a whole batch's lookups in one atomic step per scope:
+    /// a concurrent [`stats`](DaccCache::stats) /
+    /// [`lifetime_stats`](DaccCache::lifetime_stats) reader observes
+    /// this batch either fully or not at all, so mid-batch snapshots
+    /// (the telemetry registry samples them) always satisfy
+    /// `hits + misses == lookups` over completed batches.
+    pub fn record_batch(&self, hits: usize, misses: usize) {
+        let delta = pack(hits, misses);
+        self.epoch.fetch_add(delta, Ordering::Relaxed);
+        self.lifetime.fetch_add(delta, Ordering::Relaxed);
+    }
+
     /// Attribute `n` hits (used for batch-dedup hits and engine lookups).
     pub fn record_hits(&self, n: usize) {
-        self.hits.fetch_add(n, Ordering::Relaxed);
-        self.lifetime_hits.fetch_add(n, Ordering::Relaxed);
+        self.record_batch(n, 0);
     }
 
     /// Attribute `n` misses (engine: unique keys that must be evaluated).
     pub fn record_misses(&self, n: usize) {
-        self.misses.fetch_add(n, Ordering::Relaxed);
-        self.lifetime_misses.fetch_add(n, Ordering::Relaxed);
+        self.record_batch(0, n);
     }
 
     pub fn len(&self) -> usize {
@@ -159,35 +181,37 @@ impl DaccCache {
 
     /// Epoch hits (since the last clear).
     pub fn hits(&self) -> usize {
-        self.hits.load(Ordering::Relaxed)
+        self.stats().hits
     }
 
     /// Epoch misses (since the last clear).
     pub fn misses(&self) -> usize {
-        self.misses.load(Ordering::Relaxed)
+        self.stats().misses
     }
 
     pub fn hit_rate(&self) -> f64 {
         self.stats().hit_rate()
     }
 
-    /// Epoch counters (reset on [`clear`](DaccCache::clear)).
+    /// Epoch counters (reset on [`clear`](DaccCache::clear)). One
+    /// atomic load: hits and misses are from the same instant.
     pub fn stats(&self) -> CacheStats {
-        CacheStats { hits: self.hits(), misses: self.misses() }
+        unpack(self.epoch.load(Ordering::Relaxed))
     }
 
     /// Cumulative counters across every epoch of this cache's life.
+    /// One atomic load, same consistency as [`stats`](DaccCache::stats).
     pub fn lifetime_stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.lifetime_hits.load(Ordering::Relaxed),
-            misses: self.lifetime_misses.load(Ordering::Relaxed),
-        }
+        unpack(self.lifetime.load(Ordering::Relaxed))
     }
 
     /// Drop all entries and close the current stats epoch. Lifetime
-    /// counters are preserved; the returned rollover reports both scopes.
+    /// counters are preserved; the returned rollover reports both
+    /// scopes. The epoch is closed with one atomic `swap`, so exactly
+    /// the counts read are the counts reset even if workers race the
+    /// rollover.
     pub fn clear(&self) -> CacheRollover {
-        let ended_epoch = self.stats();
+        let ended_epoch = unpack(self.epoch.swap(0, Ordering::Relaxed));
         let lifetime = self.lifetime_stats();
         let mut entries_dropped = 0;
         for shard in &self.shards {
@@ -195,8 +219,6 @@ impl DaccCache {
             entries_dropped += map.len();
             map.clear();
         }
-        self.hits.store(0, Ordering::Relaxed);
-        self.misses.store(0, Ordering::Relaxed);
         CacheRollover { ended_epoch, lifetime, entries_dropped }
     }
 }
@@ -270,6 +292,40 @@ mod tests {
             c.put(&rv(r, 0.5), r as f64);
         }
         assert_eq!(c.len(), 100);
+    }
+
+    #[test]
+    fn batch_attribution_is_snapshot_atomic() {
+        // Regression: hits/misses used to be two separate atomics, so a
+        // mid-batch snapshot could pair hits from one instant with
+        // misses from another. With packed single-word counters, every
+        // snapshot must see whole (2 hits : 1 miss) batches.
+        let c = DaccCache::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = &c;
+                s.spawn(move || {
+                    for _ in 0..5_000 {
+                        c.record_batch(2, 1);
+                    }
+                });
+            }
+            let c = &c;
+            s.spawn(move || {
+                for _ in 0..20_000 {
+                    for stats in [c.stats(), c.lifetime_stats()] {
+                        assert_eq!(
+                            stats.hits,
+                            2 * stats.misses,
+                            "torn read: {stats:?} is not a whole number of batches"
+                        );
+                        assert_eq!(stats.lookups(), stats.hits + stats.misses);
+                    }
+                }
+            });
+        });
+        assert_eq!(c.stats(), CacheStats { hits: 40_000, misses: 20_000 });
+        assert_eq!(c.lifetime_stats(), c.stats());
     }
 
     #[test]

@@ -161,8 +161,9 @@ pub(crate) fn faulty_accuracy_batch(
             assign.push(slot);
         }
     }
-    cache.record_hits(cache_hits + dedup_hits);
-    cache.record_misses(miss_keys.len());
+    // one atomic attribution for the whole batch: concurrent stats
+    // readers (telemetry snapshots) see this batch all-or-nothing
+    cache.record_batch(cache_hits + dedup_hits, miss_keys.len());
 
     // evaluate the unique misses — parallel when it pays for itself
     let m = miss_rates.len();

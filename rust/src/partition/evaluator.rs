@@ -35,7 +35,9 @@ use super::sensitivity::SensitivityTable;
 use crate::faults::{FaultScenario, RateVectors};
 use crate::hw::Platform;
 use crate::model::Manifest;
+use crate::obs::Telemetry;
 use crate::runtime::{AccuracyEvaluator, CompiledModel};
+use crate::util::json::num;
 
 /// How ΔAcc(P) is obtained.
 pub enum DaccMode<'a> {
@@ -87,6 +89,8 @@ pub struct PartitionEvaluator<'a> {
     cache: DaccCache,
     engine: EngineConfig,
     pub counters: EvalCounters,
+    /// Observability handle (disabled by default; see [`crate::obs`]).
+    telemetry: Telemetry,
 }
 
 impl<'a> PartitionEvaluator<'a> {
@@ -121,6 +125,7 @@ impl<'a> PartitionEvaluator<'a> {
             cache: DaccCache::new(),
             engine: EngineConfig::default(),
             counters: EvalCounters::default(),
+            telemetry: Telemetry::disabled(),
         }
     }
 
@@ -128,6 +133,25 @@ impl<'a> PartitionEvaluator<'a> {
     pub fn with_parallelism(mut self, threads: usize) -> Self {
         self.set_parallelism(threads);
         self
+    }
+
+    /// Attach the run's telemetry handle (builder form).
+    pub fn with_telemetry(mut self, telemetry: Telemetry) -> Self {
+        self.set_telemetry(telemetry);
+        self
+    }
+
+    /// Attach the run's telemetry handle; batched evaluations then emit
+    /// `eval.batch` spans and publish atomically-read cache gauges.
+    pub fn set_telemetry(&mut self, telemetry: Telemetry) {
+        self.telemetry = telemetry;
+    }
+
+    /// The attached telemetry handle (disabled unless set). The offline
+    /// driver clones this into the optimizer so generation spans share
+    /// the evaluator's registry/trace.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
     }
 
     pub fn set_parallelism(&mut self, threads: usize) {
@@ -306,21 +330,52 @@ impl<'a> PartitionEvaluator<'a> {
         mappings: &[Mapping],
         three_obj: bool,
     ) -> Result<Vec<Vec<f64>>> {
+        // clone the (refcounted) handle so the span's borrow doesn't
+        // pin `self` for the whole batch
+        let telemetry = self.telemetry.clone();
+        let mut span = telemetry.span("eval.batch");
         self.counters.batch_calls += 1;
         self.counters.batch_genomes += mappings.len();
+        span.note("batch", num(self.counters.batch_calls as f64));
+        span.note("genomes", num(mappings.len() as f64));
+        telemetry.counter_add("eval_batch_calls_total", 1);
+        telemetry.counter_add("eval_batch_genomes_total", mappings.len() as u64);
         let costs: Vec<(f64, f64)> = mappings.iter().map(|m| self.lat_en(m)).collect();
         if !three_obj {
+            span.note("unique_misses", num(0.0));
             return Ok(costs.into_iter().map(|(l, e)| vec![l, e]).collect());
         }
         let rates: Vec<RateVectors> = mappings.iter().map(|m| self.rates_for(m)).collect();
         let outcome =
             engine::faulty_accuracy_batch(self.backend(), &self.cache, self.engine, &rates)?;
         self.note_backend_evals(outcome.unique_misses);
+        span.note("unique_misses", num(outcome.unique_misses as f64));
+        span.note("cache_answered", num((mappings.len() - outcome.unique_misses) as f64));
+        telemetry.counter_add("eval_backend_evals_total", outcome.unique_misses as u64);
+        self.publish_cache_gauges(&telemetry);
         Ok(costs
             .into_iter()
             .zip(outcome.accs)
             .map(|((lat, en), acc)| vec![lat, en, (self.clean_acc - acc).max(0.0)])
             .collect())
+    }
+
+    /// Publish cache statistics into the registry. Each scope is ONE
+    /// packed-atomic load ([`DaccCache::stats`]), so the exported
+    /// (hits, misses) pair is always internally consistent — even if
+    /// engine workers are mid-batch on another evaluator when a
+    /// campaign snapshot is taken.
+    fn publish_cache_gauges(&self, telemetry: &Telemetry) {
+        if !telemetry.is_enabled() {
+            return;
+        }
+        let epoch = self.cache.stats();
+        let life = self.cache.lifetime_stats();
+        telemetry.gauge_set("dacc_cache_epoch_hits", epoch.hits as f64);
+        telemetry.gauge_set("dacc_cache_epoch_misses", epoch.misses as f64);
+        telemetry.gauge_set("dacc_cache_lifetime_hits", life.hits as f64);
+        telemetry.gauge_set("dacc_cache_lifetime_misses", life.misses as f64);
+        telemetry.gauge_set("dacc_cache_entries", self.cache.len() as f64);
     }
 }
 

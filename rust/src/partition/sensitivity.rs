@@ -13,10 +13,85 @@
 //! (paper's Algorithm 1) runs the real fault-injected forward per
 //! candidate. bench_ablation quantifies the fidelity gap.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::faults::RateVectors;
+use crate::obs::Telemetry;
 use crate::runtime::{AccuracyEvaluator, CompiledModel};
+use crate::util::json::{num, s as jstr};
+
+/// One measurement cell of the layer sweep: which unit, which grid
+/// point, and whether its weights or its activations are faulted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SweepCell {
+    pub unit: usize,
+    pub grid_index: usize,
+    /// `true`: fault this unit's weights; `false`: its activations.
+    pub weights: bool,
+}
+
+/// Deterministic cell order: unit-major, then grid point, weights
+/// before activations — exactly the order of the historical serial
+/// double loop, so parallel results land in identical slots.
+pub(crate) fn sweep_cells(num_units: usize, grid_len: usize) -> Vec<SweepCell> {
+    let mut cells = Vec::with_capacity(num_units * grid_len * 2);
+    for unit in 0..num_units {
+        for grid_index in 0..grid_len {
+            for weights in [true, false] {
+                cells.push(SweepCell { unit, grid_index, weights });
+            }
+        }
+    }
+    cells
+}
+
+/// Evaluate every cell with up to `threads` scoped workers, writing
+/// `(value, wall_ms)` into pre-sized cell-order slots — the same
+/// chunked fan-out as the batch engine, so the value vector is bitwise
+/// identical at any thread count as long as `f` is pure per cell.
+pub(crate) fn measure_cells<F>(
+    cells: &[SweepCell],
+    threads: usize,
+    f: F,
+) -> Result<Vec<(f64, f64)>>
+where
+    F: Fn(SweepCell) -> Result<f64> + Sync,
+{
+    let m = cells.len();
+    let mut out = vec![(0.0f64, 0.0f64); m];
+    let workers = threads.min(m).max(1);
+    if workers <= 1 {
+        for (slot, &cell) in out.iter_mut().zip(cells) {
+            let t0 = Instant::now();
+            *slot = (f(cell)?, t0.elapsed().as_secs_f64() * 1e3);
+        }
+        return Ok(out);
+    }
+    let chunk = (m + workers - 1) / workers;
+    let f = &f;
+    let mut worker_results: Vec<Result<()>> = Vec::with_capacity(workers);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for (slots, cs) in out.chunks_mut(chunk).zip(cells.chunks(chunk)) {
+            handles.push(s.spawn(move || -> Result<()> {
+                for (slot, &cell) in slots.iter_mut().zip(cs) {
+                    let t0 = Instant::now();
+                    *slot = (f(cell)?, t0.elapsed().as_secs_f64() * 1e3);
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            worker_results.push(h.join().expect("sensitivity sweep worker panicked"));
+        }
+    });
+    for r in worker_results {
+        r?;
+    }
+    Ok(out)
+}
 
 /// Per-unit, per-rate measured accuracy drops.
 #[derive(Clone, Debug)]
@@ -31,7 +106,7 @@ pub struct SensitivityTable {
 
 impl SensitivityTable {
     /// Measure the table with the real compiled model (one-time cost:
-    /// 2 · L · |grid| fault-injected accuracy evaluations).
+    /// 2 · L · |grid| fault-injected accuracy evaluations), serially.
     pub fn measure(
         model: &CompiledModel,
         eval: &AccuracyEvaluator,
@@ -39,29 +114,64 @@ impl SensitivityTable {
         n_batches: usize,
         key_seed: u32,
     ) -> Result<SensitivityTable> {
+        Self::measure_with(model, eval, rate_grid, n_batches, key_seed, 1, &Telemetry::disabled())
+    }
+
+    /// [`measure`](SensitivityTable::measure) with the sweep's
+    /// 2 · L · |grid| cells fanned out across `threads` scoped workers
+    /// (each cell is an independent fault-injected accuracy run — the
+    /// evaluator is pure in the rate vectors, so the table is bitwise
+    /// identical at any thread count). Emits one span per (layer, rate)
+    /// cell: wall time into the `span_sensitivity_cell_ms` histogram,
+    /// and — from this coordinating thread, in cell order, never from
+    /// workers — one trace event carrying the cell's logical coordinates.
+    pub fn measure_with(
+        model: &CompiledModel,
+        eval: &AccuracyEvaluator,
+        rate_grid: &[f32],
+        n_batches: usize,
+        key_seed: u32,
+        threads: usize,
+        telemetry: &Telemetry,
+    ) -> Result<SensitivityTable> {
+        let mut sweep_span = telemetry.span("sensitivity.measure");
         let l = model.num_units();
+        sweep_span.note("units", num(l as f64));
+        sweep_span.note("grid_points", num(rate_grid.len() as f64));
         let clean_acc = eval.clean_accuracy(model, n_batches)?;
+        let cells = sweep_cells(l, rate_grid.len());
+        let results = measure_cells(&cells, threads, |cell| {
+            let mut rv = RateVectors::zeros(l);
+            let r = rate_grid[cell.grid_index];
+            if cell.weights {
+                rv.w_rates[cell.unit] = r;
+            } else {
+                rv.a_rates[cell.unit] = r;
+            }
+            eval.accuracy(model, &rv, key_seed, n_batches)
+        })?;
         let mut w_drop = vec![vec![0.0; rate_grid.len()]; l];
         let mut a_drop = vec![vec![0.0; rate_grid.len()]; l];
-        for unit in 0..l {
-            for (gi, &r) in rate_grid.iter().enumerate() {
-                let mut rv = RateVectors::zeros(l);
-                rv.w_rates[unit] = r;
-                let acc = eval.accuracy(model, &rv, key_seed, n_batches)?;
-                w_drop[unit][gi] = (clean_acc - acc).max(0.0);
-
-                let mut rv = RateVectors::zeros(l);
-                rv.a_rates[unit] = r;
-                let acc = eval.accuracy(model, &rv, key_seed, n_batches)?;
-                a_drop[unit][gi] = (clean_acc - acc).max(0.0);
+        for (cell, &(acc, ms)) in cells.iter().zip(&results) {
+            let drop = (clean_acc - acc).max(0.0);
+            if cell.weights {
+                w_drop[cell.unit][cell.grid_index] = drop;
+            } else {
+                a_drop[cell.unit][cell.grid_index] = drop;
             }
+            telemetry.observe_ms("span_sensitivity_cell_ms", ms);
+            telemetry.trace_event(
+                "span",
+                Some("sensitivity.cell"),
+                &[
+                    ("unit", num(cell.unit as f64)),
+                    ("grid_index", num(cell.grid_index as f64)),
+                    ("fault", jstr(if cell.weights { "weights" } else { "activations" })),
+                ],
+            );
         }
-        Ok(SensitivityTable {
-            rate_grid: rate_grid.to_vec(),
-            w_drop,
-            a_drop,
-            clean_acc,
-        })
+        telemetry.counter_add("sensitivity_cells_total", cells.len() as u64);
+        Ok(SensitivityTable { rate_grid: rate_grid.to_vec(), w_drop, a_drop, clean_acc })
     }
 
     /// Linear interpolation of a drop curve at rate r (clamped to grid).
@@ -168,6 +278,46 @@ mod tests {
     #[test]
     fn most_sensitive_unit_is_unit0() {
         assert_eq!(table().most_sensitive_unit(), 0);
+    }
+
+    #[test]
+    fn sweep_cells_match_the_historical_serial_order() {
+        let cells = sweep_cells(2, 2);
+        assert_eq!(cells.len(), 8);
+        assert_eq!(cells[0], SweepCell { unit: 0, grid_index: 0, weights: true });
+        assert_eq!(cells[1], SweepCell { unit: 0, grid_index: 0, weights: false });
+        assert_eq!(cells[2], SweepCell { unit: 0, grid_index: 1, weights: true });
+        assert_eq!(cells[7], SweepCell { unit: 1, grid_index: 1, weights: false });
+    }
+
+    #[test]
+    fn parallel_cell_sweep_matches_serial() {
+        // pure per-cell function standing in for the fault-injected
+        // accuracy run; parallel values must land in identical slots
+        let cells = sweep_cells(5, 4);
+        let f = |c: SweepCell| -> Result<f64> {
+            Ok(c.unit as f64 * 100.0 + c.grid_index as f64 * 10.0 + c.weights as u8 as f64)
+        };
+        let serial: Vec<f64> =
+            measure_cells(&cells, 1, f).unwrap().into_iter().map(|(v, _)| v).collect();
+        for threads in [2, 4, 16] {
+            let par: Vec<f64> =
+                measure_cells(&cells, threads, f).unwrap().into_iter().map(|(v, _)| v).collect();
+            assert_eq!(par, serial, "thread count {threads} permuted the sweep");
+        }
+    }
+
+    #[test]
+    fn cell_sweep_propagates_worker_errors() {
+        let cells = sweep_cells(4, 4);
+        let err = measure_cells(&cells, 4, |c: SweepCell| {
+            if c.unit == 2 && c.grid_index == 3 {
+                anyhow::bail!("injected failure")
+            }
+            Ok(0.0)
+        })
+        .unwrap_err();
+        assert!(format!("{err}").contains("injected failure"));
     }
 
     #[test]

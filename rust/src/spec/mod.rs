@@ -31,6 +31,7 @@ pub mod online;
 pub mod outcome;
 pub mod platform;
 mod schema;
+pub mod telemetry;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -42,6 +43,7 @@ pub use self::chaos::ChaosSpec;
 pub use self::faultenv::FaultEnvSpec;
 pub use self::online::OnlineSpec;
 pub use self::platform::{AccelKind, DeviceEntry, LinkSpec, PlatformSpec};
+pub use self::telemetry::TelemetrySpec;
 
 use crate::cli::Args;
 use crate::config::ExperimentConfig;
@@ -250,6 +252,8 @@ pub struct ExperimentSpec {
     pub online: OnlineSpec,
     /// Serving-system chaos injection (off by default).
     pub chaos: ChaosSpec,
+    /// Observability: metric registry + JSONL trace (off by default).
+    pub telemetry: TelemetrySpec,
 }
 
 impl Default for ExperimentSpec {
@@ -269,6 +273,7 @@ impl Default for ExperimentSpec {
             selection: SelectionSpec::default(),
             online: OnlineSpec::default(),
             chaos: ChaosSpec::default(),
+            telemetry: TelemetrySpec::default(),
         }
     }
 }
@@ -288,6 +293,7 @@ const TOP_LEVEL_KEYS: &[&str] = &[
     "selection",
     "online",
     "chaos",
+    "telemetry",
 ];
 
 impl ExperimentSpec {
@@ -338,6 +344,9 @@ impl ExperimentSpec {
         if let Some(v) = obj.get("chaos") {
             self.chaos.apply_json(expect_obj(v, "spec.chaos")?, "spec.chaos")?;
         }
+        if let Some(v) = obj.get("telemetry") {
+            self.telemetry.apply_json(expect_obj(v, "spec.telemetry")?, "spec.telemetry")?;
+        }
         Ok(())
     }
 
@@ -373,6 +382,7 @@ impl ExperimentSpec {
             ("selection", self.selection.to_json()),
             ("online", self.online.to_json()),
             ("chaos", self.chaos.to_json()),
+            ("telemetry", self.telemetry.to_json()),
         ])
     }
 
@@ -436,6 +446,13 @@ impl ExperimentSpec {
             self.chaos.enabled = true;
         }
         self.chaos.seed = args.get_u64("chaos-seed", self.chaos.seed);
+        if let Some(p) = args.get("trace") {
+            self.telemetry.trace = Some(p.to_string());
+            self.telemetry.enabled = true;
+        }
+        if args.has_flag("telemetry") {
+            self.telemetry.enabled = true;
+        }
         self.seed = args.get_u64("seed", self.seed);
         Ok(())
     }
@@ -493,7 +510,7 @@ mod tests {
 
     fn args(raw: &[&str]) -> Args {
         let raw: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
-        Args::parse(&raw, &["surrogate", "link-cost", "chaos", "verbose", "help"])
+        Args::parse(&raw, &["surrogate", "link-cost", "chaos", "telemetry", "verbose", "help"])
     }
 
     #[test]
@@ -564,6 +581,21 @@ mod tests {
         let quiet = ExperimentSpec::resolve_with(&args(&["online"]), |_| None).unwrap();
         assert!(!quiet.chaos.enabled);
         assert!(!quiet.chaos.to_engine().is_enabled());
+    }
+
+    #[test]
+    fn trace_flag_enables_telemetry() {
+        let a = args(&["online", "--trace", "/tmp/run.jsonl"]);
+        let spec = ExperimentSpec::resolve_with(&a, |_| None).unwrap();
+        assert!(spec.telemetry.enabled);
+        assert_eq!(spec.telemetry.trace.as_deref(), Some("/tmp/run.jsonl"));
+        let b = args(&["online", "--telemetry"]);
+        let spec = ExperimentSpec::resolve_with(&b, |_| None).unwrap();
+        assert!(spec.telemetry.enabled);
+        assert!(spec.telemetry.trace.is_none());
+        // default stays fully off
+        let quiet = ExperimentSpec::resolve_with(&args(&["online"]), |_| None).unwrap();
+        assert!(!quiet.telemetry.enabled);
     }
 
     #[test]

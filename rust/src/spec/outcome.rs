@@ -88,6 +88,11 @@ pub struct OfflineReport {
     pub cache_hits: usize,
     pub cache_misses: usize,
     pub cache_hit_rate: f64,
+    /// Prometheus text snapshot of the run's metric registry. `None`
+    /// when telemetry is off — the key is then absent from the JSON, so
+    /// telemetry-disabled reports stay bitwise identical to the
+    /// pre-observability format.
+    pub telemetry: Option<String>,
 }
 
 impl OfflineReport {
@@ -121,11 +126,12 @@ impl OfflineReport {
             cache_hits: hits,
             cache_misses: misses,
             cache_hit_rate: rate,
+            telemetry: None,
         }
     }
 
     pub fn to_json(&self) -> Value {
-        json::obj(vec![
+        let mut fields = vec![
             ("command", json::s("offline")),
             ("model", json::s(&self.model)),
             ("scenario", json::s(&self.scenario)),
@@ -140,7 +146,11 @@ impl OfflineReport {
             ("cache_hits", json::num(self.cache_hits as f64)),
             ("cache_misses", json::num(self.cache_misses as f64)),
             ("cache_hit_rate", json::num(self.cache_hit_rate)),
-        ])
+        ];
+        if let Some(t) = &self.telemetry {
+            fields.push(("telemetry", json::s(t)));
+        }
+        json::obj(fields)
     }
 }
 
@@ -168,6 +178,9 @@ pub struct OnlineReport {
     pub degraded_intervals: Vec<(usize, usize)>,
     pub exec_mean_ms: Option<f64>,
     pub exec_p95_ms: Option<f64>,
+    /// Prometheus text snapshot (key absent when telemetry is off; see
+    /// [`OfflineReport::telemetry`]).
+    pub telemetry: Option<String>,
     pub timeline: Vec<TimelineEntry>,
 }
 
@@ -214,6 +227,7 @@ impl OnlineReport {
             degraded_intervals: out.metrics.degraded_intervals.clone(),
             exec_mean_ms: exec.as_ref().map(|s| s.mean),
             exec_p95_ms: exec.as_ref().map(|s| s.p95),
+            telemetry: None,
             timeline: out
                 .timeline
                 .iter()
@@ -276,6 +290,9 @@ impl OnlineReport {
         }
         if let Some(p) = self.exec_p95_ms {
             fields.push(("exec_p95_ms", json::num(p)));
+        }
+        if let Some(t) = &self.telemetry {
+            fields.push(("telemetry", json::s(t)));
         }
         json::obj(fields)
     }

@@ -1,0 +1,120 @@
+//! The declarative `spec.telemetry` section: observability switches.
+//!
+//! Off by default — a disabled section materializes
+//! [`Telemetry::disabled`], every instrumentation site early-outs, and
+//! all run outputs stay bitwise identical to a build without the
+//! subsystem. `--trace <file>` implies `enabled`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::schema::*;
+use crate::obs::Telemetry;
+use crate::util::json::{self, Value};
+
+/// The declarative telemetry section.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetrySpec {
+    /// Master switch: collect registry metrics and fold a Prometheus
+    /// snapshot into the run's JSON report.
+    pub enabled: bool,
+    /// JSONL event-trace path (`--trace <file>`); `None` disables the
+    /// trace exporter. Setting a path implies `enabled`.
+    pub trace: Option<String>,
+}
+
+impl TelemetrySpec {
+    pub(crate) fn apply_json(&mut self, obj: &BTreeMap<String, Value>, ctx: &str) -> Result<()> {
+        reject_unknown(obj, &["enabled", "trace"], ctx)?;
+        if let Some(b) = bool_field(obj, "enabled", ctx)? {
+            self.enabled = b;
+        }
+        match obj.get("trace") {
+            None => {}
+            Some(Value::Null) => self.trace = None,
+            Some(Value::Str(p)) => {
+                self.trace = Some(p.clone());
+                self.enabled = true;
+            }
+            Some(_) => bail!("{ctx}.trace: expected a string path or null"),
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("enabled", Value::Bool(self.enabled)),
+            ("trace", match &self.trace {
+                Some(p) => json::s(p),
+                None => Value::Null,
+            }),
+        ])
+    }
+
+    /// Materialize the run's telemetry handle; a disabled section is a
+    /// no-op handle.
+    pub fn build(&self) -> Result<Telemetry> {
+        match (&self.trace, self.enabled) {
+            (Some(p), _) => Telemetry::with_trace(Path::new(p)),
+            (None, true) => Ok(Telemetry::enabled()),
+            (None, false) => Ok(Telemetry::disabled()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_off_and_builds_a_noop_handle() {
+        let spec = TelemetrySpec::default();
+        assert!(!spec.enabled);
+        assert!(spec.trace.is_none());
+        let t = spec.build().unwrap();
+        assert!(!t.is_enabled());
+        assert!(!t.has_trace());
+    }
+
+    #[test]
+    fn trace_path_implies_enabled() {
+        let mut spec = TelemetrySpec::default();
+        let v = crate::util::json::parse(r#"{"trace": "/tmp/run.jsonl"}"#).unwrap();
+        spec.apply_json(v.as_obj().unwrap(), "telemetry").unwrap();
+        assert!(spec.enabled);
+        assert_eq!(spec.trace.as_deref(), Some("/tmp/run.jsonl"));
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        for spec in [
+            TelemetrySpec::default(),
+            TelemetrySpec { enabled: true, trace: None },
+            TelemetrySpec { enabled: true, trace: Some("t.jsonl".into()) },
+        ] {
+            let v = spec.to_json();
+            let mut back = TelemetrySpec::default();
+            back.apply_json(v.as_obj().unwrap(), "telemetry").unwrap();
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn unknown_key_and_bad_trace_rejected() {
+        let mut spec = TelemetrySpec::default();
+        let v = crate::util::json::parse(r#"{"enable": true}"#).unwrap();
+        assert!(spec.apply_json(v.as_obj().unwrap(), "telemetry").is_err());
+        let v = crate::util::json::parse(r#"{"trace": 7}"#).unwrap();
+        assert!(spec.apply_json(v.as_obj().unwrap(), "telemetry").is_err());
+    }
+
+    #[test]
+    fn enabled_without_trace_builds_registry_only() {
+        let spec = TelemetrySpec { enabled: true, trace: None };
+        let t = spec.build().unwrap();
+        assert!(t.is_enabled());
+        assert!(!t.has_trace());
+    }
+}

@@ -21,6 +21,7 @@ use afarepart::faults::{
     RateVectors,
 };
 use afarepart::hw::Platform;
+use afarepart::obs::Telemetry;
 use afarepart::partition::{DaccMode, Mapping, PartitionEvaluator};
 
 const UNITS: usize = 6;
@@ -251,6 +252,7 @@ fn run_online(
         clean_acc: table.clean_acc,
         chaos,
         safe_mapping: safe,
+        telemetry: Telemetry::disabled(),
     };
     let out = runner.run(&eval, &env, initial, |_| {}).unwrap();
     let stats = server.stats();
@@ -426,6 +428,7 @@ fn terminal_failure_without_safe_mapping_is_a_run_error() {
         clean_acc: table.clean_acc,
         chaos,
         safe_mapping: None,
+        telemetry: Telemetry::disabled(),
     };
     let err = runner
         .run(&eval, &env, Mapping::all_on(0, UNITS), |_| {})

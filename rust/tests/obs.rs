@@ -1,0 +1,272 @@
+//! Integration tests for the observability subsystem (ISSUE 7): the
+//! JSONL trace of a chaos-perturbed online serving run — reconfigs,
+//! degradation, supervision and all — must be bitwise identical across
+//! repeats *and* across `eval_threads`, every line must be schema-valid
+//! and free of wall-clock values, the registry must agree with the
+//! run's `Metrics` end to end, and attaching telemetry must not perturb
+//! a single serving result.
+//!
+//! Everything runs on the artifact-free synthetic backend (the same
+//! harness as `rust/tests/chaos.rs`), so no PJRT artifacts are needed.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use afarepart::bench::suite::{synthetic_eval_set, synthetic_manifest, synthetic_sensitivity};
+use afarepart::coordinator::{
+    BackendSpec, InferenceServer, OnlineConfig, OnlineOutcome, OnlineRunner, TimelinePoint,
+};
+use afarepart::faults::{
+    ChaosComponent, ChaosEngine, DeviceFaultProfile, FaultEnv, FaultScenario,
+};
+use afarepart::hw::Platform;
+use afarepart::nsga2::Nsga2Config;
+use afarepart::obs::{Telemetry, TRACE_SCHEMA_VERSION};
+use afarepart::partition::{DaccMode, Mapping, PartitionEvaluator};
+use afarepart::util::json;
+
+const UNITS: usize = 6;
+const DIMS: (usize, usize, usize) = (4, 4, 3);
+const BATCH: usize = 8;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("afare_obs_it_{}_{name}.jsonl", std::process::id()));
+    p
+}
+
+/// Online config that exercises every instrumented path: θ re-optimizations
+/// (small window + corrupt chaos), pipelined speculation, and a guaranteed
+/// terminal failure window that forces safe-mapping degradation.
+fn online_cfg() -> OnlineConfig {
+    OnlineConfig {
+        ticks: 26,
+        window: 4,
+        theta: 0.05,
+        cooldown: 6,
+        lookahead: 2,
+        backoff_ms: 0,
+        health_cooldown: 3,
+        reopt: Nsga2Config { pop_size: 8, generations: 3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Corruption drives the θ trigger; the windowed rate-1.0 crash guarantees
+/// a worker respawn; the windowed transient burst (far past the retry
+/// budget) guarantees one degradation episode.
+fn chaos() -> ChaosEngine {
+    ChaosEngine::new(
+        99,
+        vec![
+            ChaosComponent::corrupt(0.6),
+            ChaosComponent::crash(1.0).window(4, 5),
+            ChaosComponent::transient(1.0, 9).window(14, 15),
+        ],
+    )
+}
+
+/// Run the synthetic online pipeline with `telemetry` at an evaluation
+/// engine width of `threads`.
+fn run_online(threads: usize, telemetry: Telemetry) -> OnlineOutcome {
+    let manifest = synthetic_manifest(UNITS);
+    let table = synthetic_sensitivity(UNITS);
+    let platform = Platform::default_two_device();
+    let env = FaultEnv {
+        base_rate: 0.08,
+        profiles: DeviceFaultProfile::default_two_device(),
+        drift: Vec::new(),
+    };
+    let eval = synthetic_eval_set(BATCH * 4, DIMS.0, DIMS.1, DIMS.2, 10, 42);
+    let cfg = online_cfg();
+    let server = InferenceServer::spawn_with(
+        BackendSpec::Synthetic { manifest: manifest.clone(), exec_cost: Duration::ZERO },
+        DIMS,
+        cfg.supervisor_policy(),
+    )
+    .unwrap();
+    server.set_telemetry(telemetry.clone());
+    let mut ev = PartitionEvaluator::new(
+        &manifest,
+        &platform,
+        env.dev_w_rates(0.0),
+        env.dev_a_rates(0.0),
+        FaultScenario::InputWeight,
+        table.clean_acc,
+        false,
+        DaccMode::SyntheticExact { table: &table, cost: Duration::ZERO },
+    )
+    .with_parallelism(threads)
+    .with_telemetry(telemetry.clone());
+    let mut runner = OnlineRunner {
+        cfg,
+        server: &server,
+        evaluator: &mut ev,
+        clean_acc: table.clean_acc,
+        chaos: chaos(),
+        safe_mapping: Some(Mapping::all_on(1, UNITS)),
+        telemetry,
+    };
+    let out = runner.run(&eval, &env, Mapping::all_on(0, UNITS), |_| {}).unwrap();
+    server.shutdown().unwrap();
+    out
+}
+
+fn run_traced(threads: usize, path: &Path) -> OnlineOutcome {
+    run_online(threads, Telemetry::with_trace(path).expect("trace file opens"))
+}
+
+fn fingerprint(tl: &[TimelinePoint]) -> Vec<(usize, u64, Vec<usize>, bool, bool)> {
+    tl.iter()
+        .map(|p| {
+            (p.tick, p.batch_accuracy.to_bits(), p.mapping.0.clone(), p.reconfigured, p.degraded)
+        })
+        .collect()
+}
+
+/// ISSUE acceptance: same seed + `--trace` => identical JSONL at any
+/// `eval_threads`, and across repeats.
+#[test]
+fn trace_is_bitwise_identical_across_eval_threads_and_repeats() {
+    let paths: Vec<PathBuf> =
+        ["t1", "t2", "t4", "t1_repeat"].iter().map(|n| tmp(n)).collect();
+    let outs = [
+        run_traced(1, &paths[0]),
+        run_traced(2, &paths[1]),
+        run_traced(4, &paths[2]),
+        run_traced(1, &paths[3]),
+    ];
+    // the run must actually exercise the instrumented paths
+    assert!(outs[0].metrics.reconfigurations > 0, "corrupt chaos must trigger θ");
+    assert!(outs[0].metrics.degradations > 0, "the transient burst must degrade");
+    for o in &outs[1..] {
+        assert_eq!(fingerprint(&outs[0].timeline), fingerprint(&o.timeline));
+    }
+
+    let reference = std::fs::read(&paths[0]).unwrap();
+    assert!(!reference.is_empty());
+    for p in &paths[1..] {
+        let bytes = std::fs::read(p).unwrap();
+        assert_eq!(
+            reference,
+            bytes,
+            "DETERMINISM VIOLATION: trace {} differs from {}",
+            p.display(),
+            paths[0].display()
+        );
+    }
+    let text = String::from_utf8(reference).unwrap();
+    assert!(text.contains("\"span\":\"online.reconfig\""), "reconfig spans must be traced");
+    assert!(text.contains("\"kind\":\"degrade_enter\""), "degradation entry must be traced");
+    assert!(text.contains("\"kind\":\"degrade_exit\""), "degradation exit must be traced");
+    assert!(text.contains("\"span\":\"opt.generation\""), "optimizer generations must be traced");
+    assert!(text.contains("\"span\":\"eval.batch\""), "evaluation batches must be traced");
+    assert!(text.contains("\"kind\":\"server_retry\""), "supervision retries must be traced");
+    assert!(text.contains("\"kind\":\"server_respawn\""), "worker respawns must be traced");
+    for p in &paths {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// Every trace line is a self-describing JSON object: schema-stamped,
+/// strictly sequenced from 0, and free of wall-clock fields (wall times
+/// belong to registry histograms only).
+#[test]
+fn trace_lines_are_schema_valid_and_wall_clock_free() {
+    let path = tmp("schema");
+    run_traced(2, &path);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() > online_cfg().ticks, "at least one event per tick plus the header");
+    for (i, line) in lines.iter().enumerate() {
+        let v = json::parse(line).unwrap_or_else(|e| panic!("line {i} is not JSON: {e:#}"));
+        assert_eq!(
+            v.get("schema").and_then(|x| x.as_f64()),
+            Some(TRACE_SCHEMA_VERSION as f64),
+            "line {i} schema"
+        );
+        assert_eq!(v.get("seq").and_then(|x| x.as_f64()), Some(i as f64), "line {i} seq");
+        let kind = v.get("kind").and_then(|x| x.as_str()).expect("every event has a kind");
+        if i == 0 {
+            assert_eq!(kind, "trace_start");
+        }
+        if let Some(fields) = v.as_obj() {
+            for key in fields.keys() {
+                assert!(
+                    !key.ends_with("_ms") && key != "ms" && !key.contains("wall"),
+                    "line {i} carries wall-clock field {key:?}"
+                );
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Attaching telemetry (registry + trace) must not change a single
+/// serving result vs the disabled handle.
+#[test]
+fn telemetry_does_not_perturb_serving_results() {
+    let path = tmp("perturb");
+    let plain = run_online(2, Telemetry::disabled());
+    let traced = run_traced(2, &path);
+    assert_eq!(fingerprint(&plain.timeline), fingerprint(&traced.timeline));
+    assert_eq!(plain.metrics.reconfigurations, traced.metrics.reconfigurations);
+    assert_eq!(plain.metrics.degraded_intervals, traced.metrics.degraded_intervals);
+    assert_eq!(plain.final_mapping, traced.final_mapping);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Registry counters, report-field mirrors, span histograms, and the
+/// Prometheus rendering agree with the run's `Metrics` end to end.
+#[test]
+fn registry_counters_match_run_metrics_end_to_end() {
+    let t = Telemetry::enabled();
+    let out = run_online(2, t.clone());
+    let m = &out.metrics;
+    assert_eq!(t.counter_get("serve_batches_total"), m.batches_served as u64);
+    assert_eq!(t.counter_get("serve_samples_total"), m.samples_served as u64);
+    assert_eq!(t.counter_get("serve_reconfigurations_total"), m.reconfigurations as u64);
+    assert_eq!(t.counter_get("serve_degradations_total"), m.degradations as u64);
+    assert_eq!(t.counter_get("serve_degraded_ticks_total"), m.degraded_ticks as u64);
+    assert_eq!(
+        t.counter_get("serve_degraded_intervals_total"),
+        m.degraded_intervals.len() as u64
+    );
+    assert_eq!(
+        t.counter_get("serve_speculative_discarded_total"),
+        m.speculative_discarded as u64
+    );
+    // the server mirrors its supervision stats live (not via Metrics)
+    assert_eq!(t.counter_get("server_retries_total"), m.retries as u64);
+    assert_eq!(t.counter_get("server_transient_errors_total"), m.transient_errors as u64);
+    assert_eq!(t.counter_get("server_respawns_total"), m.worker_respawns as u64);
+    assert!(t.counter_get("opt_generations_total") > 0, "re-optimizations ran generations");
+    assert!(t.counter_get("eval_batch_calls_total") > 0);
+
+    let snap = t.snapshot().unwrap();
+    assert_eq!(
+        snap.histograms["span_online_tick_ms"].count,
+        online_cfg().ticks as u64,
+        "one online.tick span per tick"
+    );
+    assert_eq!(
+        snap.histograms["span_online_reconfig_ms"].count,
+        m.reconfigurations as u64
+    );
+
+    let prom = t.prometheus().unwrap();
+    assert!(prom.contains(&format!("afare_serve_batches_total {}", m.batches_served)));
+    assert!(prom.contains("afare_span_online_tick_ms_bucket"));
+    assert!(prom.contains("afare_span_online_tick_ms_p95"));
+}
+
+/// The disabled handle never materializes a snapshot, so reports keep
+/// their pre-observability shape (no `telemetry` key) bit for bit.
+#[test]
+fn disabled_handle_yields_no_export() {
+    let out = run_online(1, Telemetry::disabled());
+    assert!(out.metrics.batches_served > 0);
+    let t = Telemetry::disabled();
+    assert!(t.snapshot().is_none());
+    assert!(t.prometheus().is_none());
+}

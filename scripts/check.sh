@@ -1,9 +1,18 @@
 #!/usr/bin/env bash
-# Repo gate: build, tests, and the eval-engine perf section with a
-# monotonicity check on BENCH_eval_engine.json (ROADMAP: keep the
-# 1/2/4-thread trajectory monotone). Run via `make check`.
+# Repo gate: format, build, tests, smoke runs, and the perf sections
+# with a monotonicity check on BENCH_eval_engine.json (ROADMAP: keep the
+# 1/2/4-thread trajectory monotone) plus the telemetry disabled-path
+# overhead gate on BENCH_telemetry_overhead.json (<2%). Run via
+# `make check`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check (format gate) =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "rustfmt unavailable; skipping format gate"
+fi
 
 echo "== cargo build --release =="
 cargo build --release
@@ -21,8 +30,35 @@ fi
 echo "== chaos smoke (resilient serving determinism) =="
 bash scripts/chaos_smoke.sh
 
+echo "== trace smoke (JSONL trace schema + determinism) =="
+bash scripts/trace_smoke.sh
+
 echo "== bench_perf (eval-engine section, fast budgets) =="
 AFARE_BENCH_FAST=1 cargo bench --bench bench_perf
+
+echo "== BENCH_telemetry_overhead.json disabled-path gate =="
+if command -v python3 >/dev/null 2>&1; then
+python3 - <<'EOF'
+import json
+import sys
+
+with open("BENCH_telemetry_overhead.json") as f:
+    doc = json.load(f)
+
+pct = doc["disabled_overhead_pct"]
+threshold = doc["threshold_pct"]
+print(
+    f"  disabled path: {doc['ns_per_disabled_call']:.1f} ns/call x "
+    f"{doc['telemetry_ops_per_run']:.0f} calls/run = {pct:.4f}% "
+    f"(enabled delta {doc['enabled_overhead_pct']:+.2f}%)"
+)
+if not doc.get("pass", False) or pct >= threshold:
+    sys.exit(f"telemetry disabled-path overhead {pct:.4f}% >= {threshold}%")
+print("  telemetry overhead gate: OK")
+EOF
+else
+    echo "python3 unavailable; skipping telemetry overhead gate"
+fi
 
 echo "== BENCH_eval_engine.json monotonicity =="
 if ! command -v python3 >/dev/null 2>&1; then

@@ -1,0 +1,97 @@
+#!/usr/bin/env bash
+# Trace-schema golden gate (`make trace-smoke`): a 60-tick synthetic
+# online run with `--trace` must (a) produce a schema-valid JSONL trace
+# (every line self-describing: schema version, strictly increasing seq,
+# a kind; never a wall-clock field), (b) be bitwise repeat-deterministic
+# — two identical invocations produce identical trace files — and
+# (c) leave the report deterministic once the wall-clock latency
+# summaries and the Prometheus snapshot (histogram sums are wall times)
+# are stripped.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=target/release/afarepart
+if [ ! -x "$BIN" ]; then
+    echo "== building $BIN =="
+    cargo build --release
+fi
+
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+cat > "$TMP/spec.json" <<'EOF'
+{
+  "model": "synthetic-L12",
+  "online": {"ticks": 60, "recv_timeout_ms": 250, "lookahead": 3},
+  "chaos": {"enabled": true}
+}
+EOF
+
+echo "== trace-smoke: run A =="
+"$BIN" online --spec "$TMP/spec.json" --trace "$TMP/a.jsonl" \
+    --format json --out "$TMP/a.json"
+echo "== trace-smoke: run B (same seed; trace must be identical) =="
+"$BIN" online --spec "$TMP/spec.json" --trace "$TMP/b.jsonl" \
+    --format json --out "$TMP/b.json"
+
+echo "== trace-smoke: bitwise repeat determinism =="
+cmp "$TMP/a.jsonl" "$TMP/b.jsonl" \
+    || { echo "trace files differ across identical invocations"; exit 1; }
+echo "  $(wc -l < "$TMP/a.jsonl") events, identical across repeats: OK"
+
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "python3 unavailable; skipping schema validation"
+    exit 0
+fi
+
+echo "== trace-smoke: schema validation =="
+python3 - "$TMP/a.jsonl" <<'EOF'
+import json
+import sys
+
+SCHEMA = 1
+kinds = {}
+with open(sys.argv[1]) as f:
+    lines = [line.rstrip("\n") for line in f]
+
+assert lines, "trace file is empty"
+for i, line in enumerate(lines):
+    event = json.loads(line)  # every line must be a standalone JSON object
+    assert isinstance(event, dict), f"line {i} is not an object"
+    assert event.get("schema") == SCHEMA, f"line {i}: schema {event.get('schema')!r}"
+    assert event.get("seq") == i, f"line {i}: seq {event.get('seq')!r} (must equal line index)"
+    kind = event.get("kind")
+    assert isinstance(kind, str) and kind, f"line {i}: missing kind"
+    kinds[kind] = kinds.get(kind, 0) + 1
+    for key in event:
+        assert not key.endswith("_ms") and "wall" not in key, (
+            f"line {i}: wall-clock field {key!r} breaks trace determinism"
+        )
+
+assert lines and json.loads(lines[0])["kind"] == "trace_start", "missing trace_start header"
+spans = {json.loads(l).get("span") for l in lines} - {None}
+assert "online.tick" in spans, f"no online.tick spans in {sorted(spans)}"
+assert kinds.get("span", 0) >= 60, "fewer span events than ticks"
+print("  kinds:", ", ".join(f"{k}={n}" for k, n in sorted(kinds.items())))
+print("  spans:", ", ".join(sorted(spans)))
+print("  schema-valid, wall-clock-free: OK")
+EOF
+
+echo "== trace-smoke: report determinism (wall-clock + snapshot stripped) =="
+python3 - "$TMP/a.json" "$TMP/b.json" <<'EOF'
+import json
+import sys
+
+a, b = (json.load(open(p)) for p in sys.argv[1:3])
+assert "telemetry" in a, "--trace must fold a Prometheus snapshot into the report"
+assert "afare_serve_batches_total" in a["telemetry"], "snapshot missing serving counters"
+# Wall-clock latency summaries and the snapshot (whose histogram sums are
+# wall times) are the only nondeterministic fields.
+for doc in (a, b):
+    doc.pop("exec_mean_ms", None)
+    doc.pop("exec_p95_ms", None)
+    doc.pop("telemetry", None)
+assert a == b, "traced run is not deterministic across identical invocations"
+print("  deterministic across repeats: OK")
+EOF
+echo "trace-smoke: OK"
