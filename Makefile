@@ -5,11 +5,13 @@
 #                     default failure stack and be bitwise-deterministic
 #   make trace-smoke  traced synthetic online run: the JSONL event trace
 #                     must be schema-valid and bitwise repeat-deterministic
+#   make campaign-smoke  3x2 synthetic campaign on the parallel cell
+#                     scheduler: report bitwise identical at 1 vs 4 workers
 #   make artifacts    regenerate the compiled model artifacts (needs the
 #                     python/JAX build-time stack; the rust binary only
 #                     consumes the result)
 
-.PHONY: check chaos-smoke trace-smoke artifacts
+.PHONY: check chaos-smoke trace-smoke campaign-smoke artifacts
 
 check:
 	bash scripts/check.sh
@@ -19,6 +21,9 @@ chaos-smoke:
 
 trace-smoke:
 	bash scripts/trace_smoke.sh
+
+campaign-smoke:
+	bash scripts/campaign_smoke.sh
 
 artifacts:
 	python3 python/compile/aot.py

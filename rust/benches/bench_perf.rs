@@ -5,6 +5,13 @@
 //!   exact-cost-shaped ΔAcc backend, plus the surrogate fast path —
 //!   results land in `BENCH_eval_engine.json` so future PRs can track
 //!   the perf trajectory. Asserts thread-count determinism as it goes.
+//! * **Campaign scheduler** (artifact-free): cells/second of a 3×2
+//!   synthetic campaign at 1, 2 and 4 cell workers with an exact-shaped
+//!   per-eval cost — lands in `BENCH_campaign.json`; asserts the report
+//!   is bitwise identical across worker counts as it goes.
+//! * **NSGA-II variation**: offspring/second of the extracted
+//!   tournament+crossover+mutation round at pop 128/512/1024 —
+//!   `BENCH_variation.json`.
 //! * PJRT batched execution latency (clean + faulty) per model.
 //! * NSGA-II optimizer throughput on the analytical objectives (no PJRT).
 //! * ΔAcc cache effect: NSGA-II wall time with and without memoization.
@@ -26,11 +33,12 @@ use afarepart::coordinator::offline::{optimize_partitions, optimize_partitions_c
 use afarepart::experiment::Experiment;
 use afarepart::faults::{FaultScenario, RateVectors};
 use afarepart::hw::Platform;
-use afarepart::nsga2::Nsga2Config;
+use afarepart::nsga2::{Individual, Nsga2, Nsga2Config};
 use afarepart::obs::Telemetry;
 use afarepart::partition::{DaccMode, Mapping, PartitionEvaluator, SensitivityTable};
+use afarepart::spec::campaign::{run_campaign_with, CampaignOptions, CampaignSpec};
 use afarepart::util::fmt::Table;
-use afarepart::util::json::{arr, num, obj, s, Value};
+use afarepart::util::json::{arr, num, obj, s, to_string as json_str, Value};
 use afarepart::util::prng::Rng;
 
 /// One timed offline optimization at a given engine thread count.
@@ -267,6 +275,141 @@ fn bench_telemetry_overhead(fast: bool) {
     assert!(pass, "telemetry disabled-path overhead {disabled_overhead_pct:.4}% >= {threshold_pct}%");
 }
 
+/// Campaign scheduler throughput and cross-worker determinism
+/// (ISSUE acceptance: >=2x at 4 workers, bitwise-identical report).
+fn bench_campaign(fast: bool) {
+    println!("\n-- campaign scheduler (3x2 synthetic grid, no artifacts needed) --");
+    let (pop, gens) = if fast { (8, 2) } else { (12, 3) };
+    let base = CampaignSpec::from_json_str(&format!(
+        r#"{{
+            "base": {{"eval_threads": 1,
+                      "optimizer": {{"pop_size": {pop}, "generations": {gens}}}}},
+            "grid": {{"models": ["synthetic-L8"],
+                      "fault_rates": [0.1, 0.2, 0.4],
+                      "scenarios": ["w", "iw"]}}
+        }}"#
+    ))
+    .expect("static campaign spec parses");
+    // Exact-call-shaped cost per unique backend evaluation, so the bench
+    // measures cell scheduling rather than surrogate arithmetic. The six
+    // cells have pairwise-distinct rate vectors, so cross-cell sharing
+    // does not blur the worker-count comparison.
+    let opts = CampaignOptions {
+        synthetic_cost: Duration::from_micros(if fast { 1000 } else { 2000 }),
+        ..CampaignOptions::default()
+    };
+
+    let worker_counts = [1usize, 2, 4];
+    let mut reference: Option<String> = None;
+    let mut rows = Vec::new();
+    for &w in &worker_counts {
+        let mut spec = base.clone();
+        spec.base.campaign_workers = w;
+        let sw = Stopwatch::start();
+        let mut report = run_campaign_with(&spec, &opts, |_, _, _| {})
+            .expect("synthetic campaign runs");
+        let wall_ms = sw.ms();
+        let num_cells = report.cells.len();
+        // wall_ms is the single nondeterministic report field
+        report.wall_ms = 0.0;
+        let fp = json_str(&report.to_json());
+        match &reference {
+            None => reference = Some(fp),
+            Some(r) => assert_eq!(
+                r, &fp,
+                "DETERMINISM VIOLATION: report at {w} workers differs from 1 worker"
+            ),
+        }
+        rows.push((w, wall_ms, num_cells as f64 / (wall_ms / 1e3)));
+    }
+    let wall_1w = rows[0].1;
+
+    let mut t = Table::new(&["workers", "wall ms", "cells/s", "speedup"]);
+    let mut worker_objs = Vec::new();
+    for (w, wall_ms, cells_per_s) in &rows {
+        let speedup = wall_1w / wall_ms;
+        t.row(vec![
+            w.to_string(),
+            format!("{wall_ms:.1}"),
+            format!("{cells_per_s:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+        worker_objs.push(obj(vec![
+            ("workers", num(*w as f64)),
+            ("wall_ms", num(*wall_ms)),
+            ("cells_per_s", num(*cells_per_s)),
+            ("speedup_vs_1w", num(speedup)),
+        ]));
+    }
+    print!("{}", t.render());
+    println!("reports identical across all worker counts (bitwise) ✓");
+    let speedup_4w = wall_1w / rows.last().unwrap().1;
+    println!("speedup at 4 workers vs serial: {speedup_4w:.2}x");
+
+    let doc: Value = obj(vec![
+        ("bench", s("campaign")),
+        ("num_cells", num(6.0)),
+        ("pop_size", num(pop as f64)),
+        ("generations", num(gens as f64)),
+        ("synthetic_cost_us", num(opts.synthetic_cost.as_micros() as f64)),
+        ("workers", arr(worker_objs)),
+        ("speedup_4w_vs_1w", num(speedup_4w)),
+        ("deterministic_across_workers", Value::Bool(true)),
+    ]);
+    write_json_result("BENCH_campaign.json", &doc);
+}
+
+/// NSGA-II variation throughput: the extracted tournament + two-point
+/// crossover + per-gene mutation round, isolated from evaluation.
+fn bench_variation(fast: bool) {
+    println!("\n-- NSGA-II variation (tournament + crossover + mutation) --");
+    let genome_len = 24;
+    let alphabet = 3;
+    let rounds = if fast { 20 } else { 100 };
+    let mut t = Table::new(&["pop", "ms/round", "offspring/s"]);
+    let mut pop_objs = Vec::new();
+    for pop_size in [128usize, 512, 1024] {
+        // ranked parent pool with a plausible rank/crowding structure
+        let mut rng = Rng::new(0xC0FFEE);
+        let parents: Vec<Individual> = (0..pop_size)
+            .map(|i| Individual {
+                genome: (0..genome_len).map(|_| rng.below(alphabet)).collect(),
+                objectives: vec![i as f64, (pop_size - i) as f64],
+                rank: i % 5,
+                crowding: if i % 7 == 0 { f64::INFINITY } else { (i % 11) as f64 },
+            })
+            .collect();
+        let mut opt = Nsga2::new(Nsga2Config { pop_size, ..Default::default() });
+        std::hint::black_box(opt.produce_offspring(&parents, alphabet)); // warm-up
+        let sw = Stopwatch::start();
+        for _ in 0..rounds {
+            std::hint::black_box(opt.produce_offspring(&parents, alphabet));
+        }
+        let wall_ms = sw.ms();
+        let ms_per_round = wall_ms / rounds as f64;
+        let offspring_per_s = (pop_size * rounds) as f64 / (wall_ms / 1e3);
+        t.row(vec![
+            pop_size.to_string(),
+            format!("{ms_per_round:.3}"),
+            format!("{offspring_per_s:.0}"),
+        ]);
+        pop_objs.push(obj(vec![
+            ("pop_size", num(pop_size as f64)),
+            ("ms_per_round", num(ms_per_round)),
+            ("offspring_per_s", num(offspring_per_s)),
+        ]));
+    }
+    print!("{}", t.render());
+    let doc: Value = obj(vec![
+        ("bench", s("variation")),
+        ("genome_len", num(genome_len as f64)),
+        ("alphabet", num(alphabet as f64)),
+        ("rounds", num(rounds as f64)),
+        ("pops", arr(pop_objs)),
+    ]);
+    write_json_result("BENCH_variation.json", &doc);
+}
+
 fn bench_pjrt_sections(fast: bool) -> anyhow::Result<()> {
     let (mut cfg, _) = bench_budget(fast);
     let mut report = BenchReport::new();
@@ -370,6 +513,8 @@ fn main() -> anyhow::Result<()> {
 
     bench_eval_engine(fast);
     bench_telemetry_overhead(fast);
+    bench_campaign(fast);
+    bench_variation(fast);
 
     if let Err(e) = bench_pjrt_sections(fast) {
         println!("\nskipping PJRT-backed sections: {e:#}");

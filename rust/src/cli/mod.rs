@@ -107,6 +107,17 @@ mod tests {
     }
 
     #[test]
+    fn hyphenated_value_keys_parse() {
+        // campaign scheduler knobs ride the generic `--key value` path
+        let a = Args::parse(
+            &sv(&["campaign", "--campaign-workers", "4", "--eval-threads=2"]),
+            &[],
+        );
+        assert_eq!(a.get_usize("campaign-workers", 0), 4);
+        assert_eq!(a.get_usize("eval-threads", 0), 2);
+    }
+
+    #[test]
     fn typed_getters_fall_back() {
         let a = Args::parse(&sv(&["x", "--n", "abc"]), &[]);
         assert_eq!(a.get_usize("n", 7), 7);

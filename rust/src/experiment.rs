@@ -35,6 +35,14 @@ pub struct Experiment {
 }
 
 impl Experiment {
+    /// The canonical fault-rate grid for sensitivity profiling. Every
+    /// caller that measures a [`SensitivityTable`] for surrogate ΔAcc
+    /// (the CLI's `--surrogate` path, the campaign preload, benches)
+    /// uses this one grid: the cross-cell shared cache fingerprints the
+    /// table's contents into its context key, so two runs only share
+    /// ΔAcc results if they profiled on the same grid.
+    pub const SENSITIVITY_RATE_GRID: [f32; 4] = [0.05, 0.1, 0.2, 0.4];
+
     /// Start a declarative builder over the default spec — the
     /// replacement for mutate-an-`ExperimentConfig`-then-`load`.
     ///

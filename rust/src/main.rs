@@ -37,7 +37,7 @@ use afarepart::faults::RateVectors;
 use afarepart::model::Manifest;
 use afarepart::obs::Telemetry;
 use afarepart::partition::{DaccMode, EngineConfig, Mapping, PartitionEvaluator};
-use afarepart::spec::campaign::run_campaign;
+use afarepart::spec::campaign::{run_campaign_with, CampaignOptions};
 use afarepart::spec::outcome::{
     emit_json, CompareReport, CompareRow, InfoReport, InfoUnit, OfflineReport, OnlineReport,
     OutputFormat, SweepReport, SweepUnit,
@@ -102,6 +102,8 @@ fn print_help() {
            --pop <n> --gens <n>     NSGA-II budget (default 60/60)\n\
            --eval-limit <n>         eval samples for exact dAcc (default 256)\n\
            --eval-threads <n>       ΔAcc eval engine workers (0 = auto; same results at any n)\n\
+           --campaign-workers <n>   campaign cell workers (0 = auto budget split;\n\
+                                    report is identical at any n)\n\
            --surrogate              use the layer-sensitivity surrogate\n\
            --link-cost              include link costs in objectives\n\
            --policy <p>             P* selection: min-dacc-within-budget | min-dacc | knee\n\
@@ -170,7 +172,7 @@ fn run_offline_verbose(
 fn load_experiment(spec: &ExperimentSpec, telemetry: &Telemetry) -> Result<Experiment> {
     let mut exp = Experiment::from_spec(spec)?;
     if spec.surrogate {
-        exp.measure_sensitivity_with(&[0.05, 0.1, 0.2, 0.4], telemetry)?;
+        exp.measure_sensitivity_with(&Experiment::SENSITIVITY_RATE_GRID, telemetry)?;
     }
     Ok(exp)
 }
@@ -692,8 +694,10 @@ fn cmd_campaign(args: &Args, format: OutputFormat) -> Result<()> {
             cspec.num_cells(),
         );
     }
+    let telemetry = cspec.base.telemetry.build()?;
+    let opts = CampaignOptions { telemetry: telemetry.clone(), ..CampaignOptions::default() };
     let quiet = format.is_json();
-    let report = run_campaign(&cspec, |i, total, cell| {
+    let report = run_campaign_with(&cspec, &opts, |i, total, cell| {
         if !quiet {
             println!(
                 "  [{}/{}] {} FR={} {} drift={}: P*={} dAcc={} ({} evals)",
@@ -734,6 +738,15 @@ fn cmd_campaign(args: &Args, format: OutputFormat) -> Result<()> {
             report.wall_ms / 1e3,
             report.engine_threads,
         );
+        for m in &report.cache_sharing {
+            if m.saved_backend_evals > 0 {
+                println!(
+                    "  {}: cross-cell cache saved {} of {} backend evals ({} unique keys)",
+                    m.model, m.saved_backend_evals, m.private_misses, m.unique_keys,
+                );
+            }
+        }
     }
+    telemetry.flush()?;
     emit(format, args, &report.to_json())
 }

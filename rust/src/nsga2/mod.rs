@@ -222,6 +222,29 @@ impl Nsga2 {
         }
     }
 
+    /// One full round of variation: tournament-select parents from
+    /// `pop` (which must already be ranked) and produce `pop_size`
+    /// offspring genomes via two-point crossover + per-gene mutation.
+    /// PRNG consumption order is identical to the inline loop `run`
+    /// used historically, so extracting it is behavior-preserving; it
+    /// is `pub` so `bench_perf` can profile variation throughput in
+    /// isolation (`BENCH_variation.json`).
+    pub fn produce_offspring(&mut self, pop: &[Individual], alphabet: usize) -> Vec<Vec<usize>> {
+        let mut offspring_genomes = Vec::with_capacity(self.cfg.pop_size);
+        while offspring_genomes.len() < self.cfg.pop_size {
+            let pa = self.tournament(pop);
+            let pb = self.tournament(pop);
+            let (mut c, mut d) = self.crossover(&pa.genome, &pb.genome);
+            self.mutate(&mut c, alphabet);
+            self.mutate(&mut d, alphabet);
+            offspring_genomes.push(c);
+            if offspring_genomes.len() < self.cfg.pop_size {
+                offspring_genomes.push(d);
+            }
+        }
+        offspring_genomes
+    }
+
     /// Run the full loop; returns the final first front (Pareto set).
     pub fn run<P: Problem>(
         &mut self,
@@ -256,20 +279,8 @@ impl Nsga2 {
             gen_span.note("generation", num(generation as f64));
             // variation first: collect the full offspring generation so it
             // can be evaluated as one batch. Parents are borrowed from the
-            // population (cloned exactly once, inside crossover); the PRNG
-            // consumption order is identical to the legacy inline loop.
-            let mut offspring_genomes = Vec::with_capacity(self.cfg.pop_size);
-            while offspring_genomes.len() < self.cfg.pop_size {
-                let pa = self.tournament(&pop);
-                let pb = self.tournament(&pop);
-                let (mut c, mut d) = self.crossover(&pa.genome, &pb.genome);
-                self.mutate(&mut c, alphabet);
-                self.mutate(&mut d, alphabet);
-                offspring_genomes.push(c);
-                if offspring_genomes.len() < self.cfg.pop_size {
-                    offspring_genomes.push(d);
-                }
-            }
+            // population (cloned exactly once, inside crossover).
+            let offspring_genomes = self.produce_offspring(&pop, alphabet);
             let offspring = self.evaluate_all(problem, offspring_genomes);
 
             // elitist environmental selection over parents + offspring
@@ -389,6 +400,32 @@ mod tests {
         });
         let front = opt.run(&mut SumMin, |_| {});
         assert!(front.iter().any(|i| i.objectives[0] == 0.0));
+    }
+
+    #[test]
+    fn produce_offspring_is_well_formed_and_seeded() {
+        // ranked parent pool of all-zero / all-one genomes
+        let mk_pop = || {
+            let mut pop: Vec<Individual> = (0..8)
+                .map(|i| Individual {
+                    genome: vec![usize::from(i % 2 == 0); 6],
+                    objectives: vec![i as f64],
+                    rank: 0,
+                    crowding: 0.0,
+                })
+                .collect();
+            Nsga2::rank_population(&mut pop);
+            pop
+        };
+        let gen = |seed| {
+            let mut opt = Nsga2::new(Nsga2Config { pop_size: 10, seed, ..Default::default() });
+            opt.produce_offspring(&mk_pop(), 2)
+        };
+        let kids = gen(3);
+        assert_eq!(kids.len(), 10);
+        assert!(kids.iter().all(|g| g.len() == 6 && g.iter().all(|&x| x < 2)));
+        // deterministic in the config seed
+        assert_eq!(gen(3), gen(3));
     }
 
     #[test]

@@ -138,6 +138,24 @@ impl Telemetry {
         Span::new(self, path)
     }
 
+    /// Fold an externally-measured span into the registry and trace as
+    /// if a [`Span`] guard had closed here: record `ms` into the
+    /// `span_<path>_ms` histogram and emit one `span` trace event with
+    /// the given logical fields. This is how coordinators surface work
+    /// that was *timed on a fan-out worker* without breaking the
+    /// determinism contract — the worker measures, the coordinating
+    /// thread emits in logical order (the campaign scheduler uses it
+    /// for `campaign.cell`). `fields` must carry only deterministic
+    /// logical coordinates, never wall-clock values.
+    pub fn emit_span(&self, path: &str, ms: f64, fields: &[(&str, Value)]) {
+        if !self.is_enabled() {
+            return;
+        }
+        let metric = format!("span_{}_ms", path.replace('.', "_"));
+        self.observe_ms(&metric, ms);
+        self.trace_event("span", Some(path), fields);
+    }
+
     /// Emit one trace event with deterministic logical fields. No-op
     /// without an attached trace file. Callers must only invoke this
     /// from coordinating threads, in logical order (module doc).
@@ -203,6 +221,16 @@ mod tests {
         let text = t.prometheus().unwrap();
         assert!(text.contains("afare_evals_total 7"));
         assert!(text.contains("afare_front_size 9"));
+    }
+
+    #[test]
+    fn emit_span_matches_guard_span_shape() {
+        let t = Telemetry::enabled();
+        t.emit_span("campaign.cell", 3.0, &[("cell", num(0.0))]);
+        let snap = t.snapshot().expect("enabled telemetry has a snapshot");
+        assert_eq!(snap.histograms["span_campaign_cell_ms"].count, 1);
+        // disabled handle: fully inert
+        Telemetry::disabled().emit_span("campaign.cell", 1.0, &[]);
     }
 
     #[test]

@@ -19,6 +19,21 @@
 //! wrong under new rates). *Lifetime* counters accumulate across epochs
 //! so long-running serving loops can report cumulative cache efficiency
 //! instead of silently zeroing history — see [`CacheRollover`].
+//!
+//! When one cache is shared across campaign cells (PR 5), entries carry
+//! an extra **context** dimension: ΔAcc depends on the backend's
+//! non-rate configuration too (exact-eval seed and batch budget, the
+//! identity of a sensitivity table, the clean-accuracy floor), so cells
+//! that agree on rates but differ in backend context must not exchange
+//! values. Callers fold everything rate-independent into a `u64` context
+//! tag ([`probe_ctx`](DaccCache::probe_ctx) /
+//! [`put_key_ctx`](DaccCache::put_key_ctx)); the ctx-less methods keep
+//! their old meaning as context 0. Stat scopes split along the same
+//! line: a per-cell private cache owns the deterministic *epoch*
+//! numbers, while the shared per-model cache accumulates *lifetime*
+//! totals exactly once per lookup — summing per-cell lifetimes would
+//! double-count the shared history (see
+//! `shared_cache_lifetime_counts_once` in the evaluator tests).
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -83,11 +98,17 @@ fn unpack(word: u64) -> CacheStats {
     CacheStats { hits: (word >> 32) as usize, misses: (word & 0xFFFF_FFFF) as usize }
 }
 
+/// One stripe of the store: context tag → (quantized rate key → ΔAcc
+/// accuracy). Nesting keeps the hot probe path allocation-free — a
+/// composite `(u64, Vec<u16>)` key would force an owned tuple per
+/// lookup, while the inner map still borrows `&[u16]`.
+type Shard = HashMap<u64, HashMap<Vec<u16>, f64>>;
+
 /// Exact memo cache for fault-injected accuracy. Thread-safe: all
 /// operations take `&self`.
 #[derive(Debug)]
 pub struct DaccCache {
-    shards: Vec<Mutex<HashMap<Vec<u16>, f64>>>,
+    shards: Vec<Mutex<Shard>>,
     /// Epoch (hits, misses), packed; reset by `clear`.
     epoch: AtomicU64,
     /// Lifetime (hits, misses), packed; never reset.
@@ -109,11 +130,12 @@ impl DaccCache {
         }
     }
 
-    fn shard(&self, key: &[u16]) -> &Mutex<HashMap<Vec<u16>, f64>> {
+    fn shard(&self, ctx: u64, key: &[u16]) -> &Mutex<Shard> {
         // DefaultHasher::new() is deterministic (fixed keys), unlike a
         // HashMap's per-instance RandomState — shard choice is stable
         // across runs, though nothing observable depends on it.
         let mut h = DefaultHasher::new();
+        ctx.hash(&mut h);
         key.hash(&mut h);
         &self.shards[(h.finish() as usize) % self.shards.len()]
     }
@@ -121,9 +143,18 @@ impl DaccCache {
     /// Raw lookup by quantized key with **no** statistics side effects.
     /// The batch engine uses this so it can attribute hits/misses itself
     /// (a batch-deduplicated request is a hit even though the store
-    /// doesn't hold the value yet).
+    /// doesn't hold the value yet). Context 0 — the single-evaluator
+    /// keyspace.
     pub fn probe(&self, key: &[u16]) -> Option<f64> {
-        self.shard(key).lock().unwrap().get(key).copied()
+        self.probe_ctx(0, key)
+    }
+
+    /// Raw lookup in an explicit context keyspace; no statistics side
+    /// effects. Entries from different contexts never alias even when
+    /// their rate keys are identical.
+    pub fn probe_ctx(&self, ctx: u64, key: &[u16]) -> Option<f64> {
+        let shard = self.shard(ctx, key).lock().unwrap();
+        shard.get(&ctx).and_then(|m| m.get(key)).copied()
     }
 
     /// Counted lookup: records a hit or a miss (both scopes).
@@ -145,8 +176,14 @@ impl DaccCache {
         self.put_key(rates.cache_key(), acc);
     }
 
+    /// Insert into context 0 — the single-evaluator keyspace.
     pub fn put_key(&self, key: Vec<u16>, acc: f64) {
-        self.shard(&key).lock().unwrap().insert(key, acc);
+        self.put_key_ctx(0, key, acc);
+    }
+
+    /// Insert into an explicit context keyspace.
+    pub fn put_key_ctx(&self, ctx: u64, key: Vec<u16>, acc: f64) {
+        self.shard(ctx, &key).lock().unwrap().entry(ctx).or_default().insert(key, acc);
     }
 
     /// Attribute a whole batch's lookups in one atomic step per scope:
@@ -171,12 +208,16 @@ impl DaccCache {
         self.record_batch(0, n);
     }
 
+    /// Distinct entries across every context keyspace.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().values().map(HashMap::len).sum::<usize>())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
+        self.shards.iter().all(|s| s.lock().unwrap().values().all(HashMap::is_empty))
     }
 
     /// Epoch hits (since the last clear).
@@ -216,7 +257,7 @@ impl DaccCache {
         let mut entries_dropped = 0;
         for shard in &self.shards {
             let mut map = shard.lock().unwrap();
-            entries_dropped += map.len();
+            entries_dropped += map.values().map(HashMap::len).sum::<usize>();
             map.clear();
         }
         CacheRollover { ended_epoch, lifetime, entries_dropped }
@@ -282,6 +323,27 @@ mod tests {
         assert_eq!(c.probe(&rv(0.2, 0.1).cache_key()), Some(0.9));
         assert_eq!(c.probe(&rv(0.4, 0.1).cache_key()), None);
         assert_eq!(c.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn contexts_are_isolated_keyspaces() {
+        let c = DaccCache::new();
+        let key = rv(0.2, 0.1).cache_key();
+        c.put_key_ctx(7, key.clone(), 0.91);
+        c.put_key_ctx(9, key.clone(), 0.33);
+        // Same rate key, three different answers depending on context.
+        assert_eq!(c.probe_ctx(7, &key), Some(0.91));
+        assert_eq!(c.probe_ctx(9, &key), Some(0.33));
+        assert_eq!(c.probe_ctx(8, &key), None);
+        // The ctx-less API is exactly context 0.
+        assert_eq!(c.probe(&key), None);
+        c.put_key(key.clone(), 0.5);
+        assert_eq!(c.probe_ctx(0, &key), Some(0.5));
+        assert_eq!(c.len(), 3);
+        let rollover = c.clear();
+        assert_eq!(rollover.entries_dropped, 3);
+        assert!(c.is_empty());
+        assert_eq!(c.probe_ctx(7, &key), None);
     }
 
     #[test]

@@ -108,24 +108,48 @@ impl DaccBackend<'_> {
     }
 }
 
+/// A second-level, context-keyed view of a [`DaccCache`] shared across
+/// campaign cells of the same model. `ctx` folds every rate-independent
+/// backend parameter (exact seed/batch budget, sensitivity-table
+/// fingerprint, clean-accuracy floor) so cells only exchange values they
+/// would have computed identically.
+#[derive(Clone, Copy)]
+pub(crate) struct SharedCache<'a> {
+    pub cache: &'a DaccCache,
+    pub ctx: u64,
+}
+
 /// Result of one batched ΔAcc evaluation.
 pub(crate) struct BatchOutcome {
     /// Faulty accuracy per request, in submission order.
     pub accs: Vec<f64>,
-    /// Unique keys that had to be evaluated by the backend.
+    /// Unique keys this evaluator's private cache did not hold. This is
+    /// the *deterministic* miss count — it does not depend on what other
+    /// cells have already published to a shared cache.
     pub unique_misses: usize,
+    /// Unique keys actually sent to the backend (`unique_misses` minus
+    /// the shared-cache answers). Schedule-dependent under sharing.
+    pub backend_evals: usize,
+    /// Unique misses answered by the shared cross-cell cache.
+    pub shared_hits: usize,
 }
 
 /// Evaluate faulty accuracy for a batch of rate vectors: cache lookup,
-/// in-batch dedup, parallel miss fan-out, order-preserving write-back.
+/// in-batch dedup, shared-cache (L2) probe, parallel miss fan-out,
+/// order-preserving write-back.
 ///
 /// Statistics semantics (see ISSUE satellite): a request answered by the
-/// cache is a hit; the *first* request for an uncached key is a miss; any
-/// further request for that same key inside the batch is a dedup hit and
-/// counts as a hit.
+/// private cache is a hit; the *first* request for an uncached key is a
+/// miss; any further request for that same key inside the batch is a
+/// dedup hit and counts as a hit. The optional `shared` cache answers
+/// private misses without a backend call, but never changes the private
+/// hit/miss attribution — per-cell stats stay deterministic at any
+/// campaign schedule; only `backend_evals`/`shared_hits` (and the shared
+/// cache's own lifetime counters) reflect cross-cell reuse.
 pub(crate) fn faulty_accuracy_batch(
     backend: DaccBackend<'_>,
     cache: &DaccCache,
+    shared: Option<SharedCache<'_>>,
     cfg: EngineConfig,
     rates: &[RateVectors],
 ) -> Result<BatchOutcome> {
@@ -165,20 +189,41 @@ pub(crate) fn faulty_accuracy_batch(
     // readers (telemetry snapshots) see this batch all-or-nothing
     cache.record_batch(cache_hits + dedup_hits, miss_keys.len());
 
-    // evaluate the unique misses — parallel when it pays for itself
+    // second-level probe: private misses another cell already evaluated
+    // (same context) need no backend call
     let m = miss_rates.len();
     let mut miss_vals = vec![0.0f64; m];
-    let workers = cfg.threads.min(m).max(1);
-    if workers <= 1 || m < backend.min_parallel_misses() {
-        for (v, &r) in miss_vals.iter_mut().zip(&miss_rates) {
+    let mut residual: Vec<usize> = Vec::with_capacity(m);
+    let mut shared_hits = 0usize;
+    if let Some(sh) = shared {
+        for (slot, key) in miss_keys.iter().enumerate() {
+            match sh.cache.probe_ctx(sh.ctx, key) {
+                Some(v) => {
+                    miss_vals[slot] = v;
+                    shared_hits += 1;
+                }
+                None => residual.push(slot),
+            }
+        }
+    } else {
+        residual.extend(0..m);
+    }
+
+    // evaluate the residual misses — parallel when it pays for itself
+    let e = residual.len();
+    let res_rates: Vec<&RateVectors> = residual.iter().map(|&slot| miss_rates[slot]).collect();
+    let mut res_vals = vec![0.0f64; e];
+    let workers = cfg.threads.min(e).max(1);
+    if workers <= 1 || e < backend.min_parallel_misses() {
+        for (v, &r) in res_vals.iter_mut().zip(&res_rates) {
             *v = backend.eval(r)?;
         }
     } else {
-        let chunk = (m + workers - 1) / workers;
+        let chunk = (e + workers - 1) / workers;
         let mut worker_results: Vec<Result<()>> = Vec::with_capacity(workers);
         std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(workers);
-            for (vals, rs) in miss_vals.chunks_mut(chunk).zip(miss_rates.chunks(chunk)) {
+            for (vals, rs) in res_vals.chunks_mut(chunk).zip(res_rates.chunks(chunk)) {
                 handles.push(s.spawn(move || -> Result<()> {
                     for (v, &r) in vals.iter_mut().zip(rs) {
                         *v = backend.eval(r)?;
@@ -194,10 +239,29 @@ pub(crate) fn faulty_accuracy_batch(
             r?;
         }
     }
+    for (&slot, &v) in residual.iter().zip(&res_vals) {
+        miss_vals[slot] = v;
+    }
 
-    // publish to the cache, then resolve the deferred requests in
-    // submission order
-    for (key, &v) in miss_keys.into_iter().zip(&miss_vals) {
+    // The shared cache's own counters are the per-model lifetime truth:
+    // exactly one attribution per private miss, so aggregating it never
+    // double-counts lookups the way summing per-cell lifetimes would.
+    if let Some(sh) = shared {
+        sh.cache.record_batch(shared_hits, e);
+    }
+
+    // publish to the caches, then resolve the deferred requests in
+    // submission order. The private cache learns every miss value; the
+    // shared cache learns only what the backend just computed (its L2
+    // hits are already present).
+    let mut evaluated = residual.iter().copied().peekable();
+    for (slot, (key, &v)) in miss_keys.into_iter().zip(&miss_vals).enumerate() {
+        if let Some(sh) = shared {
+            if evaluated.peek() == Some(&slot) {
+                evaluated.next();
+                sh.cache.put_key_ctx(sh.ctx, key.clone(), v);
+            }
+        }
         cache.put_key(key, v);
     }
     for (&i, &slot) in assign_idx.iter().zip(&assign) {
@@ -207,12 +271,15 @@ pub(crate) fn faulty_accuracy_batch(
     Ok(BatchOutcome {
         accs: accs.into_iter().map(|v| v.expect("unresolved batch slot")).collect(),
         unique_misses: m,
+        backend_evals: e,
+        shared_hits,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::partition::cache::CacheStats;
 
     fn table() -> SensitivityTable {
         SensitivityTable {
@@ -235,6 +302,7 @@ mod tests {
         let out = faulty_accuracy_batch(
             DaccBackend::Surrogate { table: &t },
             &cache,
+            None,
             EngineConfig::default(),
             &reqs,
         )
@@ -251,6 +319,7 @@ mod tests {
         let out2 = faulty_accuracy_batch(
             DaccBackend::Surrogate { table: &t },
             &cache,
+            None,
             EngineConfig::default(),
             &reqs,
         )
@@ -268,6 +337,7 @@ mod tests {
         let serial = faulty_accuracy_batch(
             DaccBackend::Synthetic { table: &t, cost: Duration::ZERO },
             &DaccCache::new(),
+            None,
             EngineConfig::with_threads(1),
             &reqs,
         )
@@ -275,6 +345,7 @@ mod tests {
         let parallel = faulty_accuracy_batch(
             DaccBackend::Synthetic { table: &t, cost: Duration::ZERO },
             &DaccCache::new(),
+            None,
             EngineConfig::with_threads(4),
             &reqs,
         )
@@ -284,11 +355,66 @@ mod tests {
     }
 
     #[test]
+    fn shared_cache_answers_other_cells_misses() {
+        let t = table();
+        let shared = DaccCache::new();
+        let reqs = vec![rv(0.2, 0.0), rv(0.4, 0.0), rv(0.2, 0.0)];
+
+        // Cell A: cold private cache, cold shared cache — every unique
+        // key goes to the backend and is published to both levels.
+        let cell_a = DaccCache::new();
+        let a = faulty_accuracy_batch(
+            DaccBackend::Surrogate { table: &t },
+            &cell_a,
+            Some(SharedCache { cache: &shared, ctx: 42 }),
+            EngineConfig::default(),
+            &reqs,
+        )
+        .unwrap();
+        assert_eq!((a.unique_misses, a.backend_evals, a.shared_hits), (2, 2, 0));
+        assert_eq!(shared.len(), 2);
+
+        // Cell B: cold private cache, warm shared cache — same private
+        // miss attribution (deterministic), zero backend calls.
+        let cell_b = DaccCache::new();
+        let b = faulty_accuracy_batch(
+            DaccBackend::Surrogate { table: &t },
+            &cell_b,
+            Some(SharedCache { cache: &shared, ctx: 42 }),
+            EngineConfig::default(),
+            &reqs,
+        )
+        .unwrap();
+        assert_eq!(b.accs, a.accs);
+        assert_eq!((b.unique_misses, b.backend_evals, b.shared_hits), (2, 0, 2));
+        // private per-cell stats are identical for A and B: 1 dedup hit,
+        // 2 misses each, regardless of what the shared cache answered
+        assert_eq!((cell_a.hits(), cell_a.misses()), (1, 2));
+        assert_eq!((cell_b.hits(), cell_b.misses()), (1, 2));
+        // the shared cache's own counters see each private miss once:
+        // A's 2 evaluations then B's 2 L2 hits
+        assert_eq!(shared.lifetime_stats(), CacheStats { hits: 2, misses: 2 });
+
+        // a different context shares nothing
+        let cell_c = DaccCache::new();
+        let c = faulty_accuracy_batch(
+            DaccBackend::Surrogate { table: &t },
+            &cell_c,
+            Some(SharedCache { cache: &shared, ctx: 7 }),
+            EngineConfig::default(),
+            &reqs,
+        )
+        .unwrap();
+        assert_eq!((c.unique_misses, c.backend_evals, c.shared_hits), (2, 2, 0));
+    }
+
+    #[test]
     fn clean_backend_returns_clean_acc() {
         let cache = DaccCache::new();
         let out = faulty_accuracy_batch(
             DaccBackend::Clean { acc: 0.77 },
             &cache,
+            None,
             EngineConfig::default(),
             &[rv(0.1, 0.2), rv(0.3, 0.4)],
         )

@@ -26,10 +26,12 @@
 //!   identical for any thread count: every ΔAcc backend is a pure
 //!   function of the rate vectors.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::cache::{CacheRollover, CacheStats, DaccCache};
-use super::engine::{self, DaccBackend, EngineConfig};
+use super::engine::{self, DaccBackend, EngineConfig, SharedCache};
 use super::genome::Mapping;
 use super::sensitivity::SensitivityTable;
 use crate::faults::{FaultScenario, RateVectors};
@@ -57,14 +59,19 @@ pub enum DaccMode<'a> {
 /// Evaluation-effort counters (reported by benches / EXPERIMENTS.md).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EvalCounters {
-    /// Unique exact-mode (or synthetic-exact) backend evaluations.
+    /// Exact-mode (or synthetic-exact) backend evaluations actually
+    /// performed. Without a shared cache this equals the unique private
+    /// misses; with one it excludes cross-cell hits.
     pub exact_evals: usize,
-    /// Unique surrogate backend evaluations.
+    /// Surrogate backend evaluations actually performed.
     pub surrogate_evals: usize,
     /// Batched evaluation calls served by the engine.
     pub batch_calls: usize,
     /// Total genomes submitted through the batched path.
     pub batch_genomes: usize,
+    /// Private misses answered by a cross-cell shared cache instead of
+    /// the backend (0 unless [`PartitionEvaluator::with_shared_cache`]).
+    pub shared_hits: usize,
 }
 
 /// Bound evaluator for one (model, platform, fault-environment) triple.
@@ -87,6 +94,10 @@ pub struct PartitionEvaluator<'a> {
     pub include_link_cost: bool,
     dacc: DaccMode<'a>,
     cache: DaccCache,
+    /// Optional cross-cell L2: `(per-model shared cache, context tag)`.
+    /// The tag folds every rate-independent backend parameter so cells
+    /// only exchange values they would have computed identically.
+    shared: Option<(Arc<DaccCache>, u64)>,
     engine: EngineConfig,
     pub counters: EvalCounters,
     /// Observability handle (disabled by default; see [`crate::obs`]).
@@ -123,6 +134,7 @@ impl<'a> PartitionEvaluator<'a> {
             include_link_cost,
             dacc,
             cache: DaccCache::new(),
+            shared: None,
             engine: EngineConfig::default(),
             counters: EvalCounters::default(),
             telemetry: Telemetry::disabled(),
@@ -133,6 +145,84 @@ impl<'a> PartitionEvaluator<'a> {
     pub fn with_parallelism(mut self, threads: usize) -> Self {
         self.set_parallelism(threads);
         self
+    }
+
+    /// Attach a cross-cell shared ΔAcc cache (builder form). The
+    /// campaign scheduler hands every cell of one model the same
+    /// `Arc<DaccCache>`; this evaluator derives its context tag from the
+    /// ΔAcc backend's rate-independent parameters, so only cells that
+    /// would compute identical values exchange entries. The private
+    /// cache and its deterministic epoch statistics are unaffected —
+    /// shared answers surface only in [`EvalCounters::shared_hits`] and
+    /// the shared cache's own lifetime counters.
+    pub fn with_shared_cache(mut self, shared: Arc<DaccCache>) -> Self {
+        self.set_shared_cache(shared);
+        self
+    }
+
+    /// See [`PartitionEvaluator::with_shared_cache`].
+    pub fn set_shared_cache(&mut self, shared: Arc<DaccCache>) {
+        let ctx = self.shared_ctx();
+        self.shared = Some((shared, ctx));
+    }
+
+    /// Fold the ΔAcc backend's rate-independent configuration into a
+    /// context tag for the shared cache keyspace. Two evaluators receive
+    /// the same tag exactly when `backend().eval(rates)` is the same
+    /// pure function for both — fault rates, scenarios, and drifts do
+    /// NOT enter the tag (they only shape which rate vectors get
+    /// requested), which is precisely what lets a rates × scenarios grid
+    /// share one warm keyspace per model.
+    fn shared_ctx(&self) -> u64 {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        fn hash_table(t: &SensitivityTable, h: &mut DefaultHasher) {
+            for v in &t.rate_grid {
+                v.to_bits().hash(h);
+            }
+            for row in t.w_drop.iter().chain(&t.a_drop) {
+                row.len().hash(h);
+                for v in row {
+                    v.to_bits().hash(h);
+                }
+            }
+            t.clean_acc.to_bits().hash(h);
+        }
+        let mut h = DefaultHasher::new();
+        match &self.dacc {
+            DaccMode::Exact { model, eval, key_seed, n_batches } => {
+                // In-process identity of the compiled model + eval set
+                // (pointer equality is the guard: one Experiment per
+                // model in a campaign), plus the fault-draw seed and the
+                // eval budget, which change the measured accuracy.
+                0u8.hash(&mut h);
+                (*model as *const CompiledModel as usize).hash(&mut h);
+                (*eval as *const AccuracyEvaluator as usize).hash(&mut h);
+                key_seed.hash(&mut h);
+                n_batches.hash(&mut h);
+            }
+            DaccMode::Surrogate(table) => {
+                // Content fingerprint, not identity: per-cell synthetic
+                // fixtures rebuild equal tables that must still share.
+                1u8.hash(&mut h);
+                hash_table(table, &mut h);
+            }
+            DaccMode::SyntheticExact { table, cost } => {
+                2u8.hash(&mut h);
+                hash_table(table, &mut h);
+                cost.hash(&mut h);
+            }
+            DaccMode::None => {
+                3u8.hash(&mut h);
+                self.clean_acc.to_bits().hash(&mut h);
+            }
+        }
+        h.finish()
+    }
+
+    /// The engine-facing view of the shared cache, if attached.
+    fn shared_view(&self) -> Option<SharedCache<'_>> {
+        self.shared.as_ref().map(|(cache, ctx)| SharedCache { cache, ctx: *ctx })
     }
 
     /// Attach the run's telemetry handle (builder form).
@@ -289,15 +379,29 @@ impl<'a> PartitionEvaluator<'a> {
         }
     }
 
-    /// Fault-injected accuracy A_faulty(P) (memoized).
+    /// Fault-injected accuracy A_faulty(P) (memoized; consults the
+    /// cross-cell shared cache, when attached, before the backend).
     pub fn faulty_accuracy(&mut self, mapping: &Mapping) -> Result<f64> {
         let rates = self.rates_for(mapping);
         if let Some(acc) = self.cache.get(&rates) {
             return Ok(acc);
         }
+        let key = rates.cache_key();
+        if let Some((shared, ctx)) = &self.shared {
+            if let Some(acc) = shared.probe_ctx(*ctx, &key) {
+                shared.record_hits(1);
+                self.counters.shared_hits += 1;
+                self.cache.put_key(key, acc);
+                return Ok(acc);
+            }
+        }
         let acc = self.backend().eval(&rates)?;
         self.note_backend_evals(1);
-        self.cache.put(&rates, acc);
+        if let Some((shared, ctx)) = &self.shared {
+            shared.record_misses(1);
+            shared.put_key_ctx(*ctx, key.clone(), acc);
+        }
+        self.cache.put_key(key, acc);
         Ok(acc)
     }
 
@@ -346,12 +450,20 @@ impl<'a> PartitionEvaluator<'a> {
             return Ok(costs.into_iter().map(|(l, e)| vec![l, e]).collect());
         }
         let rates: Vec<RateVectors> = mappings.iter().map(|m| self.rates_for(m)).collect();
-        let outcome =
-            engine::faulty_accuracy_batch(self.backend(), &self.cache, self.engine, &rates)?;
-        self.note_backend_evals(outcome.unique_misses);
+        let outcome = engine::faulty_accuracy_batch(
+            self.backend(),
+            &self.cache,
+            self.shared_view(),
+            self.engine,
+            &rates,
+        )?;
+        self.note_backend_evals(outcome.backend_evals);
+        self.counters.shared_hits += outcome.shared_hits;
+        // span notes stay schedule-invariant (trace determinism): the
+        // private miss count, never the shared-cache outcome
         span.note("unique_misses", num(outcome.unique_misses as f64));
         span.note("cache_answered", num((mappings.len() - outcome.unique_misses) as f64));
-        telemetry.counter_add("eval_backend_evals_total", outcome.unique_misses as u64);
+        telemetry.counter_add("eval_backend_evals_total", outcome.backend_evals as u64);
         self.publish_cache_gauges(&telemetry);
         Ok(costs
             .into_iter()
@@ -557,6 +669,72 @@ mod tests {
         let (hits, misses, _) = ev.cache_stats();
         assert_eq!((hits, misses), (1, 1));
         assert_eq!(ev.counters.surrogate_evals, 1);
+    }
+
+    #[test]
+    fn shared_cache_lifetime_counts_once() {
+        // Regression (ISSUE 8 satellite): when one cache outlives a
+        // single optimization run by being shared across cells, lifetime
+        // accounting must live in the shared cache itself — summing the
+        // per-cell lifetime stats would count the shared history once
+        // per cell. Each private miss lands in the shared counters
+        // exactly once (as a hit or a miss), never twice.
+        let p = Platform::default_two_device();
+        let table = SensitivityTable {
+            rate_grid: vec![0.2],
+            w_drop: vec![vec![0.1], vec![0.2], vec![0.3]],
+            a_drop: vec![vec![0.0], vec![0.0], vec![0.0]],
+            clean_acc: 0.9,
+        };
+        let m = manifest2();
+        let shared = Arc::new(DaccCache::new());
+        let mk = |rates: Vec<f32>| {
+            PartitionEvaluator::new(
+                &m,
+                &p,
+                rates.clone(),
+                rates,
+                FaultScenario::WeightOnly,
+                0.9,
+                false,
+                DaccMode::Surrogate(&table),
+            )
+            .with_shared_cache(Arc::clone(&shared))
+        };
+
+        // Cell A computes one point; cell B (same backend context, a
+        // different fault rate that happens to induce the same rate
+        // vector for this mapping) reuses it without a backend call.
+        let mut a = mk(vec![0.2, 0.2]);
+        let va = a.faulty_accuracy(&Mapping(vec![0, 0, 0])).unwrap();
+        assert_eq!(a.counters.surrogate_evals, 1);
+        assert_eq!(a.counters.shared_hits, 0);
+
+        let mut b = mk(vec![0.2, 0.05]);
+        let vb = b.faulty_accuracy(&Mapping(vec![0, 0, 0])).unwrap();
+        assert_eq!(va, vb);
+        assert_eq!(b.counters.surrogate_evals, 0, "shared cache must answer B's miss");
+        assert_eq!(b.counters.shared_hits, 1);
+
+        // Private (per-cell) stats are deterministic and identical: one
+        // miss each, regardless of who computed the value.
+        assert_eq!(a.cache_stats().1, 1);
+        assert_eq!(b.cache_stats().1, 1);
+        // The shared cache saw each private miss exactly once: A's
+        // backend evaluation (miss) then B's reuse (hit). Lookups = 2 —
+        // NOT the 4 that double-counting per-cell lifetimes would give.
+        let life = shared.lifetime_stats();
+        assert_eq!(life, CacheStats { hits: 1, misses: 1 });
+        assert_eq!(life.lookups(), 2);
+        assert_eq!(shared.len(), 1);
+
+        // The batched path shares through the same keyspace: a third
+        // cold cell resolves the equivalent mapping batch with zero
+        // backend evaluations.
+        let mut c = mk(vec![0.2, 0.2]);
+        c.objectives_batch(&[Mapping(vec![0, 0, 0]), Mapping(vec![1, 1, 1])], true).unwrap();
+        assert_eq!(c.counters.surrogate_evals, 0);
+        assert!(c.counters.shared_hits >= 1);
     }
 
     #[test]

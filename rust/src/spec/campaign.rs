@@ -3,6 +3,30 @@
 //! the batched evaluation engine (PR 1), emitting one consolidated JSON
 //! report.
 //!
+//! # Parallel cell scheduler (PR 5)
+//!
+//! Cells are independent, so [`run_campaign`] schedules them across OS
+//! threads with work stealing: `campaign_workers` threads pull the next
+//! cell index from a shared atomic counter, and a two-level thread
+//! budget ([`resolve_thread_budget`]) splits the machine between cell
+//! workers and each cell's engine threads so the product never
+//! oversubscribes [`EngineConfig::auto`]. All cells of one model share a
+//! per-model ΔAcc cache ([`crate::partition::DaccCache`] keyed by a
+//! backend-context tag), so a rates × scenarios grid warms each
+//! (model, rate-key) point once instead of once per cell.
+//!
+//! **Determinism is non-negotiable.** Cell results are pure functions of
+//! the spec (per-cell seeds, engine bitwise-invariance), workers send
+//! finished cells to the coordinating thread, and the coordinator
+//! buffers them so `on_cell` callbacks, trace events, and the report's
+//! cell array are always emitted in cell-index order. Every report field
+//! is schedule-invariant — per-cell cache statistics come from each
+//! cell's *private* cache, `total_backend_evals` is the sum of private
+//! misses (numerically what the serial runner reported), and the
+//! cross-cell sharing section counts *distinct keys*, not races — so
+//! the report JSON (minus `wall_ms`) is bitwise identical at any worker
+//! count, including 1.
+//!
 //! Model names of the form `synthetic-L<n>` use the artifact-free
 //! fixtures of `bench::suite` (an `n`-unit manifest + sensitivity table
 //! with the exact-cost-shaped `SyntheticExact` ΔAcc backend), so
@@ -11,6 +35,9 @@
 //! model names load artifacts exactly like `afarepart offline`.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -20,7 +47,10 @@ use super::ExperimentSpec;
 use crate::bench::suite::{synthetic_manifest, synthetic_sensitivity, synthetic_units};
 use crate::experiment::Experiment;
 use crate::faults::{DriftComponent, FaultEnv, FaultScenario};
-use crate::partition::{DaccMode, EngineConfig, PartitionEvaluator};
+use crate::model::Manifest;
+use crate::nsga2::Nsga2Config;
+use crate::obs::Telemetry;
+use crate::partition::{DaccCache, DaccMode, EngineConfig, PartitionEvaluator, SensitivityTable};
 use crate::util::json::{self, Value};
 
 /// One drift schedule of the campaign grid: a named component stack plus
@@ -218,6 +248,43 @@ pub struct CampaignCellReport {
     pub offline: OfflineReport,
 }
 
+/// Schedule-invariant cross-cell cache-sharing summary for one model.
+///
+/// Every field is a pure function of the spec: `requests` and
+/// `private_misses` sum the per-cell (deterministic) private-cache
+/// counters, and `unique_keys` is the number of *distinct* (context,
+/// rate-key) points the model's cells requested — exactly the entries
+/// the shared cache holds at the end, independent of which worker got
+/// there first. `saved_backend_evals = private_misses - unique_keys` is
+/// the dedup the sharing guarantees in cell-index order; concurrent
+/// workers may race a key and save slightly less in wall-clock terms,
+/// which is visible in the `campaign_cross_cell_hits_total` counter
+/// (telemetry, deliberately outside this deterministic report).
+#[derive(Clone, Debug)]
+pub struct ModelCacheSharing {
+    pub model: String,
+    /// Σ private-cache lookups over the model's cells.
+    pub requests: usize,
+    /// Σ private-cache misses over the model's cells.
+    pub private_misses: usize,
+    /// Distinct (context, rate-key) points across the model's cells.
+    pub unique_keys: usize,
+    /// Backend evaluations sharing removes versus isolated cells.
+    pub saved_backend_evals: usize,
+}
+
+impl ModelCacheSharing {
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("requests", json::num(self.requests as f64)),
+            ("private_misses", json::num(self.private_misses as f64)),
+            ("unique_keys", json::num(self.unique_keys as f64)),
+            ("saved_backend_evals", json::num(self.saved_backend_evals as f64)),
+        ])
+    }
+}
+
 /// The consolidated campaign outcome.
 #[derive(Clone, Debug)]
 pub struct CampaignReport {
@@ -225,8 +292,12 @@ pub struct CampaignReport {
     pub engine_threads: usize,
     pub total_evaluations: usize,
     /// Unique backend (exact/synthetic/surrogate) evaluations after
-    /// caching + in-batch dedup.
+    /// per-cell caching + in-batch dedup — the sum of private-cache
+    /// misses, which is schedule-invariant (cross-cell sharing shows up
+    /// in [`CampaignReport::cache_sharing`], not here).
     pub total_backend_evals: usize,
+    /// Per-model cross-cell sharing summary, in `spec.models` order.
+    pub cache_sharing: Vec<ModelCacheSharing>,
     pub wall_ms: f64,
 }
 
@@ -238,6 +309,7 @@ impl CampaignReport {
             ("engine_threads", json::num(self.engine_threads as f64)),
             ("total_evaluations", json::num(self.total_evaluations as f64)),
             ("total_backend_evals", json::num(self.total_backend_evals as f64)),
+            ("cache_sharing", json::arr(self.cache_sharing.iter().map(|m| m.to_json()))),
             ("wall_ms", json::num(self.wall_ms)),
             (
                 "cells",
@@ -253,135 +325,386 @@ impl CampaignReport {
     }
 }
 
+/// Knobs for [`run_campaign_with`] beyond the spec itself.
+#[derive(Clone, Debug, Default)]
+pub struct CampaignOptions {
+    /// Simulated per-backend-evaluation cost for `synthetic-L<n>` models
+    /// in non-surrogate mode (the `SyntheticExact` sleep). `bench_perf`
+    /// injects an exact-call-shaped cost here so the campaign bench
+    /// measures scheduling, not just arithmetic. Zero (the default)
+    /// matches `afarepart campaign`.
+    pub synthetic_cost: Duration,
+    /// Observability handle for the scheduler (disabled by default).
+    /// Cell evaluators never receive it — all `campaign.*` spans,
+    /// counters, and gauges are emitted from the coordinating thread in
+    /// cell-index order, so an attached trace stays bitwise-deterministic
+    /// at any worker count.
+    pub telemetry: Telemetry,
+}
+
+/// Split `machine` engine threads between campaign cell workers and each
+/// cell's evaluation threads: `(workers, cell_threads)`.
+///
+/// Precedence: an explicit `campaign_workers` is honored (clamped to the
+/// cell count); an explicit `eval_threads` is honored up to the
+/// per-worker share `machine / workers`. With both knobs on auto the
+/// machine goes to cell-level parallelism (`workers = machine`,
+/// `cell_threads = 1`) — cells are embarrassingly parallel, so outer
+/// parallelism dominates inner fan-out. The product
+/// `workers × cell_threads` never exceeds `machine` unless the user
+/// explicitly pins both knobs higher (each side is floored at 1).
+pub(crate) fn resolve_thread_budget(
+    campaign_workers: usize,
+    eval_threads: usize,
+    machine: usize,
+    num_cells: usize,
+) -> (usize, usize) {
+    let machine = machine.max(1);
+    let cells = num_cells.max(1);
+    let workers = if campaign_workers != 0 {
+        campaign_workers.min(cells)
+    } else if eval_threads != 0 {
+        (machine / eval_threads).max(1).min(cells)
+    } else {
+        machine.min(cells)
+    };
+    let share = (machine / workers).max(1);
+    let cell_threads = if eval_threads != 0 { eval_threads.min(share) } else { share };
+    (workers, cell_threads)
+}
+
+/// What one cell's worker sends back to the coordinator. The `report`
+/// and the `evaluations`/`private_*` counters are schedule-invariant;
+/// `backend_evals`/`shared_hits`/`wall_ms` depend on scheduling and feed
+/// telemetry only.
+struct CellOutcome {
+    report: CampaignCellReport,
+    evaluations: usize,
+    private_lookups: usize,
+    private_misses: usize,
+    backend_evals: usize,
+    shared_hits: usize,
+    wall_ms: f64,
+}
+
+/// Everything a cell worker needs by reference. All fields are shared
+/// immutably across the scoped workers (per-model `Experiment`s are
+/// preloaded, synthetic fixtures prebuilt, shared caches created before
+/// the scope opens).
+struct CellCtx<'a> {
+    spec: &'a CampaignSpec,
+    nsga2: &'a Nsga2Config,
+    synthetic_cost: Duration,
+    /// Actual engine threads each cell runs with (budget split).
+    cell_threads: usize,
+    /// Worker-invariant thread figure recorded in reports (what the
+    /// serial runner reported: `eval_threads`, or the machine auto).
+    reported_threads: usize,
+    fixtures: &'a HashMap<String, (Manifest, SensitivityTable)>,
+    experiments: &'a HashMap<String, Experiment>,
+    shared: &'a HashMap<String, Arc<DaccCache>>,
+}
+
+/// Run one cell end to end. Pure in `(ctx, cell)` up to the
+/// schedule-dependent `backend_evals`/`shared_hits` telemetry fields.
+fn run_cell(ctx: &CellCtx<'_>, cell: &CellDesc) -> Result<CellOutcome> {
+    let spec = ctx.spec;
+    let drift = &spec.drifts[cell.drift_idx];
+    let (platform, profiles) = spec.base.platform.build();
+    let env =
+        FaultEnv { base_rate: cell.fault_rate, profiles, drift: drift.components.clone() };
+    for c in &env.drift {
+        if c.device >= env.num_devices() {
+            bail!(
+                "campaign drift {:?}: component targets device {} but the platform has {}",
+                drift.name,
+                c.device,
+                env.num_devices()
+            );
+        }
+    }
+    let dev_w = env.dev_w_rates(drift.eval_at_s);
+    let dev_a = env.dev_a_rates(drift.eval_at_s);
+    let shared_cache = ctx.shared.get(&cell.model);
+
+    let (outcome, counters, cache_stats) = if ctx.fixtures.contains_key(&cell.model) {
+        let (manifest, table) = &ctx.fixtures[&cell.model];
+        let dacc = if spec.base.surrogate {
+            DaccMode::Surrogate(table)
+        } else {
+            DaccMode::SyntheticExact { table, cost: ctx.synthetic_cost }
+        };
+        let mut ev = PartitionEvaluator::new(
+            manifest,
+            &platform,
+            dev_w,
+            dev_a,
+            cell.scenario,
+            table.clean_acc,
+            spec.base.link_cost,
+            dacc,
+        )
+        .with_parallelism(ctx.cell_threads);
+        if let Some(shared) = shared_cache {
+            ev.set_shared_cache(Arc::clone(shared));
+        }
+        let out = spec.base.selection.optimize_and_deploy(&mut ev, ctx.nsga2, |_| {})?;
+        (out, ev.counters, ev.cache_stats())
+    } else {
+        let exp = &ctx.experiments[&cell.model];
+        let dacc = match (spec.base.surrogate, &exp.sensitivity) {
+            (true, Some(table)) => DaccMode::Surrogate(table),
+            _ => DaccMode::Exact {
+                model: &exp.model,
+                eval: &exp.acc_eval,
+                key_seed: (spec.base.seed & 0xFFFF_FFFF) as u32,
+                n_batches: spec.base.dacc_batches,
+            },
+        };
+        let mut ev = PartitionEvaluator::new(
+            &exp.model.manifest,
+            &platform,
+            dev_w,
+            dev_a,
+            cell.scenario,
+            exp.clean_acc,
+            spec.base.link_cost,
+            dacc,
+        )
+        .with_parallelism(ctx.cell_threads);
+        if let Some(shared) = shared_cache {
+            ev.set_shared_cache(Arc::clone(shared));
+        }
+        let out = spec.base.selection.optimize_and_deploy(&mut ev, ctx.nsga2, |_| {})?;
+        (out, ev.counters, ev.cache_stats())
+    };
+
+    let report = CampaignCellReport {
+        drift: drift.name.clone(),
+        eval_at_s: drift.eval_at_s,
+        offline: OfflineReport::from_outcome(
+            &cell.model,
+            cell.scenario.label(),
+            cell.fault_rate,
+            ctx.nsga2.pop_size,
+            ctx.nsga2.generations,
+            spec.base.surrogate,
+            ctx.reported_threads,
+            &outcome,
+        ),
+    };
+    let (hits, misses, _) = cache_stats;
+    Ok(CellOutcome {
+        report,
+        evaluations: outcome.evaluations,
+        private_lookups: hits + misses,
+        private_misses: misses,
+        backend_evals: counters.exact_evals + counters.surrogate_evals,
+        shared_hits: counters.shared_hits,
+        wall_ms: 0.0, // stamped by the worker loop
+    })
+}
+
 /// Run every cell of the campaign through the batched evaluation engine.
 /// `on_cell` fires after each cell with (index, total, report) for
-/// progress display.
+/// progress display, in cell-index order at any worker count.
 pub fn run_campaign(
     spec: &CampaignSpec,
+    on_cell: impl FnMut(usize, usize, &CampaignCellReport),
+) -> Result<CampaignReport> {
+    run_campaign_with(spec, &CampaignOptions::default(), on_cell)
+}
+
+/// [`run_campaign`] with explicit [`CampaignOptions`] (bench cost
+/// injection, scheduler telemetry).
+pub fn run_campaign_with(
+    spec: &CampaignSpec,
+    opts: &CampaignOptions,
     mut on_cell: impl FnMut(usize, usize, &CampaignCellReport),
 ) -> Result<CampaignReport> {
     let cells = spec.expand();
     let total = cells.len();
-    let threads = if spec.base.eval_threads == 0 {
-        EngineConfig::auto().threads
-    } else {
-        spec.base.eval_threads
-    };
+    let machine = EngineConfig::auto().threads;
+    let (workers, cell_threads) = resolve_thread_budget(
+        spec.base.campaign_workers,
+        spec.base.eval_threads,
+        machine,
+        total,
+    );
+    // Reports record the worker-invariant thread *budget* (exactly what
+    // the serial runner reported); the actual split is telemetry.
+    let reported_threads =
+        if spec.base.eval_threads == 0 { machine } else { spec.base.eval_threads };
+    let telemetry = &opts.telemetry;
+    telemetry.gauge_set("campaign_workers", workers as f64);
+    telemetry.gauge_set("campaign_cell_threads", cell_threads as f64);
     let nsga2 = spec.base.optimizer.to_nsga2(spec.base.seed);
     let sw = std::time::Instant::now();
 
-    // real-model experiments are loaded (and their HLO compiled) once per
-    // model, not once per cell
+    // Per-model setup runs serially before the scope opens: real-model
+    // experiments are loaded (and their HLO compiled) once per model,
+    // synthetic fixtures are built once per model, and every model gets
+    // one shared cross-cell ΔAcc cache.
     let mut experiments: HashMap<String, Experiment> = HashMap::new();
+    let mut fixtures: HashMap<String, (Manifest, SensitivityTable)> = HashMap::new();
+    let mut shared: HashMap<String, Arc<DaccCache>> = HashMap::new();
+    for model in &spec.models {
+        if shared.contains_key(model) {
+            continue;
+        }
+        shared.insert(model.clone(), Arc::new(DaccCache::new()));
+        if let Some(n) = synthetic_units(model) {
+            fixtures.insert(model.clone(), (synthetic_manifest(n), synthetic_sensitivity(n)));
+        } else {
+            let mut cfg = spec.base.to_config();
+            cfg.model = model.clone();
+            let mut exp = Experiment::load(&cfg)
+                .with_context(|| format!("campaign: loading model {model:?}"))?;
+            if spec.base.surrogate {
+                // same sensitivity grid as `afarepart offline`
+                exp.measure_sensitivity(&Experiment::SENSITIVITY_RATE_GRID)?;
+            }
+            experiments.insert(model.clone(), exp);
+        }
+    }
+
+    let ctx = CellCtx {
+        spec,
+        nsga2: &nsga2,
+        synthetic_cost: opts.synthetic_cost,
+        cell_threads,
+        reported_threads,
+        fixtures: &fixtures,
+        experiments: &experiments,
+        shared: &shared,
+    };
+
+    // Work-stealing scheduler: workers pull the next cell index from a
+    // shared counter and send finished cells to this (coordinating)
+    // thread, which buffers and emits them in cell-index order. On the
+    // first failure the abort flag stops workers from *starting* new
+    // cells; in-flight cells drain, so every index below the failing one
+    // still arrives and the error surfaced is the lowest-index one —
+    // exactly the serial runner's behavior.
+    let mut slots: Vec<Option<CellOutcome>> = Vec::with_capacity(total);
+    slots.resize_with(total, || None);
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    let mut emitted = 0usize;
+    let next = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<(usize, Result<CellOutcome>)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let (next, abort, ctx, cells) = (&next, &abort, &ctx, &cells);
+            scope.spawn(move || loop {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let cell_sw = std::time::Instant::now();
+                let res = run_cell(ctx, &cells[i]).map(|mut out| {
+                    out.wall_ms = cell_sw.elapsed().as_secs_f64() * 1e3;
+                    out
+                });
+                if res.is_err() {
+                    abort.store(true, Ordering::Relaxed);
+                }
+                if tx.send((i, res)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+
+        let mut done = 0usize;
+        for (i, res) in rx {
+            done += 1;
+            telemetry.gauge_set("campaign_queue_depth", (total - done) as f64);
+            match res {
+                Ok(out) => slots[i] = Some(out),
+                Err(e) => {
+                    let lowest_so_far = match &first_err {
+                        Some((j, _)) => i < *j,
+                        None => true,
+                    };
+                    if lowest_so_far {
+                        first_err = Some((i, e));
+                    }
+                }
+            }
+            while emitted < total {
+                let Some(out) = &slots[emitted] else { break };
+                // Coordinator-side instrumentation, strictly in cell
+                // order. Trace fields are logical/deterministic; the
+                // schedule-dependent savings go to counters only.
+                telemetry.counter_add("campaign_cells_total", 1);
+                telemetry.counter_add("campaign_cross_cell_hits_total", out.shared_hits as u64);
+                telemetry.counter_add("campaign_backend_evals_total", out.backend_evals as u64);
+                telemetry.emit_span(
+                    "campaign.cell",
+                    out.wall_ms,
+                    &[
+                        ("cell", json::num(emitted as f64)),
+                        ("model", json::s(&cells[emitted].model)),
+                        ("drift", json::s(&out.report.drift)),
+                        ("evaluations", json::num(out.evaluations as f64)),
+                        ("unique_misses", json::num(out.private_misses as f64)),
+                    ],
+                );
+                on_cell(emitted, total, &out.report);
+                emitted += 1;
+            }
+        }
+    });
+    if let Some((_, e)) = first_err {
+        return Err(e);
+    }
+
+    // Fold the buffered cells into the consolidated report — all sums
+    // below are over deterministic per-cell private counters, so the
+    // report is identical at any worker count.
     let mut reports = Vec::with_capacity(total);
     let mut total_evaluations = 0usize;
     let mut total_backend_evals = 0usize;
-
-    for (i, cell) in cells.iter().enumerate() {
-        let drift = &spec.drifts[cell.drift_idx];
-        let (platform, profiles) = spec.base.platform.build();
-        let env = FaultEnv {
-            base_rate: cell.fault_rate,
-            profiles,
-            drift: drift.components.clone(),
-        };
-        for c in &env.drift {
-            if c.device >= env.num_devices() {
-                bail!(
-                    "campaign drift {:?}: component targets device {} but the platform has {}",
-                    drift.name,
-                    c.device,
-                    env.num_devices()
-                );
-            }
+    let mut per_model: HashMap<&str, (usize, usize)> = HashMap::new();
+    for (cell, slot) in cells.iter().zip(slots) {
+        let out = slot.expect("scheduler left a cell unfinished without an error");
+        total_evaluations += out.evaluations;
+        total_backend_evals += out.private_misses;
+        let entry = per_model.entry(cell.model.as_str()).or_insert((0, 0));
+        entry.0 += out.private_lookups;
+        entry.1 += out.private_misses;
+        reports.push(out.report);
+    }
+    let mut cache_sharing = Vec::new();
+    let mut seen_models: Vec<&str> = Vec::new();
+    for model in &spec.models {
+        if seen_models.contains(&model.as_str()) {
+            continue;
         }
-        let dev_w = env.dev_w_rates(drift.eval_at_s);
-        let dev_a = env.dev_a_rates(drift.eval_at_s);
-
-        let outcome = if let Some(n) = synthetic_units(&cell.model) {
-            let manifest = synthetic_manifest(n);
-            let table = synthetic_sensitivity(n);
-            let dacc = if spec.base.surrogate {
-                DaccMode::Surrogate(&table)
-            } else {
-                DaccMode::SyntheticExact { table: &table, cost: std::time::Duration::ZERO }
-            };
-            let mut ev = PartitionEvaluator::new(
-                &manifest,
-                &platform,
-                dev_w,
-                dev_a,
-                cell.scenario,
-                table.clean_acc,
-                spec.base.link_cost,
-                dacc,
-            )
-            .with_parallelism(threads);
-            let out = spec.base.selection.optimize_and_deploy(&mut ev, &nsga2, |_| {})?;
-            total_backend_evals += ev.counters.exact_evals + ev.counters.surrogate_evals;
-            out
-        } else {
-            if !experiments.contains_key(&cell.model) {
-                let mut cfg = spec.base.to_config();
-                cfg.model = cell.model.clone();
-                let mut exp = Experiment::load(&cfg)
-                    .with_context(|| format!("campaign: loading model {:?}", cell.model))?;
-                if spec.base.surrogate {
-                    // same sensitivity grid as `afarepart offline`
-                    exp.measure_sensitivity(&[0.05, 0.1, 0.2, 0.4])?;
-                }
-                experiments.insert(cell.model.clone(), exp);
-            }
-            let exp = &experiments[&cell.model];
-            let dacc = match (spec.base.surrogate, &exp.sensitivity) {
-                (true, Some(table)) => DaccMode::Surrogate(table),
-                _ => DaccMode::Exact {
-                    model: &exp.model,
-                    eval: &exp.acc_eval,
-                    key_seed: (spec.base.seed & 0xFFFF_FFFF) as u32,
-                    n_batches: spec.base.dacc_batches,
-                },
-            };
-            let mut ev = PartitionEvaluator::new(
-                &exp.model.manifest,
-                &platform,
-                dev_w,
-                dev_a,
-                cell.scenario,
-                exp.clean_acc,
-                spec.base.link_cost,
-                dacc,
-            )
-            .with_parallelism(threads);
-            let out = spec.base.selection.optimize_and_deploy(&mut ev, &nsga2, |_| {})?;
-            total_backend_evals += ev.counters.exact_evals + ev.counters.surrogate_evals;
-            out
-        };
-
-        total_evaluations += outcome.evaluations;
-        let report = CampaignCellReport {
-            drift: drift.name.clone(),
-            eval_at_s: drift.eval_at_s,
-            offline: OfflineReport::from_outcome(
-                &cell.model,
-                cell.scenario.label(),
-                cell.fault_rate,
-                nsga2.pop_size,
-                nsga2.generations,
-                spec.base.surrogate,
-                threads,
-                &outcome,
-            ),
-        };
-        on_cell(i, total, &report);
-        reports.push(report);
+        seen_models.push(model.as_str());
+        let (requests, private_misses) = per_model.get(model.as_str()).copied().unwrap_or((0, 0));
+        let unique_keys = shared[model.as_str()].len();
+        cache_sharing.push(ModelCacheSharing {
+            model: model.clone(),
+            requests,
+            private_misses,
+            unique_keys,
+            saved_backend_evals: private_misses.saturating_sub(unique_keys),
+        });
     }
 
     Ok(CampaignReport {
         cells: reports,
-        engine_threads: threads,
+        engine_threads: reported_threads,
         total_evaluations,
         total_backend_evals,
+        cache_sharing,
         wall_ms: sw.elapsed().as_secs_f64() * 1e3,
     })
 }
@@ -454,6 +777,34 @@ mod tests {
     fn synthetic_model_names_parse() {
         assert_eq!(synthetic_units("synthetic-L12"), Some(12));
         assert_eq!(synthetic_units("alexnet"), None);
+    }
+
+    #[test]
+    fn thread_budget_never_oversubscribes_on_auto() {
+        // both knobs auto: the machine goes to cell-level workers
+        assert_eq!(resolve_thread_budget(0, 0, 8, 12), (8, 1));
+        // fewer cells than cores: leftover cores go to each cell
+        assert_eq!(resolve_thread_budget(0, 0, 8, 2), (2, 4));
+        // explicit eval_threads: workers take the remaining share
+        assert_eq!(resolve_thread_budget(0, 2, 8, 12), (4, 2));
+        assert_eq!(resolve_thread_budget(0, 8, 8, 12), (1, 8));
+        // explicit workers: eval_threads clipped to the per-worker share
+        assert_eq!(resolve_thread_budget(4, 8, 8, 12), (4, 2));
+        assert_eq!(resolve_thread_budget(2, 0, 8, 12), (2, 4));
+        // workers clamp to the cell count
+        assert_eq!(resolve_thread_budget(16, 0, 8, 3), (3, 2));
+        // single-core machine degrades to fully serial
+        assert_eq!(resolve_thread_budget(0, 0, 1, 12), (1, 1));
+        for (cw, et, machine, cells) in
+            [(0, 0, 8, 12), (0, 3, 8, 5), (2, 2, 8, 9), (0, 0, 6, 2), (3, 0, 4, 40)]
+        {
+            let (w, t) = resolve_thread_budget(cw, et, machine, cells);
+            assert!(w >= 1 && t >= 1);
+            assert!(
+                w * t <= machine.max(1),
+                "({cw},{et},{machine},{cells}) -> {w}x{t} oversubscribes"
+            );
+        }
     }
 
     #[test]

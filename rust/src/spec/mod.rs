@@ -241,6 +241,10 @@ pub struct ExperimentSpec {
     pub surrogate: bool,
     /// Worker threads for batched ΔAcc evaluation (0 = auto).
     pub eval_threads: usize,
+    /// Cell-level worker threads for `afarepart campaign` (0 = auto:
+    /// split the machine against `eval_threads`, see
+    /// [`campaign::run_campaign`]). Ignored outside campaigns.
+    pub campaign_workers: usize,
     /// Include link latency/energy in the objectives (CNNParted mode).
     pub link_cost: bool,
     /// Master seed (offline NSGA-II + exact-mode fault draws).
@@ -265,6 +269,7 @@ impl Default for ExperimentSpec {
             dacc_batches: 0,
             surrogate: false,
             eval_threads: 0,
+            campaign_workers: 0,
             link_cost: false,
             seed: 7,
             platform: PlatformSpec::default(),
@@ -285,6 +290,7 @@ const TOP_LEVEL_KEYS: &[&str] = &[
     "dacc_batches",
     "surrogate",
     "eval_threads",
+    "campaign_workers",
     "link_cost",
     "seed",
     "platform",
@@ -319,6 +325,9 @@ impl ExperimentSpec {
         }
         if let Some(x) = usize_field(obj, "eval_threads", "spec")? {
             self.eval_threads = x;
+        }
+        if let Some(x) = usize_field(obj, "campaign_workers", "spec")? {
+            self.campaign_workers = x;
         }
         if let Some(b) = bool_field(obj, "link_cost", "spec")? {
             self.link_cost = b;
@@ -374,6 +383,7 @@ impl ExperimentSpec {
             ("dacc_batches", json::num(self.dacc_batches as f64)),
             ("surrogate", Value::Bool(self.surrogate)),
             ("eval_threads", json::num(self.eval_threads as f64)),
+            ("campaign_workers", json::num(self.campaign_workers as f64)),
             ("link_cost", Value::Bool(self.link_cost)),
             ("seed", json::num(self.seed as f64)),
             ("platform", self.platform.to_json()),
@@ -391,7 +401,8 @@ impl ExperimentSpec {
     }
 
     /// Environment overrides (`AFARE_POP`, `AFARE_GENS`,
-    /// `AFARE_EVAL_LIMIT`, `AFARE_EVAL_THREADS`) — used to shrink bench
+    /// `AFARE_EVAL_LIMIT`, `AFARE_EVAL_THREADS`,
+    /// `AFARE_CAMPAIGN_WORKERS`) — used to shrink bench
     /// budgets without touching files. Injectable lookup for testability;
     /// [`ExperimentSpec::resolve`] passes the process environment.
     pub fn apply_env_with(&mut self, getenv: impl Fn(&str) -> Option<String>) {
@@ -406,6 +417,9 @@ impl ExperimentSpec {
         }
         if let Some(v) = getenv("AFARE_EVAL_THREADS").and_then(|v| v.parse().ok()) {
             self.eval_threads = v;
+        }
+        if let Some(v) = getenv("AFARE_CAMPAIGN_WORKERS").and_then(|v| v.parse().ok()) {
+            self.campaign_workers = v;
         }
     }
 
@@ -430,6 +444,7 @@ impl ExperimentSpec {
         self.eval_limit = args.get_usize("eval-limit", self.eval_limit);
         self.dacc_batches = args.get_usize("dacc-batches", self.dacc_batches);
         self.eval_threads = args.get_usize("eval-threads", self.eval_threads);
+        self.campaign_workers = args.get_usize("campaign-workers", self.campaign_workers);
         if let Some(s) = args.get("policy") {
             self.selection.policy = SelectionPolicy::parse(s)
                 .with_context(|| format!("bad --policy {s:?} (min-dacc-within-budget, min-dacc, knee)"))?;
@@ -596,6 +611,27 @@ mod tests {
         // default stays fully off
         let quiet = ExperimentSpec::resolve_with(&args(&["online"]), |_| None).unwrap();
         assert!(!quiet.telemetry.enabled);
+    }
+
+    #[test]
+    fn campaign_workers_follows_the_precedence_chain() {
+        // env beats defaults
+        let spec = ExperimentSpec::resolve_with(&args(&["campaign"]), |k| match k {
+            "AFARE_CAMPAIGN_WORKERS" => Some("3".into()),
+            _ => None,
+        })
+        .unwrap();
+        assert_eq!(spec.campaign_workers, 3);
+        // CLI beats env
+        let a = args(&["campaign", "--campaign-workers", "2"]);
+        let spec = ExperimentSpec::resolve_with(&a, |k| match k {
+            "AFARE_CAMPAIGN_WORKERS" => Some("9".into()),
+            _ => None,
+        })
+        .unwrap();
+        assert_eq!(spec.campaign_workers, 2);
+        // default: auto
+        assert_eq!(ExperimentSpec::default().campaign_workers, 0);
     }
 
     #[test]

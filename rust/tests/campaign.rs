@@ -1,0 +1,151 @@
+//! Parallel campaign scheduler integration tests (tier 1, artifact-free):
+//! the determinism contract of `run_campaign_with` — the consolidated
+//! report is bitwise identical at any `campaign_workers`, `on_cell`
+//! fires in cell-index order at any worker count, and the cross-cell
+//! shared ΔAcc cache actually saves backend evaluations on grids with
+//! coincident rate vectors.
+
+use std::sync::{Arc, Mutex};
+
+use afarepart::obs::Telemetry;
+use afarepart::spec::campaign::{run_campaign, run_campaign_with, CampaignOptions, CampaignReport};
+use afarepart::spec::CampaignSpec;
+use afarepart::util::json;
+
+/// A 3×2 synthetic campaign (no artifacts): 3 fault rates × 2 scenarios.
+fn grid_3x2() -> CampaignSpec {
+    CampaignSpec::from_json_str(
+        r#"{
+            "base": {"eval_threads": 1,
+                     "optimizer": {"pop_size": 8, "generations": 2}},
+            "grid": {"models": ["synthetic-L6"],
+                     "fault_rates": [0.1, 0.2, 0.4],
+                     "scenarios": ["w", "iw"]}
+        }"#,
+    )
+    .unwrap()
+}
+
+/// Render a report with the one nondeterministic field (wall clock)
+/// zeroed, for bitwise comparison.
+fn fingerprint(mut report: CampaignReport) -> String {
+    report.wall_ms = 0.0;
+    json::to_string(&report.to_json())
+}
+
+#[test]
+fn parallel_campaign_report_is_bitwise_identical_to_serial() {
+    let mut reference: Option<String> = None;
+    for workers in [1usize, 2, 4] {
+        let mut spec = grid_3x2();
+        spec.base.campaign_workers = workers;
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let order2 = Arc::clone(&order);
+        let report = run_campaign_with(&spec, &CampaignOptions::default(), |i, total, cell| {
+            assert_eq!(total, 6);
+            assert!(!cell.offline.deployed.mapping.is_empty());
+            order2.lock().unwrap().push(i);
+        })
+        .unwrap();
+        // on_cell fires exactly once per cell, in cell-index order
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4, 5], "at {workers} workers");
+        assert_eq!(report.cells.len(), 6);
+        let fp = fingerprint(report);
+        match &reference {
+            None => reference = Some(fp),
+            Some(r) => assert_eq!(
+                r, &fp,
+                "report at {workers} workers differs from campaign_workers = 1"
+            ),
+        }
+    }
+}
+
+#[test]
+fn default_entry_point_matches_explicit_options() {
+    let spec = grid_3x2();
+    let a = fingerprint(run_campaign(&spec, |_, _, _| {}).unwrap());
+    let b = fingerprint(
+        run_campaign_with(&spec, &CampaignOptions::default(), |_, _, _| {}).unwrap(),
+    );
+    assert_eq!(a, b);
+}
+
+#[test]
+fn duplicate_rate_cells_share_backend_evaluations() {
+    // Two drifts with identical components and eval times produce
+    // pairwise-identical rate vectors per (fault_rate, scenario) pair —
+    // every key the second drift's cells need is already in the shared
+    // cache, whichever cell of each pair ran first.
+    let spec = CampaignSpec::from_json_str(
+        r#"{
+            "base": {"eval_threads": 1, "campaign_workers": 2,
+                     "optimizer": {"pop_size": 8, "generations": 2}},
+            "grid": {"models": ["synthetic-L6"],
+                     "fault_rates": [0.2],
+                     "scenarios": ["w", "iw"],
+                     "drifts": [{"name": "a"}, {"name": "b"}]}
+        }"#,
+    )
+    .unwrap();
+    let report = run_campaign(&spec, |_, _, _| {}).unwrap();
+    assert_eq!(report.cells.len(), 4);
+    assert_eq!(report.cache_sharing.len(), 1);
+    let sh = &report.cache_sharing[0];
+    assert_eq!(sh.model, "synthetic-L6");
+    assert!(sh.requests >= sh.private_misses);
+    assert!(sh.unique_keys > 0 && sh.unique_keys <= sh.private_misses);
+    // the duplicated drift means at least one cross-cell hit was possible
+    assert!(
+        sh.saved_backend_evals > 0,
+        "expected cross-cell savings on duplicated-rate cells, got {sh:?}"
+    );
+    // report-level backend evals stay the schedule-invariant sum of
+    // private misses (sharing shows up only in cache_sharing)
+    assert_eq!(
+        report.total_backend_evals,
+        sh.private_misses,
+        "single-model campaign: total_backend_evals == that model's private misses"
+    );
+}
+
+#[test]
+fn campaign_telemetry_counts_cells_and_savings() {
+    let mut spec = grid_3x2();
+    spec.base.campaign_workers = 2;
+    let telemetry = Telemetry::enabled();
+    let opts = CampaignOptions { telemetry: telemetry.clone(), ..CampaignOptions::default() };
+    let report = run_campaign_with(&spec, &opts, |_, _, _| {}).unwrap();
+    assert_eq!(telemetry.counter_get("campaign_cells_total"), 6);
+    assert_eq!(
+        telemetry.counter_get("campaign_backend_evals_total") as usize
+            + telemetry.counter_get("campaign_cross_cell_hits_total") as usize,
+        report.total_backend_evals,
+        "actual backend calls + cross-cell hits account for every private miss"
+    );
+    let snap = telemetry.snapshot().unwrap();
+    assert_eq!(snap.histograms["span_campaign_cell_ms"].count, 6);
+    assert_eq!(snap.gauges["campaign_workers"], 2.0);
+}
+
+#[test]
+fn bad_cell_fails_whole_campaign_with_lowest_index_error() {
+    // drift component targets a device the 2-device platform lacks:
+    // every cell is invalid; the reported error must be cell 0's
+    // (serial-equivalent) at any worker count.
+    let spec = CampaignSpec::from_json_str(
+        r#"{
+            "base": {"campaign_workers": 4,
+                     "optimizer": {"pop_size": 8, "generations": 2}},
+            "grid": {"models": ["synthetic-L6"],
+                     "fault_rates": [0.1, 0.2],
+                     "drifts": [{"name": "bad",
+                                 "components": [{"kind": "step", "device": 9,
+                                                 "at_s": 1.0, "factor": 2.0}]}]}
+        }"#,
+    )
+    .unwrap();
+    let err = run_campaign(&spec, |_, _, _| {}).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("device 9"), "{msg}");
+}

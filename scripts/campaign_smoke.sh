@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# Parallel-campaign golden gate (`make campaign-smoke`): a 3×2 synthetic
+# campaign (3 fault rates × 2 scenarios, no artifacts needed) must
+# (a) run to completion on the parallel cell scheduler, (b) produce a
+# report that is bitwise identical — modulo the one wall-clock field —
+# across `--campaign-workers 1` and `--campaign-workers 4`, and
+# (c) report a well-formed `cache_sharing` section whose invariants
+# (`saved_backend_evals = private_misses - unique_keys`) hold.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=target/release/afarepart
+if [ ! -x "$BIN" ]; then
+    echo "== building $BIN =="
+    cargo build --release
+fi
+
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+cat > "$TMP/spec.json" <<'EOF'
+{
+  "base": {"eval_threads": 1, "optimizer": {"pop_size": 8, "generations": 2}},
+  "grid": {
+    "models": ["synthetic-L6"],
+    "fault_rates": [0.1, 0.2, 0.4],
+    "scenarios": ["w", "iw"]
+  }
+}
+EOF
+
+echo "== campaign-smoke: serial run (1 worker) =="
+"$BIN" campaign --spec "$TMP/spec.json" --campaign-workers 1 \
+    --format json --out "$TMP/w1.json"
+echo "== campaign-smoke: parallel run (4 workers) =="
+"$BIN" campaign --spec "$TMP/spec.json" --campaign-workers 4 \
+    --format json --out "$TMP/w4.json"
+
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "python3 unavailable; falling back to cmp on raw reports"
+    cmp "$TMP/w1.json" "$TMP/w4.json" || true
+    exit 0
+fi
+
+echo "== campaign-smoke: cross-worker determinism + sharing invariants =="
+python3 - "$TMP/w1.json" "$TMP/w4.json" <<'EOF'
+import json
+import sys
+
+a, b = (json.load(open(p)) for p in sys.argv[1:3])
+for doc in (a, b):
+    assert doc["command"] == "campaign", doc.get("command")
+    assert doc["num_cells"] == 6, doc["num_cells"]
+    # wall_ms is the single nondeterministic report field
+    doc.pop("wall_ms", None)
+assert a == b, "campaign report differs between 1 and 4 workers"
+print("  report identical at 1 and 4 workers (wall_ms stripped): OK")
+
+sharing = a["cache_sharing"]
+assert len(sharing) == 1 and sharing[0]["model"] == "synthetic-L6", sharing
+m = sharing[0]
+assert 0 < m["private_misses"] <= m["requests"], m
+assert 0 < m["unique_keys"] <= m["private_misses"], m
+assert m["saved_backend_evals"] == m["private_misses"] - m["unique_keys"], m
+assert a["total_backend_evals"] == m["private_misses"], (
+    "single-model campaign: total_backend_evals must equal its private misses"
+)
+print(
+    "  cache_sharing: {requests} requests, {private_misses} misses, "
+    "{unique_keys} unique keys, {saved_backend_evals} saved".format(**m)
+)
+EOF
+echo "campaign-smoke: OK"

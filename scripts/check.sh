@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # Repo gate: format, build, tests, smoke runs, and the perf sections
 # with a monotonicity check on BENCH_eval_engine.json (ROADMAP: keep the
-# 1/2/4-thread trajectory monotone) plus the telemetry disabled-path
-# overhead gate on BENCH_telemetry_overhead.json (<2%). Run via
-# `make check`.
+# 1/2/4-thread trajectory monotone), the telemetry disabled-path
+# overhead gate on BENCH_telemetry_overhead.json (<2%), and the
+# campaign-scheduler throughput gate on BENCH_campaign.json (cells/s at
+# 4 workers must not fall below serial). Run via `make check`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -33,6 +34,9 @@ bash scripts/chaos_smoke.sh
 echo "== trace smoke (JSONL trace schema + determinism) =="
 bash scripts/trace_smoke.sh
 
+echo "== campaign smoke (parallel scheduler cross-worker determinism) =="
+bash scripts/campaign_smoke.sh
+
 echo "== bench_perf (eval-engine section, fast budgets) =="
 AFARE_BENCH_FAST=1 cargo bench --bench bench_perf
 
@@ -58,6 +62,36 @@ print("  telemetry overhead gate: OK")
 EOF
 else
     echo "python3 unavailable; skipping telemetry overhead gate"
+fi
+
+echo "== BENCH_campaign.json scheduler throughput gate =="
+if command -v python3 >/dev/null 2>&1; then
+python3 - <<'EOF'
+import json
+import sys
+
+with open("BENCH_campaign.json") as f:
+    doc = json.load(f)
+
+rows = sorted(doc["workers"], key=lambda r: r["workers"])
+if len(rows) < 2:
+    sys.exit("campaign bench recorded fewer than 2 worker counts")
+for r in rows:
+    print(f"  {r['workers']}w: {r['wall_ms']:.1f} ms  {r['cells_per_s']:.1f} cells/s")
+speedup = doc.get("speedup_4w_vs_1w", 0.0)
+print(f"  speedup {rows[-1]['workers']}w vs serial: {speedup:.2f}x")
+ok = True
+# cells/s at the top worker count must not fall below serial
+if rows[-1]["cells_per_s"] < rows[0]["cells_per_s"]:
+    ok = False
+    print("NON-MONOTONE: parallel campaign slower than serial")
+if not doc.get("deterministic_across_workers", False):
+    ok = False
+    print("DETERMINISM flag missing from campaign bench output")
+sys.exit(0 if ok else "campaign scheduler throughput regressed")
+EOF
+else
+    echo "python3 unavailable; skipping campaign throughput gate"
 fi
 
 echo "== BENCH_eval_engine.json monotonicity =="
