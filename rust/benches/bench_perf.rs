@@ -9,9 +9,13 @@
 //!   synthetic campaign at 1, 2 and 4 cell workers with an exact-shaped
 //!   per-eval cost — lands in `BENCH_campaign.json`; asserts the report
 //!   is bitwise identical across worker counts as it goes.
-//! * **NSGA-II variation**: offspring/second of the extracted
-//!   tournament+crossover+mutation round at pop 128/512/1024 —
-//!   `BENCH_variation.json`.
+//! * **NSGA-II selection pipeline**: offspring/second of the extracted
+//!   tournament+crossover+mutation round plus the 2N-pool non-dominated
+//!   sort at pop 128/512/1024 × `selection_threads` 1/2/4 —
+//!   `BENCH_variation.json`. Asserts both determinism contracts as it
+//!   goes: `selection_threads = 1` bitwise-identical to the frozen
+//!   pre-parallelization oracle (`bench::suite::legacy_nsga2`) for the
+//!   golden seeds, and the forked path identical across thread counts.
 //! * PJRT batched execution latency (clean + faulty) per model.
 //! * NSGA-II optimizer throughput on the analytical objectives (no PJRT).
 //! * ΔAcc cache effect: NSGA-II wall time with and without memoization.
@@ -24,7 +28,7 @@
 use std::time::Duration;
 
 use afarepart::bench::suite::{
-    bench_budget, front_fingerprint, synthetic_manifest, synthetic_sensitivity,
+    bench_budget, front_fingerprint, legacy_nsga2, synthetic_manifest, synthetic_sensitivity,
 };
 use afarepart::bench::{
     bench_header, bench_ms, write_json_result, BenchConfig, BenchReport, Stopwatch,
@@ -33,7 +37,7 @@ use afarepart::coordinator::offline::{optimize_partitions, optimize_partitions_c
 use afarepart::experiment::Experiment;
 use afarepart::faults::{FaultScenario, RateVectors};
 use afarepart::hw::Platform;
-use afarepart::nsga2::{Individual, Nsga2, Nsga2Config};
+use afarepart::nsga2::{Individual, Nsga2, Nsga2Config, Problem};
 use afarepart::obs::Telemetry;
 use afarepart::partition::{DaccMode, Mapping, PartitionEvaluator, SensitivityTable};
 use afarepart::spec::campaign::{run_campaign_with, CampaignOptions, CampaignSpec};
@@ -359,18 +363,25 @@ fn bench_campaign(fast: bool) {
     write_json_result("BENCH_campaign.json", &doc);
 }
 
-/// NSGA-II variation throughput: the extracted tournament + two-point
-/// crossover + per-gene mutation round, isolated from evaluation.
+/// NSGA-II selection-pipeline throughput: the extracted tournament +
+/// crossover + mutation round plus the 2N-pool non-dominated sort
+/// (exactly the per-generation optimizer work between evaluations),
+/// isolated from evaluation, swept over `selection_threads` 1/2/4.
+/// Asserts both determinism contracts before writing the JSON the
+/// `scripts/check.sh` monotonicity gate reads.
 fn bench_variation(fast: bool) {
-    println!("\n-- NSGA-II variation (tournament + crossover + mutation) --");
+    println!("\n-- NSGA-II selection pipeline (variation + 2N-pool sort) --");
     let genome_len = 24;
     let alphabet = 3;
-    let rounds = if fast { 20 } else { 100 };
-    let mut t = Table::new(&["pop", "ms/round", "offspring/s"]);
-    let mut pop_objs = Vec::new();
-    for pop_size in [128usize, 512, 1024] {
-        // ranked parent pool with a plausible rank/crowding structure
+    let rounds = if fast { 5 } else { 20 };
+    let samples = 3; // min-of-samples: the stable statistic for the gate
+
+    // One timed sample: `rounds` iterations of one generation's optimizer
+    // work — produce a full offspring batch from a ranked parent pool,
+    // then rank a 2N parents+offspring pool.
+    let timed_sample = |pop_size: usize, sel_threads: usize| -> f64 {
         let mut rng = Rng::new(0xC0FFEE);
+        // ranked parent pool with a plausible rank/crowding structure
         let parents: Vec<Individual> = (0..pop_size)
             .map(|i| Individual {
                 genome: (0..genome_len).map(|_| rng.below(alphabet)).collect(),
@@ -379,33 +390,126 @@ fn bench_variation(fast: bool) {
                 crowding: if i % 7 == 0 { f64::INFINITY } else { (i % 11) as f64 },
             })
             .collect();
-        let mut opt = Nsga2::new(Nsga2Config { pop_size, ..Default::default() });
-        std::hint::black_box(opt.produce_offspring(&parents, alphabet)); // warm-up
+        // 2N elitist pool with layered 3-objective structure for the sort
+        let mut pool: Vec<Individual> = (0..2 * pop_size)
+            .map(|_| Individual {
+                genome: vec![0; genome_len],
+                objectives: (0..3).map(|_| (rng.below(64) as f64) * 0.5).collect(),
+                rank: usize::MAX,
+                crowding: 0.0,
+            })
+            .collect();
+        let mut opt = Nsga2::new(Nsga2Config {
+            pop_size,
+            selection_threads: sel_threads,
+            ..Default::default()
+        });
+        // warm-up (spawn threads, fault in code paths)
+        std::hint::black_box(opt.produce_offspring(&parents, alphabet));
+        std::hint::black_box(Nsga2::rank_population_threads(&mut pool, sel_threads));
         let sw = Stopwatch::start();
         for _ in 0..rounds {
             std::hint::black_box(opt.produce_offspring(&parents, alphabet));
+            std::hint::black_box(Nsga2::rank_population_threads(&mut pool, sel_threads));
         }
-        let wall_ms = sw.ms();
-        let ms_per_round = wall_ms / rounds as f64;
-        let offspring_per_s = (pop_size * rounds) as f64 / (wall_ms / 1e3);
-        t.row(vec![
-            pop_size.to_string(),
-            format!("{ms_per_round:.3}"),
-            format!("{offspring_per_s:.0}"),
-        ]);
-        pop_objs.push(obj(vec![
-            ("pop_size", num(pop_size as f64)),
-            ("ms_per_round", num(ms_per_round)),
-            ("offspring_per_s", num(offspring_per_s)),
-        ]));
+        sw.ms()
+    };
+
+    let thread_counts = [1usize, 2, 4];
+    let mut t = Table::new(&["pop", "threads", "ms/round", "offspring/s", "speedup"]);
+    let mut pop_objs = Vec::new();
+    for pop_size in [128usize, 512, 1024] {
+        let mut wall_1t = f64::NAN;
+        for &sel in &thread_counts {
+            let mut wall_ms = f64::INFINITY;
+            for _ in 0..samples {
+                wall_ms = wall_ms.min(timed_sample(pop_size, sel));
+            }
+            if sel == 1 {
+                wall_1t = wall_ms;
+            }
+            let ms_per_round = wall_ms / rounds as f64;
+            let offspring_per_s = (pop_size * rounds) as f64 / (wall_ms / 1e3);
+            let speedup = wall_1t / wall_ms;
+            t.row(vec![
+                pop_size.to_string(),
+                sel.to_string(),
+                format!("{ms_per_round:.3}"),
+                format!("{offspring_per_s:.0}"),
+                format!("{speedup:.2}x"),
+            ]);
+            pop_objs.push(obj(vec![
+                ("pop_size", num(pop_size as f64)),
+                ("selection_threads", num(sel as f64)),
+                ("wall_ms", num(wall_ms)),
+                ("ms_per_round", num(ms_per_round)),
+                ("offspring_per_s", num(offspring_per_s)),
+                ("speedup_vs_1t", num(speedup)),
+            ]));
+        }
     }
     print!("{}", t.render());
+
+    // Determinism contract 1: `selection_threads = 1` replays the golden
+    // seeds bitwise-identically to the frozen pre-parallelization oracle.
+    struct Toy;
+    impl Problem for Toy {
+        fn genome_len(&self) -> usize {
+            12
+        }
+        fn alphabet(&self) -> usize {
+            3
+        }
+        fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+            let sum = g.iter().sum::<usize>() as f64;
+            let twos = g.iter().filter(|&&x| x == 2).count() as f64;
+            vec![sum, 12.0 - twos]
+        }
+    }
+    let golden_seeds = [7u64, 11, 23];
+    for &seed in &golden_seeds {
+        let cfg = Nsga2Config { pop_size: 16, generations: 8, seed, ..Default::default() };
+        let current = front_fingerprint(&Nsga2::new(cfg.clone()).run(&mut Toy, |_| {}));
+        let legacy = front_fingerprint(&legacy_nsga2::run(&cfg, &mut Toy));
+        assert_eq!(
+            current, legacy,
+            "LEGACY CONTRACT VIOLATION: selection_threads=1 front at seed {seed} \
+             differs from the frozen pre-PR serial NSGA-II"
+        );
+    }
+    println!("serial path bitwise-identical to pre-PR fronts (golden seeds {golden_seeds:?}) ✓");
+
+    // Determinism contract 2: the forked path is a pure function of the
+    // seed — identical fronts at selection_threads 2 and 4.
+    for &seed in &golden_seeds {
+        let forked = |sel: usize| {
+            let cfg = Nsga2Config {
+                pop_size: 16,
+                generations: 8,
+                seed,
+                selection_threads: sel,
+                ..Default::default()
+            };
+            front_fingerprint(&Nsga2::new(cfg).run(&mut Toy, |_| {}))
+        };
+        assert_eq!(
+            forked(2),
+            forked(4),
+            "FORKED CONTRACT VIOLATION: front at seed {seed} depends on the thread count"
+        );
+    }
+    println!("forked path identical across thread counts (bitwise) ✓");
+
     let doc: Value = obj(vec![
         ("bench", s("variation")),
         ("genome_len", num(genome_len as f64)),
         ("alphabet", num(alphabet as f64)),
         ("rounds", num(rounds as f64)),
+        ("samples", num(samples as f64)),
         ("pops", arr(pop_objs)),
+        ("golden_seeds", arr(golden_seeds.iter().map(|&x| num(x as f64)))),
+        ("serial_bitwise_identical", Value::Bool(true)),
+        ("forked_deterministic", Value::Bool(true)),
     ]);
     write_json_result("BENCH_variation.json", &doc);
 }

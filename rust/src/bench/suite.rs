@@ -242,6 +242,270 @@ pub fn front_fingerprint(front: &[Individual]) -> Vec<(Vec<usize>, Vec<u64>)> {
         .collect()
 }
 
+/// Frozen reference copy of the pre-parallelization serial NSGA-II — the
+/// bitwise oracle for the `selection_threads <= 1` legacy contract.
+///
+/// This module is a verbatim snapshot of the optimizer core as it stood
+/// before the parallel selection pipeline landed (same operators, same
+/// single config-seeded PRNG, same consumption order), minus telemetry.
+/// `bench_perf`'s variation section and the `nsga2_parallel` integration
+/// test replay golden seeds through both and require identical
+/// [`front_fingerprint`]s, so any accidental behavior change to the
+/// serial path in `crate::nsga2` fails loudly. **Do not "fix" or
+/// refactor this copy** — drift from the live implementation is exactly
+/// what it exists to detect. It predates the NaN guards, so feed it
+/// finite objectives only (`partial_cmp().unwrap()` panics otherwise,
+/// which was the old behavior).
+pub mod legacy_nsga2 {
+    use crate::nsga2::{Individual, Nsga2Config, Problem};
+    use crate::util::prng::Rng;
+
+    fn dominates(a: &[f64], b: &[f64]) -> bool {
+        let mut strictly = false;
+        for (x, y) in a.iter().zip(b) {
+            if x > y {
+                return false;
+            }
+            if x < y {
+                strictly = true;
+            }
+        }
+        strictly
+    }
+
+    fn fast_non_dominated_sort(objs: &[&[f64]]) -> Vec<Vec<usize>> {
+        let n = objs.len();
+        let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut domination_count = vec![0usize; n];
+        let mut fronts: Vec<Vec<usize>> = vec![Vec::new()];
+        for p in 0..n {
+            for q in (p + 1)..n {
+                if dominates(objs[p], objs[q]) {
+                    dominated_by[p].push(q);
+                    domination_count[q] += 1;
+                } else if dominates(objs[q], objs[p]) {
+                    dominated_by[q].push(p);
+                    domination_count[p] += 1;
+                }
+            }
+        }
+        for p in 0..n {
+            if domination_count[p] == 0 {
+                fronts[0].push(p);
+            }
+        }
+        let mut i = 0;
+        while !fronts[i].is_empty() {
+            let mut next = Vec::new();
+            for &p in &fronts[i] {
+                for &q in &dominated_by[p] {
+                    domination_count[q] -= 1;
+                    if domination_count[q] == 0 {
+                        next.push(q);
+                    }
+                }
+            }
+            i += 1;
+            fronts.push(next);
+        }
+        fronts.pop();
+        fronts
+    }
+
+    fn crowding_distance(objs: &[&[f64]]) -> Vec<f64> {
+        let n = objs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n <= 2 {
+            return vec![f64::INFINITY; n];
+        }
+        let m = objs[0].len();
+        let mut dist = vec![0.0f64; n];
+        let mut idx: Vec<usize> = (0..n).collect();
+        for k in 0..m {
+            idx.sort_by(|&a, &b| objs[a][k].partial_cmp(&objs[b][k]).unwrap());
+            let lo = objs[idx[0]][k];
+            let hi = objs[idx[n - 1]][k];
+            dist[idx[0]] = f64::INFINITY;
+            dist[idx[n - 1]] = f64::INFINITY;
+            let range = hi - lo;
+            if range <= 0.0 {
+                continue;
+            }
+            for w in 1..n - 1 {
+                let prev = objs[idx[w - 1]][k];
+                let next = objs[idx[w + 1]][k];
+                if dist[idx[w]].is_finite() {
+                    dist[idx[w]] += (next - prev) / range;
+                }
+            }
+        }
+        dist
+    }
+
+    fn rank_population(pop: &mut [Individual]) -> Vec<Vec<usize>> {
+        let fronts = {
+            let objs: Vec<&[f64]> = pop.iter().map(|i| i.objectives.as_slice()).collect();
+            fast_non_dominated_sort(&objs)
+        };
+        for (rank, front) in fronts.iter().enumerate() {
+            let crowd = {
+                let front_objs: Vec<&[f64]> =
+                    front.iter().map(|&i| pop[i].objectives.as_slice()).collect();
+                crowding_distance(&front_objs)
+            };
+            for (k, &i) in front.iter().enumerate() {
+                pop[i].rank = rank;
+                pop[i].crowding = crowd[k];
+            }
+        }
+        fronts
+    }
+
+    fn tournament<'a>(rng: &mut Rng, pop: &'a [Individual]) -> &'a Individual {
+        let a = &pop[rng.below(pop.len())];
+        let b = &pop[rng.below(pop.len())];
+        if a.rank < b.rank || (a.rank == b.rank && a.crowding > b.crowding) {
+            a
+        } else {
+            b
+        }
+    }
+
+    fn crossover(
+        rng: &mut Rng,
+        crossover_prob: f64,
+        a: &[usize],
+        b: &[usize],
+    ) -> (Vec<usize>, Vec<usize>) {
+        let n = a.len();
+        if !rng.chance(crossover_prob) || n < 2 {
+            return (a.to_vec(), b.to_vec());
+        }
+        if rng.chance(0.5) {
+            let mut c = a.to_vec();
+            let mut d = b.to_vec();
+            for i in 0..n {
+                if rng.chance(0.5) {
+                    std::mem::swap(&mut c[i], &mut d[i]);
+                }
+            }
+            (c, d)
+        } else {
+            let (mut i, mut j) = (rng.below(n), rng.below(n));
+            if i > j {
+                std::mem::swap(&mut i, &mut j);
+            }
+            let mut c = a.to_vec();
+            let mut d = b.to_vec();
+            for k in i..=j {
+                std::mem::swap(&mut c[k], &mut d[k]);
+            }
+            (c, d)
+        }
+    }
+
+    fn mutate(rng: &mut Rng, mutation_prob: f64, genome: &mut [usize], alphabet: usize) {
+        for g in genome.iter_mut() {
+            if rng.chance(mutation_prob) {
+                *g = rng.below(alphabet);
+            }
+        }
+    }
+
+    fn produce_offspring(
+        rng: &mut Rng,
+        cfg: &Nsga2Config,
+        pop: &[Individual],
+        alphabet: usize,
+    ) -> Vec<Vec<usize>> {
+        let mut offspring_genomes = Vec::with_capacity(cfg.pop_size);
+        while offspring_genomes.len() < cfg.pop_size {
+            let pa = tournament(rng, pop);
+            let pb = tournament(rng, pop);
+            let (mut c, mut d) = crossover(rng, cfg.crossover_prob, &pa.genome, &pb.genome);
+            mutate(rng, cfg.mutation_prob, &mut c, alphabet);
+            mutate(rng, cfg.mutation_prob, &mut d, alphabet);
+            offspring_genomes.push(c);
+            if offspring_genomes.len() < cfg.pop_size {
+                offspring_genomes.push(d);
+            }
+        }
+        offspring_genomes
+    }
+
+    fn evaluate_all<P: Problem>(problem: &mut P, genomes: Vec<Vec<usize>>) -> Vec<Individual> {
+        let objectives = problem.evaluate_batch(&genomes);
+        genomes
+            .into_iter()
+            .zip(objectives)
+            .map(|(genome, objectives)| Individual {
+                genome,
+                objectives,
+                rank: usize::MAX,
+                crowding: 0.0,
+            })
+            .collect()
+    }
+
+    /// The frozen pre-parallelization run loop: returns the final first
+    /// front exactly as `Nsga2::run` did (and `selection_threads <= 1`
+    /// still must).
+    pub fn run<P: Problem>(cfg: &Nsga2Config, problem: &mut P) -> Vec<Individual> {
+        let len = problem.genome_len();
+        let alphabet = problem.alphabet();
+        assert!(alphabet >= 1 && len >= 1);
+        let mut rng = Rng::new(cfg.seed);
+
+        let mut genomes: Vec<Vec<usize>> = problem
+            .seeds()
+            .into_iter()
+            .filter(|g| g.len() == len && g.iter().all(|&x| x < alphabet))
+            .take(cfg.pop_size)
+            .collect();
+        while genomes.len() < cfg.pop_size {
+            genomes.push((0..len).map(|_| rng.below(alphabet)).collect());
+        }
+        let mut pop = evaluate_all(problem, genomes);
+        rank_population(&mut pop);
+
+        for _generation in 0..cfg.generations {
+            let offspring_genomes = produce_offspring(&mut rng, cfg, &pop, alphabet);
+            let offspring = evaluate_all(problem, offspring_genomes);
+            pop.extend(offspring);
+            let fronts = rank_population(&mut pop);
+            let mut next: Vec<Individual> = Vec::with_capacity(cfg.pop_size);
+            for front in &fronts {
+                if next.len() + front.len() <= cfg.pop_size {
+                    for &i in front {
+                        next.push(pop[i].clone());
+                    }
+                } else {
+                    let mut rest: Vec<usize> = front.clone();
+                    rest.sort_by(|&a, &b| {
+                        pop[b]
+                            .crowding
+                            .partial_cmp(&pop[a].crowding)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    for &i in rest.iter().take(cfg.pop_size - next.len()) {
+                        next.push(pop[i].clone());
+                    }
+                    break;
+                }
+            }
+            pop = next;
+            rank_population(&mut pop);
+        }
+
+        let mut front: Vec<Individual> = pop.into_iter().filter(|i| i.rank == 0).collect();
+        front.sort_by(|a, b| a.genome.cmp(&b.genome));
+        front.dedup_by(|a, b| a.genome == b.genome);
+        front
+    }
+}
+
 /// Standard bench budget: full-fidelity by default, shrunk under
 /// AFARE_BENCH_FAST (set by CI / quick runs).
 pub fn bench_budget(fast: bool) -> (ExperimentConfig, Nsga2Config) {
@@ -307,6 +571,36 @@ mod tests {
         let clean = synthetic_predictions(&eval.images, 48, 10, &RateVectors::zeros(6), [9, 9]);
         let flipped = a.iter().zip(&clean).filter(|(x, y)| x != y).count();
         assert!(flipped > 0, "heavy faults must flip some predictions");
+    }
+
+    #[test]
+    fn legacy_oracle_matches_current_serial_path() {
+        // the `selection_threads <= 1` bitwise contract, checked for the
+        // golden seeds the bench replays
+        struct Toy;
+        impl crate::nsga2::Problem for Toy {
+            fn genome_len(&self) -> usize {
+                8
+            }
+            fn alphabet(&self) -> usize {
+                3
+            }
+            fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+                let sum = g.iter().sum::<usize>() as f64;
+                let twos = g.iter().filter(|&&x| x == 2).count() as f64;
+                vec![sum, 8.0 - twos]
+            }
+        }
+        for seed in [7u64, 11, 23] {
+            let cfg = Nsga2Config { pop_size: 12, generations: 6, seed, ..Default::default() };
+            let current = crate::nsga2::Nsga2::new(cfg.clone()).run(&mut Toy, |_| {});
+            let legacy = legacy_nsga2::run(&cfg, &mut Toy);
+            assert_eq!(
+                front_fingerprint(&current),
+                front_fingerprint(&legacy),
+                "serial path diverged from the frozen pre-PR oracle at seed {seed}"
+            );
+        }
     }
 
     #[test]

@@ -118,6 +118,14 @@ mod tests {
     }
 
     #[test]
+    fn selection_threads_parses_both_forms() {
+        let a = Args::parse(&sv(&["offline", "--selection-threads", "4"]), &[]);
+        assert_eq!(a.get_usize("selection-threads", 1), 4);
+        let b = Args::parse(&sv(&["offline", "--selection-threads=2"]), &[]);
+        assert_eq!(b.get_usize("selection-threads", 1), 2);
+    }
+
+    #[test]
     fn typed_getters_fall_back() {
         let a = Args::parse(&sv(&["x", "--n", "abc"]), &[]);
         assert_eq!(a.get_usize("n", 7), 7);

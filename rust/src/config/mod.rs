@@ -24,7 +24,10 @@ pub struct ExperimentConfig {
     pub fault_rate: f32,
     /// Fault scenario (Table II columns).
     pub scenario: FaultScenario,
-    /// NSGA-II settings (paper §VI-A: pop 60, gens 60).
+    /// NSGA-II settings (paper §VI-A: pop 60, gens 60). Carries the
+    /// `selection_threads` knob for the selection/variation pipeline
+    /// (1 = legacy bitwise serial path; >= 2 = seed-deterministic
+    /// parallel path) — plumbed from the spec layer via `to_nsga2`.
     pub nsga2: Nsga2Config,
     /// Accuracy-drop threshold θ for the online phase.
     pub theta: f64,

@@ -102,6 +102,9 @@ fn print_help() {
            --pop <n> --gens <n>     NSGA-II budget (default 60/60)\n\
            --eval-limit <n>         eval samples for exact dAcc (default 256)\n\
            --eval-threads <n>       ΔAcc eval engine workers (0 = auto; same results at any n)\n\
+           --selection-threads <n>  NSGA-II selection/variation workers (default 1 = legacy\n\
+                                    bitwise serial path; >=2 = seed-deterministic parallel\n\
+                                    path, same results at any n >= 2)\n\
            --campaign-workers <n>   campaign cell workers (0 = auto budget split;\n\
                                     report is identical at any n)\n\
            --surrogate              use the layer-sensitivity surrogate\n\

@@ -1,6 +1,20 @@
 //! Crowding distance (Deb et al. 2002, §III-B): diversity preservation
 //! within a front; boundary solutions get +∞ so extremes always survive.
 
+/// Total-order comparator, NaN sorting last. For finite values this is
+/// exactly `partial_cmp` (stable sort keeps `-0.0`/`0.0` ties in index
+/// order, like the old `.unwrap()` comparator did), but a NaN objective
+/// no longer aborts the run — it orders after every real value,
+/// consistent with the `unwrap_or(Equal)` truncation sort in
+/// `nsga2/mod.rs`, and the NaN-range guard below keeps it out of every
+/// finite member's distance.
+fn nan_last(a: f64, b: f64) -> std::cmp::Ordering {
+    match a.partial_cmp(&b) {
+        Some(o) => o,
+        None => a.is_nan().cmp(&b.is_nan()),
+    }
+}
+
 /// Crowding distance of each member of one front (same index order).
 pub fn crowding_distance(objs: &[&[f64]]) -> Vec<f64> {
     let n = objs.len();
@@ -14,14 +28,14 @@ pub fn crowding_distance(objs: &[&[f64]]) -> Vec<f64> {
     let mut dist = vec![0.0f64; n];
     let mut idx: Vec<usize> = (0..n).collect();
     for k in 0..m {
-        idx.sort_by(|&a, &b| objs[a][k].partial_cmp(&objs[b][k]).unwrap());
+        idx.sort_by(|&a, &b| nan_last(objs[a][k], objs[b][k]));
         let lo = objs[idx[0]][k];
         let hi = objs[idx[n - 1]][k];
         dist[idx[0]] = f64::INFINITY;
         dist[idx[n - 1]] = f64::INFINITY;
         let range = hi - lo;
-        if range <= 0.0 {
-            continue; // degenerate objective: contributes nothing
+        if range.is_nan() || range <= 0.0 {
+            continue; // degenerate (or NaN-poisoned) objective: contributes nothing
         }
         for w in 1..n - 1 {
             let prev = objs[idx[w - 1]][k];
@@ -69,6 +83,34 @@ mod tests {
         let pts: Vec<&[f64]> = vec![&[1.0, 5.0], &[1.0, 3.0], &[1.0, 1.0]];
         let d = crowding_distance(&pts);
         assert!(d.iter().all(|x| !x.is_nan()));
+    }
+
+    #[test]
+    fn nan_objective_does_not_panic_and_sorts_last() {
+        // regression: the old `partial_cmp().unwrap()` comparator aborted
+        // the whole run on the first NaN objective
+        let pts: Vec<&[f64]> =
+            vec![&[0.0, 3.0], &[f64::NAN, 2.0], &[2.0, 1.0], &[3.0, 0.0], &[1.0, 2.5]];
+        let d = crowding_distance(&pts);
+        assert_eq!(d.len(), 5);
+        // the NaN-poisoned objective contributes nothing, so every finite
+        // member's distance stays NaN-free
+        assert!(d.iter().all(|x| !x.is_nan()), "{d:?}");
+        // objective 0's range is NaN -> skipped; objective 1 still ranks
+        // its own boundaries infinite
+        assert!(d[3].is_infinite());
+    }
+
+    #[test]
+    fn nan_last_is_a_total_order() {
+        use std::cmp::Ordering::*;
+        assert_eq!(nan_last(1.0, 2.0), Less);
+        assert_eq!(nan_last(2.0, 1.0), Greater);
+        assert_eq!(nan_last(1.0, 1.0), Equal);
+        assert_eq!(nan_last(f64::NAN, 1.0), Greater);
+        assert_eq!(nan_last(1.0, f64::NAN), Less);
+        assert_eq!(nan_last(f64::NAN, f64::NAN), Equal);
+        assert_eq!(nan_last(f64::NEG_INFINITY, f64::INFINITY), Less);
     }
 
     #[test]

@@ -23,6 +23,29 @@
 //! consumed in submission order — so for a fixed seed the population
 //! trajectory (and final front) is bitwise identical whether a problem
 //! evaluates serially or in parallel.
+//!
+//! # Parallel selection pipeline
+//!
+//! [`Nsga2Config::selection_threads`] parallelizes the optimizer's own
+//! hot loops — the O(M·N²) domination matrix, per-front crowding, and
+//! offspring variation — with two distinct determinism contracts:
+//!
+//! * `selection_threads <= 1` (default): the **legacy bitwise contract**.
+//!   Variation consumes the single config-seeded PRNG in the historical
+//!   order; trajectories are bit-for-bit what every release to date
+//!   produced (frozen as a reference oracle in
+//!   `bench::suite::legacy_nsga2`).
+//! * `selection_threads >= 2`: the **self-deterministic parallel
+//!   contract**. Each offspring pair draws from its own counter-derived
+//!   stream ([`crate::util::prng::Rng::fork`]`(seed, generation, pair)`),
+//!   so the trajectory is a pure function of the seed — bitwise identical
+//!   across repeats and across *any* thread count ≥ 2, but (by design) a
+//!   different sequence than the legacy serial path.
+//!
+//! Sorting and crowding fan-outs are result-identical to serial at any
+//! thread count (row chunking preserves `S_p` order; fronts are
+//! independent), so they run under the same knob without affecting
+//! either contract.
 
 mod crowding;
 mod hypervolume;
@@ -30,7 +53,7 @@ mod sort;
 
 pub use crowding::crowding_distance;
 pub use hypervolume::{front_hypervolume, hypervolume};
-pub use sort::{dominates, fast_non_dominated_sort};
+pub use sort::{dominates, fast_non_dominated_sort, fast_non_dominated_sort_threads};
 
 use crate::obs::Telemetry;
 use crate::util::json::num;
@@ -53,6 +76,14 @@ pub struct Nsga2Config {
     pub crossover_prob: f64,
     pub mutation_prob: f64,
     pub seed: u64,
+    /// Worker threads for the selection pipeline (domination matrix,
+    /// per-front crowding, offspring variation). `0`/`1` = the legacy
+    /// bitwise-exact serial PRNG path; `>= 2` selects the
+    /// self-deterministic parallel variation algorithm, whose results
+    /// depend only on the seed — never on the actual thread count (see
+    /// module docs). Sorting/crowding results are serial-identical at
+    /// any value.
+    pub selection_threads: usize,
 }
 
 impl Default for Nsga2Config {
@@ -63,6 +94,7 @@ impl Default for Nsga2Config {
             crossover_prob: 0.9,
             mutation_prob: 0.08,
             seed: 7,
+            selection_threads: 1,
         }
     }
 }
@@ -104,13 +136,18 @@ pub struct Nsga2 {
     cfg: Nsga2Config,
     rng: Rng,
     evaluations: usize,
+    /// Variation rounds produced so far — the `stream` coordinate of the
+    /// parallel path's counter-derived PRNG forks, so every generation
+    /// (and every standalone `produce_offspring` call) gets fresh
+    /// per-pair streams.
+    variation_epoch: u64,
     telemetry: Telemetry,
 }
 
 impl Nsga2 {
     pub fn new(cfg: Nsga2Config) -> Self {
         let rng = Rng::new(cfg.seed);
-        Nsga2 { cfg, rng, evaluations: 0, telemetry: Telemetry::disabled() }
+        Nsga2 { cfg, rng, evaluations: 0, variation_epoch: 0, telemetry: Telemetry::disabled() }
     }
 
     /// Attach the run's telemetry handle (builder form). Each generation
@@ -141,6 +178,17 @@ impl Nsga2 {
             genomes.len(),
             "evaluate_batch must return one objective vector per genome"
         );
+        // NaN/∞ boundary check: a non-finite objective compares false both
+        // ways in `dominates`, is never dominated, and would silently
+        // pollute front 0 — fail loudly here, naming the offender.
+        for (genome, objs) in genomes.iter().zip(&objectives) {
+            assert!(
+                objs.iter().all(|x| x.is_finite()),
+                "problem produced a non-finite objective vector {objs:?} \
+                 for genome {genome:?}; NaN/infinite objectives corrupt \
+                 Pareto ranking (never dominated -> land in front 0)"
+            );
+        }
         genomes
             .into_iter()
             .zip(objectives)
@@ -154,17 +202,54 @@ impl Nsga2 {
     }
 
     /// Assign ranks + crowding in place; returns the fronts (index lists).
-    fn rank_population(pop: &mut [Individual]) -> Vec<Vec<usize>> {
+    /// Serial entry point — identical to `rank_population_threads(pop, 1)`.
+    pub fn rank_population(pop: &mut [Individual]) -> Vec<Vec<usize>> {
+        Self::rank_population_threads(pop, 1)
+    }
+
+    /// [`Nsga2::rank_population`] with the domination matrix row-chunked
+    /// and per-front crowding distances computed across `threads` scoped
+    /// workers. Fronts are independent of each other, and the parallel
+    /// sort is order-identical to serial, so the assigned ranks/crowding
+    /// are the same at any thread count.
+    pub fn rank_population_threads(pop: &mut [Individual], threads: usize) -> Vec<Vec<usize>> {
         let fronts = {
             let objs: Vec<&[f64]> = pop.iter().map(|i| i.objectives.as_slice()).collect();
-            fast_non_dominated_sort(&objs)
+            fast_non_dominated_sort_threads(&objs, threads)
         };
-        for (rank, front) in fronts.iter().enumerate() {
-            let crowd = {
+        let crowds: Vec<Vec<f64>> = if threads >= 2 && fronts.len() >= 2 {
+            let pop_view: &[Individual] = pop;
+            let front_crowd = |front: &[usize]| {
                 let front_objs: Vec<&[f64]> =
-                    front.iter().map(|&i| pop[i].objectives.as_slice()).collect();
+                    front.iter().map(|&i| pop_view[i].objectives.as_slice()).collect();
                 crowding_distance(&front_objs)
             };
+            let mut crowds: Vec<Vec<f64>> = vec![Vec::new(); fronts.len()];
+            let chunk = fronts.len().div_ceil(threads);
+            std::thread::scope(|scope| {
+                let front_crowd = &front_crowd;
+                for (out_chunk, front_chunk) in
+                    crowds.chunks_mut(chunk).zip(fronts.chunks(chunk))
+                {
+                    scope.spawn(move || {
+                        for (out, front) in out_chunk.iter_mut().zip(front_chunk) {
+                            *out = front_crowd(front);
+                        }
+                    });
+                }
+            });
+            crowds
+        } else {
+            fronts
+                .iter()
+                .map(|front| {
+                    let front_objs: Vec<&[f64]> =
+                        front.iter().map(|&i| pop[i].objectives.as_slice()).collect();
+                    crowding_distance(&front_objs)
+                })
+                .collect()
+        };
+        for (rank, (front, crowd)) in fronts.iter().zip(&crowds).enumerate() {
             for (k, &i) in front.iter().enumerate() {
                 pop[i].rank = rank;
                 pop[i].crowding = crowd[k];
@@ -174,9 +259,11 @@ impl Nsga2 {
     }
 
     /// Binary tournament: lower rank wins; ties broken by larger crowding.
-    fn tournament<'a>(&mut self, pop: &'a [Individual]) -> &'a Individual {
-        let a = &pop[self.rng.below(pop.len())];
-        let b = &pop[self.rng.below(pop.len())];
+    /// Static so the forked parallel path can run it on a per-pair RNG;
+    /// the draw order is exactly the historical method's.
+    fn tournament_with<'a>(rng: &mut Rng, pop: &'a [Individual]) -> &'a Individual {
+        let a = &pop[rng.below(pop.len())];
+        let b = &pop[rng.below(pop.len())];
         if a.rank < b.rank || (a.rank == b.rank && a.crowding > b.crowding) {
             a
         } else {
@@ -184,24 +271,29 @@ impl Nsga2 {
         }
     }
 
-    fn crossover(&mut self, a: &[usize], b: &[usize]) -> (Vec<usize>, Vec<usize>) {
+    fn crossover_with(
+        rng: &mut Rng,
+        crossover_prob: f64,
+        a: &[usize],
+        b: &[usize],
+    ) -> (Vec<usize>, Vec<usize>) {
         let n = a.len();
-        if !self.rng.chance(self.cfg.crossover_prob) || n < 2 {
+        if !rng.chance(crossover_prob) || n < 2 {
             return (a.to_vec(), b.to_vec());
         }
-        if self.rng.chance(0.5) {
+        if rng.chance(0.5) {
             // uniform
             let mut c = a.to_vec();
             let mut d = b.to_vec();
             for i in 0..n {
-                if self.rng.chance(0.5) {
+                if rng.chance(0.5) {
                     std::mem::swap(&mut c[i], &mut d[i]);
                 }
             }
             (c, d)
         } else {
             // two-point
-            let (mut i, mut j) = (self.rng.below(n), self.rng.below(n));
+            let (mut i, mut j) = (rng.below(n), rng.below(n));
             if i > j {
                 std::mem::swap(&mut i, &mut j);
             }
@@ -214,35 +306,104 @@ impl Nsga2 {
         }
     }
 
-    fn mutate(&mut self, genome: &mut [usize], alphabet: usize) {
+    fn mutate_with(rng: &mut Rng, mutation_prob: f64, genome: &mut [usize], alphabet: usize) {
         for g in genome.iter_mut() {
-            if self.rng.chance(self.cfg.mutation_prob) {
-                *g = self.rng.below(alphabet);
+            if rng.chance(mutation_prob) {
+                *g = rng.below(alphabet);
             }
         }
     }
 
     /// One full round of variation: tournament-select parents from
     /// `pop` (which must already be ranked) and produce `pop_size`
-    /// offspring genomes via two-point crossover + per-gene mutation.
-    /// PRNG consumption order is identical to the inline loop `run`
-    /// used historically, so extracting it is behavior-preserving; it
-    /// is `pub` so `bench_perf` can profile variation throughput in
-    /// isolation (`BENCH_variation.json`).
+    /// offspring genomes via crossover + per-gene mutation. It is `pub`
+    /// so `bench_perf` can profile variation throughput in isolation
+    /// (`BENCH_variation.json`).
+    ///
+    /// Dispatches on [`Nsga2Config::selection_threads`]: `<= 1` keeps
+    /// the legacy serial loop, whose PRNG consumption order is identical
+    /// to the inline loop `run` used historically (behavior-preserving);
+    /// `>= 2` uses per-pair counter-derived streams — bitwise identical
+    /// for a given seed at any thread count, but a different (equally
+    /// valid) sequence than the serial path.
     pub fn produce_offspring(&mut self, pop: &[Individual], alphabet: usize) -> Vec<Vec<usize>> {
-        let mut offspring_genomes = Vec::with_capacity(self.cfg.pop_size);
-        while offspring_genomes.len() < self.cfg.pop_size {
-            let pa = self.tournament(pop);
-            let pb = self.tournament(pop);
-            let (mut c, mut d) = self.crossover(&pa.genome, &pb.genome);
-            self.mutate(&mut c, alphabet);
-            self.mutate(&mut d, alphabet);
-            offspring_genomes.push(c);
-            if offspring_genomes.len() < self.cfg.pop_size {
-                offspring_genomes.push(d);
+        let epoch = self.variation_epoch;
+        self.variation_epoch += 1;
+        if self.cfg.selection_threads <= 1 {
+            let mut offspring_genomes = Vec::with_capacity(self.cfg.pop_size);
+            while offspring_genomes.len() < self.cfg.pop_size {
+                let pa = Self::tournament_with(&mut self.rng, pop);
+                let pb = Self::tournament_with(&mut self.rng, pop);
+                let (mut c, mut d) = Self::crossover_with(
+                    &mut self.rng,
+                    self.cfg.crossover_prob,
+                    &pa.genome,
+                    &pb.genome,
+                );
+                Self::mutate_with(&mut self.rng, self.cfg.mutation_prob, &mut c, alphabet);
+                Self::mutate_with(&mut self.rng, self.cfg.mutation_prob, &mut d, alphabet);
+                offspring_genomes.push(c);
+                if offspring_genomes.len() < self.cfg.pop_size {
+                    offspring_genomes.push(d);
+                }
             }
+            offspring_genomes
+        } else {
+            self.produce_offspring_forked(pop, alphabet, epoch)
         }
-        offspring_genomes
+    }
+
+    /// Parallel variation: offspring pair `p` draws every random decision
+    /// from `Rng::fork(seed, epoch, p)`, so the generation is a pure
+    /// function of `(seed, epoch)` — the thread count only changes how
+    /// pairs are scheduled, never what they produce. Slots are
+    /// pre-allocated and handed out as disjoint `&mut` chunks of whole
+    /// pairs, so workers never contend.
+    fn produce_offspring_forked(
+        &self,
+        pop: &[Individual],
+        alphabet: usize,
+        epoch: u64,
+    ) -> Vec<Vec<usize>> {
+        let pop_size = self.cfg.pop_size;
+        let pairs = pop_size.div_ceil(2);
+        let mut slots: Vec<Vec<usize>> = vec![Vec::new(); pop_size];
+        if pairs == 0 {
+            return slots;
+        }
+        let threads = self.cfg.selection_threads.clamp(1, pairs);
+
+        let run_pair = |pair_idx: usize, out: &mut [Vec<usize>]| {
+            let mut rng = Rng::fork(self.cfg.seed, epoch, pair_idx as u64);
+            let pa = Self::tournament_with(&mut rng, pop);
+            let pb = Self::tournament_with(&mut rng, pop);
+            let (mut c, mut d) = Self::crossover_with(
+                &mut rng,
+                self.cfg.crossover_prob,
+                &pa.genome,
+                &pb.genome,
+            );
+            Self::mutate_with(&mut rng, self.cfg.mutation_prob, &mut c, alphabet);
+            Self::mutate_with(&mut rng, self.cfg.mutation_prob, &mut d, alphabet);
+            out[0] = c;
+            if out.len() > 1 {
+                out[1] = d; // odd pop_size: the last pair's second child is dropped
+            }
+        };
+
+        let pair_chunk = pairs.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let run_pair = &run_pair;
+            for (ci, slot_chunk) in slots.chunks_mut(2 * pair_chunk).enumerate() {
+                let base_pair = ci * pair_chunk;
+                scope.spawn(move || {
+                    for (k, out) in slot_chunk.chunks_mut(2).enumerate() {
+                        run_pair(base_pair + k, out);
+                    }
+                });
+            }
+        });
+        slots
     }
 
     /// Run the full loop; returns the final first front (Pareto set).
@@ -260,6 +421,8 @@ impl Nsga2 {
         let mut run_span = telemetry.span("opt.run");
         run_span.note("pop_size", num(self.cfg.pop_size as f64));
         run_span.note("generations", num(self.cfg.generations as f64));
+        let sel_threads = self.cfg.selection_threads.max(1);
+        telemetry.gauge_set("opt_selection_threads", sel_threads as f64);
 
         // initial population: seeds first, then random fill
         let mut genomes: Vec<Vec<usize>> = problem
@@ -272,7 +435,7 @@ impl Nsga2 {
             genomes.push(self.random_genome(len, alphabet));
         }
         let mut pop = self.evaluate_all(problem, genomes);
-        Self::rank_population(&mut pop);
+        Self::rank_population_threads(&mut pop, sel_threads);
 
         for generation in 0..self.cfg.generations {
             let mut gen_span = telemetry.span("opt.generation");
@@ -280,12 +443,22 @@ impl Nsga2 {
             // variation first: collect the full offspring generation so it
             // can be evaluated as one batch. Parents are borrowed from the
             // population (cloned exactly once, inside crossover).
-            let offspring_genomes = self.produce_offspring(&pop, alphabet);
+            let offspring_genomes = {
+                let mut var_span = telemetry.span("opt.variation");
+                var_span.note("generation", num(generation as f64));
+                var_span.note("threads", num(sel_threads as f64));
+                self.produce_offspring(&pop, alphabet)
+            };
             let offspring = self.evaluate_all(problem, offspring_genomes);
 
             // elitist environmental selection over parents + offspring
             pop.extend(offspring);
-            let fronts = Self::rank_population(&mut pop);
+            let fronts = {
+                let mut sort_span = telemetry.span("opt.sort");
+                sort_span.note("generation", num(generation as f64));
+                sort_span.note("pool", num(pop.len() as f64));
+                Self::rank_population_threads(&mut pop, sel_threads)
+            };
             let mut next: Vec<Individual> = Vec::with_capacity(self.cfg.pop_size);
             for front in &fronts {
                 if next.len() + front.len() <= self.cfg.pop_size {
@@ -308,7 +481,7 @@ impl Nsga2 {
                 }
             }
             pop = next;
-            Self::rank_population(&mut pop);
+            Self::rank_population_threads(&mut pop, sel_threads);
 
             let nobj = pop[0].objectives.len();
             let best: Vec<f64> = (0..nobj)
@@ -342,6 +515,17 @@ impl Nsga2 {
 mod tests {
     use super::*;
 
+    /// `selection_threads` for the generic behavior tests below, so CI
+    /// can force both the legacy serial path and the forked parallel
+    /// path through the whole suite (`AFARE_SELECTION_THREADS=1|4` in
+    /// `scripts/check.sh`).
+    fn env_sel_threads() -> usize {
+        std::env::var("AFARE_SELECTION_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1)
+    }
+
     /// Two-objective toy: minimize (#ones, #zeros). Every genome is
     /// Pareto-optimal on the count trade-off; extremes must be found.
     struct OnesZeros {
@@ -367,6 +551,7 @@ mod tests {
         let mut opt = Nsga2::new(Nsga2Config {
             pop_size: 40,
             generations: 30,
+            selection_threads: env_sel_threads(),
             ..Default::default()
         });
         let front = opt.run(&mut p, |_| {});
@@ -396,6 +581,7 @@ mod tests {
         let mut opt = Nsga2::new(Nsga2Config {
             pop_size: 30,
             generations: 40,
+            selection_threads: env_sel_threads(),
             ..Default::default()
         });
         let front = opt.run(&mut SumMin, |_| {});
@@ -435,6 +621,7 @@ mod tests {
                 pop_size: 20,
                 generations: 10,
                 seed,
+                selection_threads: env_sel_threads(),
                 ..Default::default()
             });
             opt.run(&mut OnesZeros { len: 8 }, |_| {})
@@ -444,6 +631,159 @@ mod tests {
         };
         assert_eq!(run(5), run(5));
         assert_ne!(run(5), run(6));
+    }
+
+    /// The `selection_threads >= 2` contract: the trajectory is a pure
+    /// function of the seed — identical across repeats AND across any
+    /// thread count in the parallel regime.
+    #[test]
+    fn forked_path_is_thread_count_invariant() {
+        let run = |threads: usize, seed: u64| {
+            let mut opt = Nsga2::new(Nsga2Config {
+                pop_size: 24,
+                generations: 8,
+                seed,
+                selection_threads: threads,
+                ..Default::default()
+            });
+            let front = opt.run(&mut OnesZeros { len: 10 }, |_| {});
+            crate::bench::suite::front_fingerprint(&front)
+        };
+        let two = run(2, 11);
+        assert_eq!(two, run(2, 11), "forked path not repeatable");
+        assert_eq!(two, run(3, 11), "forked path depends on thread count (3)");
+        assert_eq!(two, run(8, 11), "forked path depends on thread count (8)");
+        assert_ne!(two, run(2, 12), "forked path ignores the seed");
+    }
+
+    /// Odd `pop_size`: both paths must produce exactly `pop_size`
+    /// well-formed offspring (the last pair's second child is dropped).
+    #[test]
+    fn odd_pop_size_offspring_both_paths() {
+        let mut pop: Vec<Individual> = (0..7)
+            .map(|i| Individual {
+                genome: vec![i % 3; 5],
+                objectives: vec![i as f64, 7.0 - i as f64],
+                rank: usize::MAX,
+                crowding: 0.0,
+            })
+            .collect();
+        Nsga2::rank_population(&mut pop);
+        for threads in [1usize, 2, 4] {
+            let mut opt = Nsga2::new(Nsga2Config {
+                pop_size: 7,
+                seed: 9,
+                selection_threads: threads,
+                ..Default::default()
+            });
+            let kids = opt.produce_offspring(&pop, 3);
+            assert_eq!(kids.len(), 7, "threads={threads}");
+            assert!(
+                kids.iter().all(|g| g.len() == 5 && g.iter().all(|&x| x < 3)),
+                "malformed offspring at threads={threads}"
+            );
+        }
+    }
+
+    /// Successive variation rounds at `selection_threads >= 2` use fresh
+    /// per-pair streams (the epoch counter), so generations differ.
+    #[test]
+    fn forked_epochs_reseed_between_rounds() {
+        let mut pop: Vec<Individual> = (0..10)
+            .map(|i| Individual {
+                genome: (0..6).map(|k| (i + k) % 4).collect(),
+                objectives: vec![i as f64, 10.0 - i as f64],
+                rank: usize::MAX,
+                crowding: 0.0,
+            })
+            .collect();
+        Nsga2::rank_population(&mut pop);
+        let mut opt =
+            Nsga2::new(Nsga2Config { pop_size: 10, seed: 5, selection_threads: 2, ..Default::default() });
+        let first = opt.produce_offspring(&pop, 4);
+        let second = opt.produce_offspring(&pop, 4);
+        assert_ne!(first, second, "variation epochs reuse the same streams");
+    }
+
+    /// Regression: a problem emitting NaN objectives must fail loudly at
+    /// the evaluation boundary (naming the genome), not silently park the
+    /// NaN vector in front 0.
+    #[test]
+    fn nan_objectives_are_rejected_with_context() {
+        struct Poisoned;
+        impl Problem for Poisoned {
+            fn genome_len(&self) -> usize {
+                4
+            }
+            fn alphabet(&self) -> usize {
+                2
+            }
+            fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+                if g.iter().sum::<usize>() == 0 {
+                    vec![f64::NAN, 1.0] // all-zeros genome poisons the run
+                } else {
+                    vec![g.iter().sum::<usize>() as f64, 1.0]
+                }
+            }
+        }
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // keep the expected panic quiet
+        let result = std::panic::catch_unwind(|| {
+            let mut opt = Nsga2::new(Nsga2Config {
+                pop_size: 16,
+                generations: 4,
+                ..Default::default()
+            });
+            opt.run(&mut Poisoned, |_| {});
+        });
+        std::panic::set_hook(prev);
+        let err = result.expect_err("NaN objective vector must abort evaluation");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(
+            msg.contains("non-finite objective"),
+            "panic message lacks context: {msg:?}"
+        );
+        assert!(msg.contains("genome"), "panic message does not name the genome: {msg:?}");
+    }
+
+    /// rank_population_threads assigns the same ranks/crowding as the
+    /// serial path at every thread count.
+    #[test]
+    fn threaded_ranking_matches_serial() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(0xBEEF);
+        let mk = |rng: &mut Rng| -> Vec<Individual> {
+            (0..65)
+                .map(|_| Individual {
+                    genome: vec![0; 4],
+                    objectives: (0..3).map(|_| (rng.below(9) as f64) * 0.25).collect(),
+                    rank: usize::MAX,
+                    crowding: 0.0,
+                })
+                .collect()
+        };
+        let base = mk(&mut rng);
+        let mut serial = base.clone();
+        let serial_fronts = Nsga2::rank_population(&mut serial);
+        for threads in [2usize, 3, 4] {
+            let mut par = base.clone();
+            let fronts = Nsga2::rank_population_threads(&mut par, threads);
+            assert_eq!(fronts, serial_fronts, "fronts diverge at threads={threads}");
+            for (s, p) in serial.iter().zip(&par) {
+                assert_eq!(s.rank, p.rank);
+                assert!(
+                    s.crowding == p.crowding
+                        || (s.crowding.is_infinite() && p.crowding.is_infinite()),
+                    "crowding diverges at threads={threads}: {} vs {}",
+                    s.crowding,
+                    p.crowding
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,18 @@
 //! Fast non-dominated sorting (Deb et al. 2002, §III-A).
 
 /// True iff `a` Pareto-dominates `b` (all objectives <=, at least one <).
+///
+/// Objective vectors must be finite: a NaN component compares false both
+/// ways, so a NaN vector is never dominated and would silently pollute
+/// front 0. [`crate::nsga2::Nsga2`] rejects non-finite vectors at the
+/// evaluation boundary with a contextual error; this assert is the
+/// debug-build backstop for callers going through the raw sort API.
 pub fn dominates(a: &[f64], b: &[f64]) -> bool {
     debug_assert_eq!(a.len(), b.len());
+    debug_assert!(
+        a.iter().chain(b).all(|x| x.is_finite()),
+        "dominates: non-finite objective vector (a={a:?}, b={b:?})"
+    );
     let mut strictly = false;
     for (x, y) in a.iter().zip(b) {
         if x > y {
@@ -18,21 +28,68 @@ pub fn dominates(a: &[f64], b: &[f64]) -> bool {
 /// Partition a population (objective vectors) into non-dominated fronts.
 /// Returns index lists; front 0 is the Pareto set. O(M·N²).
 pub fn fast_non_dominated_sort(objs: &[&[f64]]) -> Vec<Vec<usize>> {
+    fast_non_dominated_sort_threads(objs, 1)
+}
+
+/// [`fast_non_dominated_sort`] with the O(M·N²) domination matrix built
+/// across `threads` scoped worker threads, rows chunked contiguously.
+///
+/// Exactly the same fronts in exactly the same index order as the serial
+/// path at any thread count: row `p` scans every `q != p` in ascending
+/// order, which reproduces the pairwise loop's `S_p` push order (all
+/// dominated `q < p` ascending, then all dominated `q > p` ascending)
+/// and its domination counts, so the front peeling below is untouched
+/// by the fan-out. Thread count is a pure performance knob.
+pub fn fast_non_dominated_sort_threads(objs: &[&[f64]], threads: usize) -> Vec<Vec<usize>> {
     let n = objs.len();
     let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // S_p
     let mut domination_count = vec![0usize; n]; // n_p
     let mut fronts: Vec<Vec<usize>> = vec![Vec::new()];
 
-    for p in 0..n {
-        for q in (p + 1)..n {
-            if dominates(objs[p], objs[q]) {
-                dominated_by[p].push(q);
-                domination_count[q] += 1;
-            } else if dominates(objs[q], objs[p]) {
-                dominated_by[q].push(p);
-                domination_count[p] += 1;
+    let threads = threads.clamp(1, n.max(1));
+    if threads == 1 || n < threads * 8 {
+        // serial pairwise loop: one dominates() call per unordered pair
+        for p in 0..n {
+            for q in (p + 1)..n {
+                if dominates(objs[p], objs[q]) {
+                    dominated_by[p].push(q);
+                    domination_count[q] += 1;
+                } else if dominates(objs[q], objs[p]) {
+                    dominated_by[q].push(p);
+                    domination_count[p] += 1;
+                }
             }
         }
+    } else {
+        // row-chunked: each worker owns a contiguous band of rows and
+        // writes only its own S_p / n_p slots (disjoint chunks)
+        let chunk = n.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (ci, (dom_rows, cnt_rows)) in dominated_by
+                .chunks_mut(chunk)
+                .zip(domination_count.chunks_mut(chunk))
+                .enumerate()
+            {
+                let base = ci * chunk;
+                scope.spawn(move || {
+                    for (r, (dom, cnt)) in
+                        dom_rows.iter_mut().zip(cnt_rows.iter_mut()).enumerate()
+                    {
+                        let p = base + r;
+                        for (q, obj_q) in objs.iter().enumerate() {
+                            if q == p {
+                                continue;
+                            }
+                            if dominates(objs[p], obj_q) {
+                                dom.push(q);
+                            } else if dominates(obj_q, objs[p]) {
+                                *cnt += 1;
+                            }
+                        }
+                    }
+                });
+            }
+        });
     }
     for p in 0..n {
         if domination_count[p] == 0 {
@@ -102,6 +159,26 @@ mod tests {
     fn empty_population() {
         let pts: Vec<&[f64]> = vec![];
         assert!(fast_non_dominated_sort(&pts).is_empty());
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_random_populations() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(0xD0D0);
+        for n in [1usize, 7, 64, 257] {
+            let objs: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..3).map(|_| (rng.below(12) as f64) * 0.5).collect())
+                .collect();
+            let views: Vec<&[f64]> = objs.iter().map(|o| o.as_slice()).collect();
+            let serial = fast_non_dominated_sort(&views);
+            for t in [2usize, 3, 4, 7] {
+                assert_eq!(
+                    fast_non_dominated_sort_threads(&views, t),
+                    serial,
+                    "fronts diverge from serial at n={n} threads={t}"
+                );
+            }
+        }
     }
 
     #[test]

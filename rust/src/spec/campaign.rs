@@ -343,34 +343,51 @@ pub struct CampaignOptions {
 }
 
 /// Split `machine` engine threads between campaign cell workers and each
-/// cell's evaluation threads: `(workers, cell_threads)`.
+/// cell's inner parallelism:
+/// `(workers, cell_threads, cell_selection_threads)`.
 ///
 /// Precedence: an explicit `campaign_workers` is honored (clamped to the
-/// cell count); an explicit `eval_threads` is honored up to the
-/// per-worker share `machine / workers`. With both knobs on auto the
-/// machine goes to cell-level parallelism (`workers = machine`,
+/// cell count); explicit inner knobs (`eval_threads`, and
+/// `optimizer.selection_threads` when it requests the parallel regime,
+/// i.e. ≥ 2) are honored up to the per-worker share `machine / workers`.
+/// A cell's evaluation and selection phases alternate rather than
+/// overlap, so the two inner knobs share one per-worker budget (the
+/// worker divisor uses their max, not their sum). With every knob on
+/// auto the machine goes to cell-level parallelism (`workers = machine`,
 /// `cell_threads = 1`) — cells are embarrassingly parallel, so outer
 /// parallelism dominates inner fan-out. The product
-/// `workers × cell_threads` never exceeds `machine` unless the user
-/// explicitly pins both knobs higher (each side is floored at 1).
+/// `workers × max(cell_threads, cell_selection_threads)` never exceeds
+/// `machine` unless the user explicitly pins knobs higher (each side is
+/// floored at 1).
+///
+/// Clamping never demotes the optimizer across the determinism boundary:
+/// a request for `selection_threads >= 2` (the self-deterministic forked
+/// path, whose results do not depend on the width) is floored at 2, so a
+/// narrow share shrinks the fan-out without changing any cell's result —
+/// campaign reports stay machine-invariant.
 pub(crate) fn resolve_thread_budget(
     campaign_workers: usize,
     eval_threads: usize,
+    selection_threads: usize,
     machine: usize,
     num_cells: usize,
-) -> (usize, usize) {
+) -> (usize, usize, usize) {
     let machine = machine.max(1);
     let cells = num_cells.max(1);
+    let sel_request = if selection_threads > 1 { selection_threads } else { 0 };
+    let inner = eval_threads.max(sel_request);
     let workers = if campaign_workers != 0 {
         campaign_workers.min(cells)
-    } else if eval_threads != 0 {
-        (machine / eval_threads).max(1).min(cells)
+    } else if inner != 0 {
+        (machine / inner).max(1).min(cells)
     } else {
         machine.min(cells)
     };
     let share = (machine / workers).max(1);
     let cell_threads = if eval_threads != 0 { eval_threads.min(share) } else { share };
-    (workers, cell_threads)
+    let cell_selection_threads =
+        if sel_request != 0 { sel_request.min(share).max(2) } else { 1 };
+    (workers, cell_threads, cell_selection_threads)
 }
 
 /// What one cell's worker sends back to the coordinator. The `report`
@@ -525,9 +542,10 @@ pub fn run_campaign_with(
     let cells = spec.expand();
     let total = cells.len();
     let machine = EngineConfig::auto().threads;
-    let (workers, cell_threads) = resolve_thread_budget(
+    let (workers, cell_threads, cell_selection_threads) = resolve_thread_budget(
         spec.base.campaign_workers,
         spec.base.eval_threads,
+        spec.base.optimizer.selection_threads,
         machine,
         total,
     );
@@ -538,7 +556,12 @@ pub fn run_campaign_with(
     let telemetry = &opts.telemetry;
     telemetry.gauge_set("campaign_workers", workers as f64);
     telemetry.gauge_set("campaign_cell_threads", cell_threads as f64);
-    let nsga2 = spec.base.optimizer.to_nsga2(spec.base.seed);
+    telemetry.gauge_set("campaign_cell_selection_threads", cell_selection_threads as f64);
+    let mut nsga2 = spec.base.optimizer.to_nsga2(spec.base.seed);
+    // Budget-clamped optimizer fan-out. Safe for determinism: either the
+    // spec asked for the serial path (stays 1) or the forked path (stays
+    // >= 2, whose results are width-invariant).
+    nsga2.selection_threads = cell_selection_threads;
     let sw = std::time::Instant::now();
 
     // Per-model setup runs serially before the scope opens: real-model
@@ -781,29 +804,46 @@ mod tests {
 
     #[test]
     fn thread_budget_never_oversubscribes_on_auto() {
-        // both knobs auto: the machine goes to cell-level workers
-        assert_eq!(resolve_thread_budget(0, 0, 8, 12), (8, 1));
+        // all knobs auto: the machine goes to cell-level workers
+        assert_eq!(resolve_thread_budget(0, 0, 1, 8, 12), (8, 1, 1));
         // fewer cells than cores: leftover cores go to each cell
-        assert_eq!(resolve_thread_budget(0, 0, 8, 2), (2, 4));
+        assert_eq!(resolve_thread_budget(0, 0, 0, 8, 2), (2, 4, 1));
         // explicit eval_threads: workers take the remaining share
-        assert_eq!(resolve_thread_budget(0, 2, 8, 12), (4, 2));
-        assert_eq!(resolve_thread_budget(0, 8, 8, 12), (1, 8));
+        assert_eq!(resolve_thread_budget(0, 2, 1, 8, 12), (4, 2, 1));
+        assert_eq!(resolve_thread_budget(0, 8, 1, 8, 12), (1, 8, 1));
         // explicit workers: eval_threads clipped to the per-worker share
-        assert_eq!(resolve_thread_budget(4, 8, 8, 12), (4, 2));
-        assert_eq!(resolve_thread_budget(2, 0, 8, 12), (2, 4));
+        assert_eq!(resolve_thread_budget(4, 8, 1, 8, 12), (4, 2, 1));
+        assert_eq!(resolve_thread_budget(2, 0, 1, 8, 12), (2, 4, 1));
         // workers clamp to the cell count
-        assert_eq!(resolve_thread_budget(16, 0, 8, 3), (3, 2));
+        assert_eq!(resolve_thread_budget(16, 0, 1, 8, 3), (3, 2, 1));
         // single-core machine degrades to fully serial
-        assert_eq!(resolve_thread_budget(0, 0, 1, 12), (1, 1));
-        for (cw, et, machine, cells) in
-            [(0, 0, 8, 12), (0, 3, 8, 5), (2, 2, 8, 9), (0, 0, 6, 2), (3, 0, 4, 40)]
-        {
-            let (w, t) = resolve_thread_budget(cw, et, machine, cells);
-            assert!(w >= 1 && t >= 1);
+        assert_eq!(resolve_thread_budget(0, 0, 1, 1, 12), (1, 1, 1));
+        // selection_threads alone drives the worker split like
+        // eval_threads does, and both inner knobs share the budget (max,
+        // not sum — selection and evaluation alternate within a cell)
+        assert_eq!(resolve_thread_budget(0, 0, 4, 8, 12), (2, 4, 4));
+        assert_eq!(resolve_thread_budget(0, 4, 4, 8, 12), (2, 4, 4));
+        assert_eq!(resolve_thread_budget(0, 2, 4, 8, 12), (2, 2, 4));
+        // clamping to a narrow share never crosses the determinism
+        // boundary: a parallel-regime request is floored at 2 ...
+        assert_eq!(resolve_thread_budget(8, 0, 4, 8, 12), (8, 1, 2));
+        // ... and a serial request is never promoted
+        assert_eq!(resolve_thread_budget(2, 0, 1, 8, 12), (2, 4, 1));
+        for (cw, et, st, machine, cells) in [
+            (0, 0, 1, 8, 12),
+            (0, 3, 1, 8, 5),
+            (2, 2, 2, 8, 9),
+            (0, 0, 4, 6, 2),
+            (2, 0, 2, 4, 40),
+        ] {
+            let (w, t, s) = resolve_thread_budget(cw, et, st, machine, cells);
+            assert!(w >= 1 && t >= 1 && s >= 1);
             assert!(
-                w * t <= machine.max(1),
-                "({cw},{et},{machine},{cells}) -> {w}x{t} oversubscribes"
+                w * t.max(s) <= machine.max(1),
+                "({cw},{et},{st},{machine},{cells}) -> {w}x{t}/{s} oversubscribes"
             );
+            // the determinism regime always survives the clamp
+            assert_eq!(s > 1, st > 1, "regime changed for ({cw},{et},{st},{machine},{cells})");
         }
     }
 

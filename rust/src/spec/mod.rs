@@ -64,6 +64,11 @@ pub struct OptimizerSpec {
     pub generations: usize,
     pub crossover_prob: f64,
     pub mutation_prob: f64,
+    /// Worker threads for the NSGA-II selection pipeline (sort, crowding,
+    /// variation). `0`/`1` = legacy bitwise-exact serial path; `>= 2` =
+    /// the self-deterministic parallel path (results depend only on the
+    /// seed, not the thread count). See `docs/spec.md` §optimizer.
+    pub selection_threads: usize,
 }
 
 impl Default for OptimizerSpec {
@@ -74,13 +79,18 @@ impl Default for OptimizerSpec {
             generations: c.generations,
             crossover_prob: c.crossover_prob,
             mutation_prob: c.mutation_prob,
+            selection_threads: c.selection_threads,
         }
     }
 }
 
 impl OptimizerSpec {
     fn apply_json(&mut self, obj: &BTreeMap<String, Value>, ctx: &str) -> Result<()> {
-        reject_unknown(obj, &["pop_size", "generations", "crossover_prob", "mutation_prob"], ctx)?;
+        reject_unknown(
+            obj,
+            &["pop_size", "generations", "crossover_prob", "mutation_prob", "selection_threads"],
+            ctx,
+        )?;
         if let Some(x) = usize_field(obj, "pop_size", ctx)? {
             self.pop_size = x;
         }
@@ -93,6 +103,9 @@ impl OptimizerSpec {
         if let Some(x) = f64_field(obj, "mutation_prob", ctx)? {
             self.mutation_prob = x;
         }
+        if let Some(x) = usize_field(obj, "selection_threads", ctx)? {
+            self.selection_threads = x;
+        }
         Ok(())
     }
 
@@ -102,6 +115,7 @@ impl OptimizerSpec {
             ("generations", json::num(self.generations as f64)),
             ("crossover_prob", json::num(self.crossover_prob)),
             ("mutation_prob", json::num(self.mutation_prob)),
+            ("selection_threads", json::num(self.selection_threads as f64)),
         ])
     }
 
@@ -112,6 +126,7 @@ impl OptimizerSpec {
             crossover_prob: self.crossover_prob,
             mutation_prob: self.mutation_prob,
             seed,
+            selection_threads: self.selection_threads,
         }
     }
 }
@@ -402,8 +417,9 @@ impl ExperimentSpec {
 
     /// Environment overrides (`AFARE_POP`, `AFARE_GENS`,
     /// `AFARE_EVAL_LIMIT`, `AFARE_EVAL_THREADS`,
-    /// `AFARE_CAMPAIGN_WORKERS`) — used to shrink bench
-    /// budgets without touching files. Injectable lookup for testability;
+    /// `AFARE_CAMPAIGN_WORKERS`, `AFARE_SELECTION_THREADS`) — used to
+    /// shrink bench budgets (or force an optimizer code path in CI)
+    /// without touching files. Injectable lookup for testability;
     /// [`ExperimentSpec::resolve`] passes the process environment.
     pub fn apply_env_with(&mut self, getenv: impl Fn(&str) -> Option<String>) {
         if let Some(v) = getenv("AFARE_POP").and_then(|v| v.parse().ok()) {
@@ -420,6 +436,9 @@ impl ExperimentSpec {
         }
         if let Some(v) = getenv("AFARE_CAMPAIGN_WORKERS").and_then(|v| v.parse().ok()) {
             self.campaign_workers = v;
+        }
+        if let Some(v) = getenv("AFARE_SELECTION_THREADS").and_then(|v| v.parse().ok()) {
+            self.optimizer.selection_threads = v;
         }
     }
 
@@ -445,6 +464,8 @@ impl ExperimentSpec {
         self.dacc_batches = args.get_usize("dacc-batches", self.dacc_batches);
         self.eval_threads = args.get_usize("eval-threads", self.eval_threads);
         self.campaign_workers = args.get_usize("campaign-workers", self.campaign_workers);
+        self.optimizer.selection_threads =
+            args.get_usize("selection-threads", self.optimizer.selection_threads);
         if let Some(s) = args.get("policy") {
             self.selection.policy = SelectionPolicy::parse(s)
                 .with_context(|| format!("bad --policy {s:?} (min-dacc-within-budget, min-dacc, knee)"))?;
@@ -632,6 +653,34 @@ mod tests {
         assert_eq!(spec.campaign_workers, 2);
         // default: auto
         assert_eq!(ExperimentSpec::default().campaign_workers, 0);
+    }
+
+    #[test]
+    fn selection_threads_follows_the_precedence_chain() {
+        // default: legacy serial
+        let spec = ExperimentSpec::default();
+        assert_eq!(spec.optimizer.selection_threads, 1);
+        assert_eq!(spec.to_config().nsga2.selection_threads, 1);
+        // env beats defaults
+        let spec = ExperimentSpec::resolve_with(&args(&["offline"]), |k| match k {
+            "AFARE_SELECTION_THREADS" => Some("4".into()),
+            _ => None,
+        })
+        .unwrap();
+        assert_eq!(spec.optimizer.selection_threads, 4);
+        // CLI beats env
+        let a = args(&["offline", "--selection-threads", "2"]);
+        let spec = ExperimentSpec::resolve_with(&a, |k| match k {
+            "AFARE_SELECTION_THREADS" => Some("8".into()),
+            _ => None,
+        })
+        .unwrap();
+        assert_eq!(spec.optimizer.selection_threads, 2);
+        assert_eq!(spec.to_config().nsga2.selection_threads, 2);
+        // JSON file layer parses + round-trips the key
+        let spec =
+            ExperimentSpec::from_json_str(r#"{"optimizer": {"selection_threads": 3}}"#).unwrap();
+        assert_eq!(spec.optimizer.selection_threads, 3);
     }
 
     #[test]

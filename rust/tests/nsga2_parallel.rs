@@ -1,0 +1,239 @@
+//! Determinism tests for the parallel NSGA-II selection pipeline
+//! (ISSUE 9): the two contracts of `Nsga2Config::selection_threads`.
+//!
+//! * `selection_threads <= 1` — the **legacy bitwise contract**: full
+//!   runs replay the golden seeds bit-for-bit against the frozen
+//!   pre-parallelization oracle (`bench::suite::legacy_nsga2`).
+//! * `selection_threads >= 2` — the **self-deterministic parallel
+//!   contract**: fronts are a pure function of the seed, identical
+//!   across repeats and across any thread count in the parallel regime.
+//!
+//! Plus parallel-vs-serial equivalence for the sort/crowding fan-outs
+//! (pure performance knobs: same fronts, same distances at any width),
+//! the odd-`pop_size` offspring path, and the NaN-rejection boundary.
+
+use afarepart::bench::suite::{front_fingerprint as key, legacy_nsga2};
+use afarepart::nsga2::{
+    crowding_distance, fast_non_dominated_sort, fast_non_dominated_sort_threads, Individual,
+    Nsga2, Nsga2Config, Problem,
+};
+use afarepart::spec::ExperimentSpec;
+use afarepart::util::prng::Rng;
+
+const GOLDEN_SEEDS: [u64; 3] = [7, 11, 23];
+
+/// Deterministic two-objective toy with real front structure: minimize
+/// (gene sum, count of non-2 genes).
+struct Toy;
+impl Problem for Toy {
+    fn genome_len(&self) -> usize {
+        10
+    }
+    fn alphabet(&self) -> usize {
+        3
+    }
+    fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+        let sum = g.iter().sum::<usize>() as f64;
+        let twos = g.iter().filter(|&&x| x == 2).count() as f64;
+        vec![sum, 10.0 - twos]
+    }
+}
+
+fn run_front(selection_threads: usize, seed: u64) -> Vec<(Vec<usize>, Vec<u64>)> {
+    let mut opt = Nsga2::new(Nsga2Config {
+        pop_size: 20,
+        generations: 10,
+        seed,
+        selection_threads,
+        ..Default::default()
+    });
+    key(&opt.run(&mut Toy, |_| {}))
+}
+
+#[test]
+fn serial_path_matches_frozen_pre_pr_oracle_on_golden_seeds() {
+    for &seed in &GOLDEN_SEEDS {
+        let cfg = Nsga2Config {
+            pop_size: 20,
+            generations: 10,
+            seed,
+            ..Default::default()
+        };
+        assert_eq!(cfg.selection_threads, 1, "default must stay the legacy serial path");
+        let current = key(&Nsga2::new(cfg.clone()).run(&mut Toy, |_| {}));
+        let legacy = key(&legacy_nsga2::run(&cfg, &mut Toy));
+        assert_eq!(
+            current, legacy,
+            "selection_threads=1 front at seed {seed} is not bitwise identical \
+             to the pre-PR serial NSGA-II"
+        );
+    }
+}
+
+#[test]
+fn forked_path_is_self_deterministic_across_repeats_and_widths() {
+    for &seed in &GOLDEN_SEEDS {
+        let reference = run_front(2, seed);
+        // repeats
+        assert_eq!(reference, run_front(2, seed), "seed {seed}: repeat diverged");
+        // any thread count in the parallel regime
+        for threads in [3usize, 4, 8] {
+            assert_eq!(
+                reference,
+                run_front(threads, seed),
+                "seed {seed}: front depends on thread count {threads}"
+            );
+        }
+        // and it is genuinely seeded
+        assert_ne!(reference, run_front(2, seed + 1), "seed {seed}: seed ignored");
+    }
+}
+
+#[test]
+fn sort_and_crowding_fanouts_match_serial_at_any_width() {
+    let mut rng = Rng::new(0xFACE);
+    for n in [3usize, 33, 130] {
+        let objs: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..3).map(|_| (rng.below(10) as f64) * 0.5).collect())
+            .collect();
+        let views: Vec<&[f64]> = objs.iter().map(|o| o.as_slice()).collect();
+        let serial_fronts = fast_non_dominated_sort(&views);
+        for threads in [1usize, 2, 4] {
+            assert_eq!(
+                fast_non_dominated_sort_threads(&views, threads),
+                serial_fronts,
+                "fronts diverge at n={n} threads={threads}"
+            );
+        }
+        // crowding is per-front and must agree front by front
+        for front in &serial_fronts {
+            let front_objs: Vec<&[f64]> = front.iter().map(|&i| views[i]).collect();
+            let d = crowding_distance(&front_objs);
+            assert_eq!(d.len(), front.len());
+        }
+        // whole-population ranking (sort + per-front crowding fan-out)
+        let mk_pop = || -> Vec<Individual> {
+            objs.iter()
+                .map(|o| Individual {
+                    genome: vec![0; 4],
+                    objectives: o.clone(),
+                    rank: usize::MAX,
+                    crowding: 0.0,
+                })
+                .collect()
+        };
+        let mut serial_pop = mk_pop();
+        Nsga2::rank_population(&mut serial_pop);
+        for threads in [2usize, 4] {
+            let mut par_pop = mk_pop();
+            Nsga2::rank_population_threads(&mut par_pop, threads);
+            for (i, (a, b)) in serial_pop.iter().zip(&par_pop).enumerate() {
+                assert_eq!(a.rank, b.rank, "rank diverges at n={n} i={i} threads={threads}");
+                assert_eq!(
+                    a.crowding.to_bits(),
+                    b.crowding.to_bits(),
+                    "crowding diverges at n={n} i={i} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn odd_pop_size_produces_full_generations_on_both_paths() {
+    struct OddToy;
+    impl Problem for OddToy {
+        fn genome_len(&self) -> usize {
+            6
+        }
+        fn alphabet(&self) -> usize {
+            2
+        }
+        fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+            let ones = g.iter().filter(|&&x| x == 1).count() as f64;
+            vec![ones, 6.0 - ones]
+        }
+    }
+    for threads in [1usize, 2, 4] {
+        let mut opt = Nsga2::new(Nsga2Config {
+            pop_size: 9, // odd: every variation round drops the last pair's second child
+            generations: 6,
+            seed: 13,
+            selection_threads: threads,
+            ..Default::default()
+        });
+        let front = opt.run(&mut OddToy, |_| {});
+        assert!(!front.is_empty(), "threads={threads}");
+        assert!(
+            front.iter().all(|i| i.genome.len() == 6),
+            "malformed genome at threads={threads}"
+        );
+        // 9 initial + 9 per generation, nothing lost to the odd pairing
+        assert_eq!(opt.evaluations(), 9 + 6 * 9, "threads={threads}");
+    }
+}
+
+#[test]
+fn nan_objectives_abort_with_genome_context() {
+    struct Poisoned;
+    impl Problem for Poisoned {
+        fn genome_len(&self) -> usize {
+            5
+        }
+        fn alphabet(&self) -> usize {
+            2
+        }
+        fn evaluate(&mut self, g: &[usize]) -> Vec<f64> {
+            // every genome with gene[0] == 1 is poisoned
+            if g[0] == 1 {
+                vec![f64::INFINITY, f64::NAN]
+            } else {
+                vec![g.iter().sum::<usize>() as f64, 1.0]
+            }
+        }
+    }
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // silence the expected panic
+    let result = std::panic::catch_unwind(|| {
+        let mut opt = Nsga2::new(Nsga2Config {
+            pop_size: 12,
+            generations: 3,
+            ..Default::default()
+        });
+        opt.run(&mut Poisoned, |_| {});
+    });
+    std::panic::set_hook(prev);
+    let err = result.expect_err("non-finite objectives must abort the run");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("non-finite objective"), "no context in panic: {msg:?}");
+    assert!(msg.contains("genome"), "offending genome not named: {msg:?}");
+}
+
+#[test]
+fn nan_crowding_regression_no_panic() {
+    // the old partial_cmp().unwrap() comparator aborted here
+    let pts: Vec<&[f64]> = vec![&[0.0, 2.0], &[f64::NAN, 1.0], &[2.0, 0.0]];
+    let d = crowding_distance(&pts);
+    assert_eq!(d.len(), 3);
+    assert!(d.iter().all(|x| !x.is_nan()));
+}
+
+#[test]
+fn selection_threads_env_override_reaches_the_optimizer() {
+    // AFARE_SELECTION_THREADS must flow through the precedence chain into
+    // Nsga2Config (spec layer, injectable environment — no process-env
+    // mutation needed).
+    let raw: Vec<String> = vec!["offline".into()];
+    let args = afarepart::cli::Args::parse(&raw, &[]);
+    let spec = ExperimentSpec::resolve_with(&args, |k| match k {
+        "AFARE_SELECTION_THREADS" => Some("4".into()),
+        _ => None,
+    })
+    .unwrap();
+    assert_eq!(spec.optimizer.selection_threads, 4);
+    assert_eq!(spec.to_config().nsga2.selection_threads, 4);
+}

@@ -2,9 +2,12 @@
 # Repo gate: format, build, tests, smoke runs, and the perf sections
 # with a monotonicity check on BENCH_eval_engine.json (ROADMAP: keep the
 # 1/2/4-thread trajectory monotone), the telemetry disabled-path
-# overhead gate on BENCH_telemetry_overhead.json (<2%), and the
+# overhead gate on BENCH_telemetry_overhead.json (<2%), the
 # campaign-scheduler throughput gate on BENCH_campaign.json (cells/s at
-# 4 workers must not fall below serial). Run via `make check`.
+# 4 workers must not fall below serial), and the NSGA-II selection
+# pipeline gate on BENCH_variation.json (pop-1024 wall monotone over
+# selection_threads 1/2/4 + both determinism contracts). Run via
+# `make check`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,6 +23,16 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+# NSGA-II selection pipeline: exercise both determinism regimes. The
+# env override reaches Nsga2Config through the spec precedence chain
+# (defaults < file < env < CLI), so =1 pins the legacy bitwise serial
+# path and =4 pins the seed-deterministic parallel path.
+echo "== nsga2 tests, selection_threads forced to 1 and 4 =="
+AFARE_SELECTION_THREADS=1 cargo test -q --lib nsga2
+AFARE_SELECTION_THREADS=4 cargo test -q --lib nsga2
+AFARE_SELECTION_THREADS=1 cargo test -q --test nsga2_parallel
+AFARE_SELECTION_THREADS=4 cargo test -q --test nsga2_parallel
 
 echo "== clippy (lint gate) =="
 if cargo clippy --version >/dev/null 2>&1; then
@@ -133,5 +146,49 @@ if not doc.get("deterministic_across_threads", False):
     print("DETERMINISM flag missing from bench output")
 
 sys.exit(0 if ok else "eval-engine perf trajectory regressed")
+EOF
+
+echo "== BENCH_variation.json selection-pipeline gate =="
+python3 - <<'EOF'
+import json
+import sys
+
+with open("BENCH_variation.json") as f:
+    doc = json.load(f)
+
+rows = [r for r in doc["pops"] if r["pop_size"] == 1024]
+rows.sort(key=lambda r: r["selection_threads"])
+if len(rows) < 2:
+    sys.exit("variation bench recorded fewer than 2 thread counts at pop 1024")
+
+# Wall-clock at pop 1024 must not regress as selection_threads grows
+# (10% timing-noise slack, same policy as the eval-engine gate).
+SLACK = 1.10
+ok = True
+for lo, hi in zip(rows, rows[1:]):
+    if hi["wall_ms"] > lo["wall_ms"] * SLACK:
+        ok = False
+        print(
+            f"NON-MONOTONE: sel={hi['selection_threads']} wall "
+            f"{hi['wall_ms']:.1f} ms vs sel={lo['selection_threads']} "
+            f"{lo['wall_ms']:.1f} ms (> {SLACK:.0%})"
+        )
+for r in rows:
+    print(
+        f"  sel={r['selection_threads']}: {r['wall_ms']:.1f} ms  "
+        f"{r['offspring_per_s']:.0f} offspring/s  "
+        f"({r['speedup_vs_1t']:.2f}x vs 1t)"
+    )
+if rows[-1]["speedup_vs_1t"] < 1.0:
+    ok = False
+    print("NON-MONOTONE: top selection_threads slower than serial")
+if not doc.get("serial_bitwise_identical", False):
+    ok = False
+    print("LEGACY CONTRACT flag missing: serial path vs pre-PR oracle")
+if not doc.get("forked_deterministic", False):
+    ok = False
+    print("FORKED CONTRACT flag missing: parallel path not thread-invariant")
+
+sys.exit(0 if ok else "NSGA-II selection pipeline gate failed")
 EOF
 echo "check: OK"
