@@ -38,7 +38,7 @@ use afarepart::experiment::Experiment;
 use afarepart::faults::{FaultScenario, RateVectors};
 use afarepart::hw::Platform;
 use afarepart::nsga2::{Individual, Nsga2, Nsga2Config, Problem};
-use afarepart::obs::Telemetry;
+use afarepart::obs::{analyze_str, Telemetry};
 use afarepart::partition::{DaccMode, Mapping, PartitionEvaluator, SensitivityTable};
 use afarepart::spec::campaign::{run_campaign_with, CampaignOptions, CampaignSpec};
 use afarepart::util::fmt::Table;
@@ -514,6 +514,142 @@ fn bench_variation(fast: bool) {
     write_json_result("BENCH_variation.json", &doc);
 }
 
+/// Offline trace-analyzer throughput: synthesize a realistic JSONL
+/// trace in memory (chaos ledger + supervision + tick spans +
+/// convergence, seeded PRNG so the workload is reproducible), then
+/// measure `analyze_str` events/s. Also asserts the analyzer report is
+/// bitwise repeat-deterministic before writing the JSON the
+/// `scripts/check.sh` gate reads (`BENCH_trace_analyze.json`).
+fn bench_trace_analyze(fast: bool) {
+    println!("\n-- offline trace analyzer (`trace analyze`) throughput --");
+    let ticks = if fast { 4_000 } else { 40_000 };
+    let mut rng = Rng::new(0xA11A_11CE);
+    let mut text = String::new();
+    let mut seq = 0usize;
+    let push = |text: &mut String, seq: &mut usize, body: String| {
+        text.push_str(&format!("{{\"schema\":2,\"seq\":{seq},\"kind\":{body}}}\n"));
+        *seq += 1;
+    };
+    push(&mut text, &mut seq, "\"trace_start\"".into());
+    let classes = ["crash", "transient", "drop", "delay", "corrupt"];
+    for tick in 0..ticks {
+        if rng.chance(0.3) {
+            let ci = rng.below(classes.len());
+            let fault = ((tick as u64) << 8) | ci as u64;
+            push(
+                &mut text,
+                &mut seq,
+                format!(
+                    "\"chaos_inject\",\"span\":\"online.chaos\",\"class\":\"{}\",\
+                     \"component\":{ci},\"fault\":{fault},\"magnitude\":1,\"tick\":{tick}",
+                    classes[ci]
+                ),
+            );
+            if rng.chance(0.5) {
+                push(
+                    &mut text,
+                    &mut seq,
+                    format!(
+                        "\"server_retry\",\"span\":\"server.supervise\",\"ticket\":{tick},\
+                         \"attempts\":1,\"reason\":\"transient\",\"fault\":{fault}"
+                    ),
+                );
+            }
+            if rng.chance(0.1) {
+                push(
+                    &mut text,
+                    &mut seq,
+                    format!(
+                        "\"server_terminal\",\"span\":\"server.supervise\",\"ticket\":{tick},\
+                         \"attempts\":3,\"reason\":\"exhausted\",\"fault\":{fault}"
+                    ),
+                );
+                push(
+                    &mut text,
+                    &mut seq,
+                    format!(
+                        "\"degrade_enter\",\"span\":\"online.degrade\",\
+                         \"tick\":{tick},\"reason\":\"exhausted\""
+                    ),
+                );
+                push(
+                    &mut text,
+                    &mut seq,
+                    format!(
+                        "\"degrade_exit\",\"span\":\"online.degrade\",\"tick\":{},\
+                         \"start\":{tick},\"end\":{}",
+                        tick + 3,
+                        tick + 3
+                    ),
+                );
+            }
+        }
+        push(
+            &mut text,
+            &mut seq,
+            format!(
+                "\"span\",\"span\":\"eval.batch\",\"batch\":{tick},\"genomes\":16,\
+                 \"unique_misses\":4,\"cache_answered\":12"
+            ),
+        );
+        push(
+            &mut text,
+            &mut seq,
+            format!(
+                "\"span\",\"span\":\"online.tick\",\"tick\":{tick},\"degraded\":false,\
+                 \"reconfigured\":false,\"acc\":0.9,\"acc_drop\":0.01,\"injected_delay\":0"
+            ),
+        );
+        if tick % 10 == 0 {
+            push(
+                &mut text,
+                &mut seq,
+                format!(
+                    "\"convergence\",\"span\":\"opt.convergence\",\"generation\":{},\
+                     \"hypervolume\":1.5,\"spread\":0.2,\"progress\":0.01,\"stall\":0,\
+                     \"front_size\":8",
+                    (tick / 10) % 60
+                ),
+            );
+        }
+    }
+    let events = seq;
+    let bytes = text.len();
+
+    let a = analyze_str(&text);
+    assert_eq!(a.parsed_events, events, "analyzer dropped events");
+    assert!(!a.truncated_tail && a.malformed_lines == 0 && a.seq_gaps == 0);
+    assert_eq!(
+        json_str(&a.to_json()),
+        json_str(&analyze_str(&text).to_json()),
+        "analyzer report is not repeat-deterministic"
+    );
+
+    let bc = BenchConfig { warmup_iters: 1, sample_iters: if fast { 3 } else { 5 } };
+    let summary = bench_ms(bc, || {
+        let a = analyze_str(&text);
+        std::hint::black_box(a.parsed_events);
+    });
+    let events_per_sec = events as f64 / (summary.min / 1e3);
+    println!(
+        "{events} events ({:.1} MiB): {:.1} ms min -> {:.0} events/s",
+        bytes as f64 / (1024.0 * 1024.0),
+        summary.min,
+        events_per_sec
+    );
+
+    let doc: Value = obj(vec![
+        ("bench", s("trace_analyze")),
+        ("events", num(events as f64)),
+        ("bytes", num(bytes as f64)),
+        ("mean_ms", num(summary.mean)),
+        ("min_ms", num(summary.min)),
+        ("events_per_sec", num(events_per_sec)),
+        ("deterministic", Value::Bool(true)),
+    ]);
+    write_json_result("BENCH_trace_analyze.json", &doc);
+}
+
 fn bench_pjrt_sections(fast: bool) -> anyhow::Result<()> {
     let (mut cfg, _) = bench_budget(fast);
     let mut report = BenchReport::new();
@@ -619,6 +755,7 @@ fn main() -> anyhow::Result<()> {
     bench_telemetry_overhead(fast);
     bench_campaign(fast);
     bench_variation(fast);
+    bench_trace_analyze(fast);
 
     if let Err(e) = bench_pjrt_sections(fast) {
         println!("\nskipping PJRT-backed sections: {e:#}");

@@ -50,15 +50,15 @@ use anyhow::Result;
 
 use super::metrics::Metrics;
 use super::offline::optimize_partitions_counted;
-use super::server::{InferJob, InferenceServer, SupervisorPolicy, Ticket};
+use super::server::{InferError, InferJob, InferenceServer, SupervisorPolicy, Ticket};
 use crate::dataset::EvalSet;
 use crate::faults::{ChaosEngine, DeviceFaultProfile, FaultEnv};
-use crate::nsga2::{Individual, Nsga2Config};
+use crate::nsga2::{Individual, Nsga2Config, HV_REFERENCE_MARGIN};
 use crate::obs::Telemetry;
 use crate::partition::{
-    select_min_dacc_within_budget, CacheStats, Mapping, PartitionEvaluator,
+    front_quality, select_min_dacc_within_budget, CacheStats, Mapping, PartitionEvaluator,
 };
-use crate::util::json::{num, Value};
+use crate::util::json::{num, s as jstr, Value};
 use crate::util::prng::Rng;
 use crate::util::stats::RollingMean;
 
@@ -279,6 +279,31 @@ impl OnlineRunner<'_, '_> {
         for tick in 0..self.cfg.ticks {
             let mut tick_span = telemetry.span("online.tick");
             tick_span.note("tick", num(tick as f64));
+            // Attribution ledger header: re-derive this tick's injected
+            // faults (pure in (chaos seed, tick)) and emit them before
+            // any supervision event that may blame them. Emitted here —
+            // not at submit time — so the stream stays in strict tick
+            // order at any lookahead.
+            let mut injected_delay = 0.0;
+            if telemetry.has_trace() && self.chaos.is_enabled() {
+                for ev in self.chaos.events(tick) {
+                    if ev.class == "delay" {
+                        injected_delay += ev.magnitude;
+                    }
+                    telemetry.trace_event(
+                        "chaos_inject",
+                        Some("online.chaos"),
+                        &[
+                            ("class", jstr(ev.class)),
+                            ("component", num(ev.component as f64)),
+                            ("fault", num(ev.id as f64)),
+                            ("magnitude", num(ev.magnitude)),
+                            ("tick", num(ev.tick as f64)),
+                        ],
+                    );
+                }
+            }
+            tick_span.note("injected_delay", num(injected_delay));
             // re-admit the pre-degradation mapping once the health probe
             // cooldown has passed without another terminal failure
             if let Some(start) = degraded_since {
@@ -394,8 +419,12 @@ impl OnlineRunner<'_, '_> {
                             reconfigured = new_mapping != mapping;
                             mapping = new_mapping;
                         }
+                        let fq = front_quality(&front, HV_REFERENCE_MARGIN);
                         reopt_span.note("evaluations", num(reopt_evals as f64));
                         reopt_span.note("changed", Value::Bool(reconfigured));
+                        reopt_span.note("front_size", num(fq.size as f64));
+                        reopt_span.note("front_hv", num(fq.hypervolume));
+                        reopt_span.note("front_spread", num(fq.spread));
                         drop(reopt_span);
                         metrics.record_reconfiguration(
                             reopt_evals,
@@ -443,6 +472,13 @@ impl OnlineRunner<'_, '_> {
                     let safe = self.safe_mapping.clone().expect("checked above");
                     metrics.record_degradation();
                     metrics.record_degraded_tick();
+                    let reason = match &err {
+                        InferError::Exhausted { .. } => "exhausted",
+                        InferError::TimedOut { .. } => "timeout",
+                        InferError::Crashed { .. } => "crashed",
+                        InferError::Fatal { .. } => "fatal",
+                        InferError::Transient { .. } => "transient",
+                    };
                     if degraded_since.is_none() {
                         degraded_since = Some(tick);
                         pre_degrade = Some(mapping.clone());
@@ -450,7 +486,16 @@ impl OnlineRunner<'_, '_> {
                         telemetry.trace_event(
                             "degrade_enter",
                             Some("online.degrade"),
-                            &[("tick", num(tick as f64))],
+                            &[("tick", num(tick as f64)), ("reason", jstr(reason))],
+                        );
+                    } else {
+                        // a further terminal failure while already
+                        // degraded extends the outage; ledger consumers
+                        // see the extension explicitly
+                        telemetry.trace_event(
+                            "degrade_extend",
+                            Some("online.degrade"),
+                            &[("tick", num(tick as f64)), ("reason", jstr(reason))],
                         );
                     }
                     // every terminal failure (also while already
@@ -480,6 +525,10 @@ impl OnlineRunner<'_, '_> {
             };
             tick_span.note("reconfigured", Value::Bool(point.reconfigured));
             tick_span.note("degraded", Value::Bool(point.degraded));
+            // per-tick accuracy delta vs. the clean baseline — the
+            // ledger's "effect" side (both values are deterministic)
+            tick_span.note("acc", num(point.batch_accuracy));
+            tick_span.note("acc_drop", num(self.clean_acc - point.rolling_accuracy));
             on_tick(&point);
             timeline.push(point);
         }

@@ -65,8 +65,26 @@ use crate::faults::{ChaosPlan, RateVectors};
 use crate::model::Manifest;
 use crate::obs::Telemetry;
 use crate::runtime::Runtime;
-use crate::util::json::{num, s as jstr};
+use crate::util::json::{num, s as jstr, Value};
 use crate::util::prng::Rng;
+
+/// Pop the next ledger id from a fault-attribution queue (FIFO; `None`
+/// when the effect was not chaos-injected).
+fn pop_fault(queue: &mut Vec<u64>) -> Option<u64> {
+    if queue.is_empty() {
+        None
+    } else {
+        Some(queue.remove(0))
+    }
+}
+
+/// Trace-field form of an optional fault id (`Null` = unattributed).
+fn fault_field(fault: Option<u64>) -> Value {
+    match fault {
+        Some(id) => num(id as f64),
+        None => Value::Null,
+    }
+}
 
 /// One inference job: a full batch of images (server batch size).
 pub struct InferJob {
@@ -381,11 +399,24 @@ impl InferenceServer {
                     let max_retries = self.policy.max_retries;
                     let rec = inner.pending.get_mut(&ticket.0).expect("pending rec");
                     rec.attempts += 1;
-                    // this transient burst unit is consumed
+                    // this transient burst unit is consumed; pop its
+                    // ledger id at the same point so the blame matches
+                    // the effect exactly
                     rec.plan.transient_failures = rec.plan.transient_failures.saturating_sub(1);
+                    let fault = pop_fault(&mut rec.plan.transient_faults);
                     let attempts = rec.attempts;
                     if attempts > max_retries {
                         inner.pending.remove(&ticket.0);
+                        inner.telemetry.trace_event(
+                            "server_terminal",
+                            Some("server.supervise"),
+                            &[
+                                ("ticket", num(ticket.0 as f64)),
+                                ("attempts", num(attempts as f64)),
+                                ("reason", jstr("exhausted")),
+                                ("fault", fault_field(fault)),
+                            ],
+                        );
                         return Err(InferError::Exhausted { attempts, last: detail });
                     }
                     inner.stats.retries += 1;
@@ -397,6 +428,7 @@ impl InferenceServer {
                             ("ticket", num(ticket.0 as f64)),
                             ("attempts", num(attempts as f64)),
                             ("reason", jstr("transient")),
+                            ("fault", fault_field(fault)),
                         ],
                     );
                     let backoff = self
@@ -409,17 +441,52 @@ impl InferenceServer {
                     }
                     if self.resubmit_one(&mut inner, ticket.0).is_err() {
                         // worker died while we were backing off
-                        self.respawn_and_resubmit(&mut inner, "worker died during retry", true)?;
+                        if let Err(e) =
+                            self.respawn_and_resubmit(&mut inner, "worker died during retry", true)
+                        {
+                            inner.telemetry.trace_event(
+                                "server_terminal",
+                                Some("server.supervise"),
+                                &[
+                                    ("ticket", num(ticket.0 as f64)),
+                                    ("reason", jstr("respawn_failed")),
+                                    ("fault", Value::Null),
+                                ],
+                            );
+                            return Err(e);
+                        }
                     }
                 }
                 Ok(Err(other)) => {
                     // Fatal (and any future non-retryable kind): surface as-is
                     inner.pending.remove(&ticket.0);
+                    inner.telemetry.trace_event(
+                        "server_terminal",
+                        Some("server.supervise"),
+                        &[
+                            ("ticket", num(ticket.0 as f64)),
+                            ("reason", jstr("fatal")),
+                            ("fault", Value::Null),
+                        ],
+                    );
                     return Err(other);
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     // worker thread died with the job in flight
-                    self.respawn_and_resubmit(&mut inner, "worker channel disconnected", true)?;
+                    if let Err(e) =
+                        self.respawn_and_resubmit(&mut inner, "worker channel disconnected", true)
+                    {
+                        inner.telemetry.trace_event(
+                            "server_terminal",
+                            Some("server.supervise"),
+                            &[
+                                ("ticket", num(ticket.0 as f64)),
+                                ("reason", jstr("respawn_failed")),
+                                ("fault", Value::Null),
+                            ],
+                        );
+                        return Err(e);
+                    }
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     inner.stats.timeouts += 1;
@@ -429,10 +496,22 @@ impl InferenceServer {
                     let rec = inner.pending.get_mut(&ticket.0).expect("pending rec");
                     rec.attempts += 1;
                     // an injected link drop ate this reply; consume it
+                    // (and its ledger id, for the retry's blame field)
                     rec.plan.drop_replies = rec.plan.drop_replies.saturating_sub(1);
+                    let fault = pop_fault(&mut rec.plan.drop_faults);
                     let attempts = rec.attempts;
                     if attempts > max_retries {
                         inner.pending.remove(&ticket.0);
+                        inner.telemetry.trace_event(
+                            "server_terminal",
+                            Some("server.supervise"),
+                            &[
+                                ("ticket", num(ticket.0 as f64)),
+                                ("attempts", num(attempts as f64)),
+                                ("reason", jstr("timeout")),
+                                ("fault", fault_field(fault)),
+                            ],
+                        );
                         return Err(InferError::TimedOut { waited_ms, attempts });
                     }
                     inner.stats.retries += 1;
@@ -444,11 +523,23 @@ impl InferenceServer {
                             ("ticket", num(ticket.0 as f64)),
                             ("attempts", num(attempts as f64)),
                             ("reason", jstr("timeout")),
+                            ("fault", fault_field(fault)),
                         ],
                     );
                     // a silent worker is indistinguishable from a hang:
                     // replace it and resubmit everything pending
-                    self.respawn_and_resubmit(&mut inner, "recv timeout", false)?;
+                    if let Err(e) = self.respawn_and_resubmit(&mut inner, "recv timeout", false) {
+                        inner.telemetry.trace_event(
+                            "server_terminal",
+                            Some("server.supervise"),
+                            &[
+                                ("ticket", num(ticket.0 as f64)),
+                                ("reason", jstr("respawn_failed")),
+                                ("fault", Value::Null),
+                            ],
+                        );
+                        return Err(e);
+                    }
                 }
             }
         }
@@ -515,16 +606,18 @@ impl InferenceServer {
         reason: &str,
         crashed: bool,
     ) -> std::result::Result<(), InferError> {
+        let mut fault: Option<u64> = None;
         if crashed {
             inner.stats.crashes += 1;
             inner.telemetry.counter_add("server_crashes_total", 1);
             // the worker serves FIFO, so the job that killed it is the
             // earliest pending one still flagged `crash`; consume exactly
-            // that flag. Later crash-flagged jobs keep theirs and will
-            // kill the replacement in turn — one planned crash, one dead
-            // worker, at any pipeline depth.
+            // that flag (and its ledger id). Later crash-flagged jobs
+            // keep theirs and will kill the replacement in turn — one
+            // planned crash, one dead worker, at any pipeline depth.
             if let Some(rec) = inner.pending.values_mut().find(|r| r.plan.crash) {
                 rec.plan.crash = false;
+                fault = pop_fault(&mut rec.plan.crash_faults);
             }
         }
         inner.stats.respawns += 1;
@@ -534,8 +627,9 @@ impl InferenceServer {
             Some("server.supervise"),
             &[
                 ("reason", jstr(reason)),
-                ("crashed", crate::util::json::Value::Bool(crashed)),
+                ("crashed", Value::Bool(crashed)),
                 ("pending", num(inner.pending.len() as f64)),
+                ("fault", fault_field(fault)),
             ],
         );
         if inner.stats.respawns > self.policy.max_respawns {

@@ -15,6 +15,42 @@
 
 use crate::util::prng::Rng;
 
+/// Stable identity of one fired chaos component at one tick: the tick
+/// in the high bits, the component index in the low byte. Pure in its
+/// coordinates, so every consumer of the same injected fault — the
+/// planner, the supervisor, the trace, the offline analyzer — derives
+/// the same id without sharing state.
+pub fn fault_id(tick: usize, component: usize) -> u64 {
+    ((tick as u64) << 8) | (component as u64 & 0xFF)
+}
+
+/// The tick a [`fault_id`] was injected at.
+pub fn fault_tick(id: u64) -> usize {
+    (id >> 8) as usize
+}
+
+/// The component index a [`fault_id`] was injected by.
+pub fn fault_component(id: u64) -> usize {
+    (id & 0xFF) as usize
+}
+
+/// One injected fault occurrence, as reported by
+/// [`ChaosEngine::events`] — the attribution ledger's source records.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Stable id ([`fault_id`] of `(tick, component)`).
+    pub id: u64,
+    pub tick: usize,
+    /// Index of the firing component in the engine's stack.
+    pub component: usize,
+    /// Fault class (`"crash"`, `"transient"`, `"drop"`, `"delay"`,
+    /// `"corrupt"`).
+    pub class: &'static str,
+    /// Burst units (transient/drop), injected link delay in ms (delay),
+    /// 0 otherwise.
+    pub magnitude: f64,
+}
+
 /// One class of injectable serving failure.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ChaosKind {
@@ -33,6 +69,19 @@ pub enum ChaosKind {
     /// Bit-flips on the reply path: predictions arrive deterministically
     /// scrambled (never equal to the clean prediction).
     ReplyCorrupt,
+}
+
+impl ChaosKind {
+    /// The attribution class this kind rolls up under.
+    pub fn class(&self) -> &'static str {
+        match self {
+            ChaosKind::WorkerCrash => "crash",
+            ChaosKind::TransientError { .. } => "transient",
+            ChaosKind::LinkDrop { .. } => "drop",
+            ChaosKind::LinkDelay { .. } => "delay",
+            ChaosKind::ReplyCorrupt => "corrupt",
+        }
+    }
 }
 
 /// A chaos stream: a failure kind fired with probability `rate` per
@@ -92,6 +141,16 @@ pub struct ChaosPlan {
     pub drop_replies: u32,
     pub delay_ms: f64,
     pub corrupt: bool,
+    /// Attribution ledger: [`fault_id`]s parallel to the effect fields
+    /// above, one per effect *unit* for the burst kinds. The supervisor
+    /// pops a queue at the exact point it consumes the matching effect
+    /// unit, so every retry / respawn / terminal failure names the
+    /// injected fault that caused it.
+    pub crash_faults: Vec<u64>,
+    pub transient_faults: Vec<u64>,
+    pub drop_faults: Vec<u64>,
+    pub delay_faults: Vec<u64>,
+    pub corrupt_faults: Vec<u64>,
 }
 
 impl ChaosPlan {
@@ -142,30 +201,80 @@ impl ChaosEngine {
         !self.components.is_empty()
     }
 
-    /// Plan the failures for `tick`'s job. Pure and allocation-free.
+    /// Does component `ci` fire at `tick`? Pure in (seed, tick, ci).
+    fn fires(&self, tick: usize, ci: usize, comp: &ChaosComponent) -> bool {
+        if !comp.armed(tick) {
+            return false;
+        }
+        let stream = self
+            .seed
+            .wrapping_add((tick as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((ci as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
+        Rng::new(stream).chance(comp.rate)
+    }
+
+    /// Plan the failures for `tick`'s job, ledger ids included. Pure:
+    /// only allocates when a component actually fires.
     pub fn plan(&self, tick: usize) -> ChaosPlan {
         let mut plan = ChaosPlan::default();
         for (ci, comp) in self.components.iter().enumerate() {
-            if !comp.armed(tick) {
+            if !self.fires(tick, ci, comp) {
                 continue;
             }
-            let stream = self
-                .seed
-                .wrapping_add((tick as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
-                .wrapping_add((ci as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
-            let mut rng = Rng::new(stream);
-            if !rng.chance(comp.rate) {
-                continue;
-            }
+            let id = fault_id(tick, ci);
             match comp.kind {
-                ChaosKind::WorkerCrash => plan.crash = true,
-                ChaosKind::TransientError { burst } => plan.transient_failures += burst,
-                ChaosKind::LinkDrop { burst } => plan.drop_replies += burst,
-                ChaosKind::LinkDelay { ms } => plan.delay_ms += ms,
-                ChaosKind::ReplyCorrupt => plan.corrupt = true,
+                ChaosKind::WorkerCrash => {
+                    plan.crash = true;
+                    plan.crash_faults.push(id);
+                }
+                ChaosKind::TransientError { burst } => {
+                    plan.transient_failures += burst;
+                    plan.transient_faults.extend(std::iter::repeat(id).take(burst as usize));
+                }
+                ChaosKind::LinkDrop { burst } => {
+                    plan.drop_replies += burst;
+                    plan.drop_faults.extend(std::iter::repeat(id).take(burst as usize));
+                }
+                ChaosKind::LinkDelay { ms } => {
+                    plan.delay_ms += ms;
+                    plan.delay_faults.push(id);
+                }
+                ChaosKind::ReplyCorrupt => {
+                    plan.corrupt = true;
+                    plan.corrupt_faults.push(id);
+                }
             }
         }
         plan
+    }
+
+    /// The ledger view of `tick`: one [`FaultEvent`] per fired
+    /// component, in component order. Pure in (seed, components, tick) —
+    /// the same firing decisions as [`ChaosEngine::plan`], so the
+    /// coordinator can emit `chaos_inject` trace events without
+    /// disturbing (or depending on) the submitted plans.
+    pub fn events(&self, tick: usize) -> Vec<FaultEvent> {
+        let mut out = Vec::new();
+        for (ci, comp) in self.components.iter().enumerate() {
+            if !self.fires(tick, ci, comp) {
+                continue;
+            }
+            let magnitude = match comp.kind {
+                ChaosKind::TransientError { burst } | ChaosKind::LinkDrop { burst } => {
+                    burst as f64
+                }
+                ChaosKind::LinkDelay { ms } => ms,
+                ChaosKind::WorkerCrash | ChaosKind::ReplyCorrupt => 0.0,
+            };
+            out.push(FaultEvent {
+                id: fault_id(tick, ci),
+                tick,
+                component: ci,
+                class: comp.kind.class(),
+                magnitude,
+            });
+        }
+        out
     }
 }
 
@@ -228,6 +337,59 @@ mod tests {
         let plan = eng.plan(0);
         assert_eq!(plan.delay_ms, 25.0);
         assert_eq!(plan.transient_failures, 3);
+    }
+
+    #[test]
+    fn ledger_ids_parallel_effect_units() {
+        let eng = ChaosEngine::new(
+            17,
+            vec![
+                ChaosComponent::crash(1.0),
+                ChaosComponent::transient(1.0, 2),
+                ChaosComponent::drop(1.0, 3),
+                ChaosComponent::delay(1.0, 25.0),
+                ChaosComponent::corrupt(1.0),
+            ],
+        );
+        for tick in [0usize, 7, 300] {
+            let plan = eng.plan(tick);
+            assert_eq!(plan.crash_faults, vec![fault_id(tick, 0)]);
+            assert_eq!(plan.transient_faults, vec![fault_id(tick, 1); 2]);
+            assert_eq!(plan.transient_faults.len(), plan.transient_failures as usize);
+            assert_eq!(plan.drop_faults, vec![fault_id(tick, 2); 3]);
+            assert_eq!(plan.drop_faults.len(), plan.drop_replies as usize);
+            assert_eq!(plan.delay_faults, vec![fault_id(tick, 3)]);
+            assert_eq!(plan.corrupt_faults, vec![fault_id(tick, 4)]);
+            for (ci, id) in [(0, plan.crash_faults[0]), (3, plan.delay_faults[0])] {
+                assert_eq!(fault_tick(id), tick);
+                assert_eq!(fault_component(id), ci);
+            }
+        }
+    }
+
+    #[test]
+    fn events_agree_with_plans() {
+        let eng = ChaosEngine::new(99, ChaosEngine::default_stack());
+        for tick in 0..128 {
+            let plan = eng.plan(tick);
+            let events = eng.events(tick);
+            let count = |class: &str| events.iter().filter(|e| e.class == class).count();
+            assert_eq!(count("crash"), plan.crash_faults.len());
+            assert_eq!(count("corrupt"), plan.corrupt_faults.len());
+            assert_eq!(count("delay"), plan.delay_faults.len());
+            // one event per fired component, burst units expanded in the plan
+            for e in &events {
+                assert_eq!(e.id, fault_id(e.tick, e.component));
+                assert_eq!(e.tick, tick);
+                match e.class {
+                    "transient" => assert!(plan.transient_faults.contains(&e.id)),
+                    "drop" => assert!(plan.drop_faults.contains(&e.id)),
+                    "delay" => assert_eq!(e.magnitude, 25.0),
+                    _ => {}
+                }
+            }
+            assert_eq!(plan.is_noop(), events.is_empty());
+        }
     }
 
     #[test]

@@ -13,7 +13,10 @@ mod env;
 mod profile;
 mod scenario;
 
-pub use chaos::{ChaosComponent, ChaosEngine, ChaosKind, ChaosPlan};
+pub use chaos::{
+    fault_component, fault_id, fault_tick, ChaosComponent, ChaosEngine, ChaosKind, ChaosPlan,
+    FaultEvent,
+};
 pub use env::{DriftComponent, DriftWave, FaultEnv};
 pub use profile::DeviceFaultProfile;
 pub use scenario::FaultScenario;

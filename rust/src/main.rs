@@ -11,6 +11,10 @@
 //!   campaign  expand a spec grid (models × fault-rates × scenarios ×
 //!             drift schedules) and run every cell through the batched
 //!             evaluation engine; one consolidated JSON report.
+//!   trace     offline trace post-processing: `trace analyze <file>`
+//!             turns a JSONL event trace into a deterministic report
+//!             (span waterfall, cache rollup, fault-attribution chains,
+//!             convergence curves; docs/observability.md).
 //!   info      print artifact/platform information.
 //!
 //! Every run is described by a declarative [`ExperimentSpec`]
@@ -59,6 +63,7 @@ fn main() -> Result<()> {
 
     match args.subcommand.as_deref().unwrap() {
         "campaign" => return cmd_campaign(&args, format),
+        "trace" => return cmd_trace(&args, format),
         "offline" | "online" | "sweep" | "compare" | "info" => {}
         other => {
             eprintln!("unknown subcommand {other:?}");
@@ -82,7 +87,7 @@ fn main() -> Result<()> {
 fn print_help() {
     println!(
         "afarepart — accuracy-aware fault-resilient DNN partitioner\n\n\
-         USAGE: afarepart <offline|online|sweep|compare|campaign|info> [options]\n\n\
+         USAGE: afarepart <offline|online|sweep|compare|campaign|trace|info> [options]\n\n\
          Every run is a declarative ExperimentSpec (see docs/spec.md).\n\
          Precedence: CLI flags > AFARE_* env > --spec file > defaults.\n\n\
          SPEC & OUTPUT:\n\
@@ -119,6 +124,11 @@ fn print_help() {
                                     timeline is identical at any depth)\n\
            --chaos                  enable the spec's chaos-injection stack\n\
            --chaos-seed <n>         chaos PRNG seed (independent of --seed)\n\n\
+         TRACE:\n\
+           trace analyze <file.jsonl>   offline trace post-processing: span\n\
+                                    waterfall, cache rollup, fault-attribution\n\
+                                    chains, convergence curves; deterministic\n\
+                                    report (same trace => same bytes)\n\n\
          `--model synthetic-L<n>` serves the artifact-free fixture model\n\
          (no PJRT artifacts needed) — the chaos/resilience smoke path.\n\
          The platform topology (device list, fault multipliers, link),\n\
@@ -153,7 +163,7 @@ fn run_offline_verbose(
 ) -> Result<(OfflineOutcome, usize)> {
     let mut ev = exp.partition_evaluator(spec.fault_env.scenario);
     ev.set_telemetry(telemetry.clone());
-    let nsga2 = spec.optimizer.to_nsga2(spec.seed);
+    let nsga2 = spec.nsga2_config();
     let out = spec.selection.optimize_and_deploy(&mut ev, &nsga2, |gs| {
         if verbose {
             println!(
@@ -301,7 +311,7 @@ fn cmd_compare(spec: &ExperimentSpec, args: &Args, format: OutputFormat) -> Resu
         );
     }
     let scenario = spec.fault_env.scenario;
-    let nsga2 = spec.optimizer.to_nsga2(spec.seed);
+    let nsga2 = spec.nsga2_config();
     let mut rows = Vec::new();
 
     // CNNParted
@@ -537,7 +547,7 @@ fn cmd_online_synthetic(
     // offline phase at the t = 0 environment for the initial P* and the
     // safe fallback — the same evaluator construction as campaign cells.
     let telemetry = spec.telemetry.build()?;
-    let nsga2 = spec.optimizer.to_nsga2(spec.seed);
+    let nsga2 = spec.nsga2_config();
     let mut ev = PartitionEvaluator::new(
         &manifest,
         &platform,
@@ -752,4 +762,22 @@ fn cmd_campaign(args: &Args, format: OutputFormat) -> Result<()> {
     }
     telemetry.flush()?;
     emit(format, args, &report.to_json())
+}
+
+/// `trace analyze <file>`: offline post-processing of a JSONL event
+/// trace into a deterministic report (docs/observability.md). Needs no
+/// spec, artifacts, or backend — it only reads the file.
+fn cmd_trace(args: &Args, format: OutputFormat) -> Result<()> {
+    let (action, path) = match args.positional.as_slice() {
+        [a, p] => (a.as_str(), p.as_str()),
+        _ => bail!("usage: trace analyze <file.jsonl> [--format json] [--out <file>]"),
+    };
+    if action != "analyze" {
+        bail!("unknown trace action {action:?} (expected: analyze)");
+    }
+    let analysis = afarepart::obs::analyze_file(std::path::Path::new(path))?;
+    if !format.is_json() {
+        print!("{}", analysis.render_text());
+    }
+    emit(format, args, &analysis.to_json())
 }

@@ -68,6 +68,27 @@ fn nondominated(pts: &[Vec<f64>]) -> Vec<Vec<f64>> {
     keep
 }
 
+/// Spread of a front: the diagonal of its objective-space bounding box
+/// (`sqrt(Σ_k (max_k − min_k)²)`). 0 for empty or single-point fronts.
+/// A cheap, deterministic measure of how much of the trade-off surface
+/// the front covers — convergence analytics pair it with hypervolume to
+/// distinguish "converged to one corner" from "covers the front".
+pub fn front_spread(front: &[Vec<f64>]) -> f64 {
+    if front.len() < 2 {
+        return 0.0;
+    }
+    let m = front[0].len();
+    (0..m)
+        .map(|k| {
+            let lo = front.iter().map(|p| p[k]).fold(f64::INFINITY, f64::min);
+            let hi = front.iter().map(|p| p[k]).fold(f64::NEG_INFINITY, f64::max);
+            let ext = hi - lo;
+            ext * ext
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
 /// Normalized hypervolume of a set of Individuals against a reference
 /// derived from the worst observed value per objective (times a margin).
 pub fn front_hypervolume(front: &[crate::nsga2::Individual], margin: f64) -> f64 {
@@ -143,5 +164,13 @@ mod tests {
     #[test]
     fn empty_front_zero() {
         assert_eq!(hypervolume(&[], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn spread_is_bounding_box_diagonal() {
+        assert_eq!(front_spread(&[]), 0.0);
+        assert_eq!(front_spread(&[vec![1.0, 2.0]]), 0.0);
+        let s = front_spread(&[vec![0.0, 0.0], vec![3.0, 4.0], vec![1.0, 1.0]]);
+        assert!((s - 5.0).abs() < 1e-12, "{s}");
     }
 }

@@ -52,7 +52,7 @@ mod hypervolume;
 mod sort;
 
 pub use crowding::crowding_distance;
-pub use hypervolume::{front_hypervolume, hypervolume};
+pub use hypervolume::{front_hypervolume, front_spread, hypervolume};
 pub use sort::{dominates, fast_non_dominated_sort, fast_non_dominated_sort_threads};
 
 use crate::obs::Telemetry;
@@ -84,7 +84,18 @@ pub struct Nsga2Config {
     /// module docs). Sorting/crowding results are serial-identical at
     /// any value.
     pub selection_threads: usize,
+    /// Reference point for per-generation hypervolume convergence
+    /// analytics (spec: `telemetry.hv_reference`). `None` freezes a
+    /// reference from the worst initial-population objectives (×
+    /// [`HV_REFERENCE_MARGIN`]) so generations stay comparable within a
+    /// run; a spec-declared point additionally makes curves comparable
+    /// *across* runs. Only consulted when telemetry is enabled.
+    pub hv_reference: Option<Vec<f64>>,
 }
+
+/// Margin applied to the worst initial objectives when freezing an
+/// implicit hypervolume reference point (no `hv_reference` declared).
+pub const HV_REFERENCE_MARGIN: f64 = 1.1;
 
 impl Default for Nsga2Config {
     fn default() -> Self {
@@ -95,6 +106,7 @@ impl Default for Nsga2Config {
             mutation_prob: 0.08,
             seed: 7,
             selection_threads: 1,
+            hv_reference: None,
         }
     }
 }
@@ -437,6 +449,31 @@ impl Nsga2 {
         let mut pop = self.evaluate_all(problem, genomes);
         Self::rank_population_threads(&mut pop, sel_threads);
 
+        // Convergence analytics (telemetry-gated so disabled runs skip
+        // the O(front²) hypervolume work entirely): the reference point
+        // is fixed once — spec-declared, or frozen from the worst
+        // initial objectives — so per-generation hypervolumes are
+        // comparable. Computed here, on the coordinating thread, from
+        // deterministic objective values only.
+        let hv_reference: Option<Vec<f64>> = if telemetry.is_enabled() {
+            Some(self.cfg.hv_reference.clone().unwrap_or_else(|| {
+                let nobj = pop[0].objectives.len();
+                (0..nobj)
+                    .map(|k| {
+                        pop.iter()
+                            .map(|i| i.objectives[k])
+                            .fold(f64::NEG_INFINITY, f64::max)
+                            * HV_REFERENCE_MARGIN
+                            + 1e-9
+                    })
+                    .collect()
+            }))
+        } else {
+            None
+        };
+        let mut prev_hv: Option<f64> = None;
+        let mut stall = 0usize;
+
         for generation in 0..self.cfg.generations {
             let mut gen_span = telemetry.span("opt.generation");
             gen_span.note("generation", num(generation as f64));
@@ -493,6 +530,40 @@ impl Nsga2 {
             gen_span.note("front_size", num(front_size as f64));
             gen_span.note("evaluations", num(self.evaluations as f64));
             telemetry.counter_add("opt_generations_total", 1);
+            if let Some(reference) = &hv_reference {
+                let front_objs: Vec<Vec<f64>> = pop
+                    .iter()
+                    .filter(|i| i.rank == 0)
+                    .map(|i| i.objectives.clone())
+                    .collect();
+                let hv = hypervolume(&front_objs, reference);
+                let spread = front_spread(&front_objs);
+                // epsilon-progress: hypervolume gained this generation;
+                // the stall counter tracks consecutive non-improving
+                // generations (the analyzer's convergence curve input)
+                let progress = hv - prev_hv.unwrap_or(0.0);
+                if prev_hv.is_some() && progress <= 1e-12 {
+                    stall += 1;
+                } else {
+                    stall = 0;
+                }
+                prev_hv = Some(hv);
+                telemetry.gauge_set("opt_hypervolume", hv);
+                telemetry.gauge_set("opt_front_spread", spread);
+                telemetry.gauge_set("opt_hv_stall_generations", stall as f64);
+                telemetry.trace_event(
+                    "convergence",
+                    Some("opt.convergence"),
+                    &[
+                        ("generation", num(generation as f64)),
+                        ("hypervolume", num(hv)),
+                        ("spread", num(spread)),
+                        ("progress", num(progress)),
+                        ("stall", num(stall as f64)),
+                        ("front_size", num(front_size as f64)),
+                    ],
+                );
+            }
             on_generation(&GenStats {
                 generation,
                 front_size,

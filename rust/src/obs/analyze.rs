@@ -1,0 +1,932 @@
+//! Offline trace analysis (`afarepart trace analyze <file>`).
+//!
+//! Post-processes a JSONL event trace (see [`super::trace`]) into one
+//! deterministic report: span waterfall + critical-path summary,
+//! cache-efficiency rollup, fault→degradation attribution chains with
+//! per-class blame counts, campaign cell summaries, and optimizer
+//! convergence curves. The analyzer is fully offline — it reads bytes,
+//! never the live registry — so it can run on traces from other
+//! machines and other versions:
+//!
+//! - lines whose `schema` is newer than [`TRACE_SCHEMA_VERSION`] are
+//!   counted (`newer_schema_lines`) and still mined for known kinds;
+//! - unknown `kind`s are tallied per kind, never an error;
+//! - a truncated final line (no trailing newline, unparseable — the
+//!   signature of a killed writer) is detected and reported instead of
+//!   panicking; interior garbage lines are counted as `malformed`.
+//!
+//! Determinism: the report is a pure function of the trace bytes. All
+//! aggregation is BTreeMap-backed and every tie-break is lexicographic,
+//! so a bitwise-identical trace yields a bitwise-identical report.
+//!
+//! # Attribution model
+//!
+//! `chaos_inject` events declare injected faults (one per effect unit)
+//! keyed by a stable fault id; supervision events (`server_retry`,
+//! `server_respawn`, `server_terminal`) carry the id of the fault they
+//! consumed in their `fault` field (null when the action had no
+//! injected cause, e.g. a timeout-triggered precautionary respawn).
+//! Degradation transitions (`degrade_enter`/`degrade_extend`) are
+//! linked to the nearest preceding terminal event in stream order —
+//! the terminal that caused them — completing the chain
+//! fault → supervision → degradation. Blame rolls up per fault class
+//! and per component; actions with a null fault roll up under
+//! `unattributed`. Class attribution is whole-file, not stream-order:
+//! with pipelined lookahead a drained speculative wait can consume a
+//! fault *before* its tick's `chaos_inject` line is written, so the
+//! injection ledger is collected in a pre-pass.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::trace::TRACE_SCHEMA_VERSION;
+use crate::faults::{fault_component, fault_tick};
+use crate::util::json::{self, num, obj, s, Value};
+
+/// Supervision actions blamed on one fault class (or unattributed).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BlameCounts {
+    pub retries: usize,
+    pub respawns: usize,
+    pub terminals: usize,
+    pub degradations: usize,
+}
+
+impl BlameCounts {
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("retries", num(self.retries as f64)),
+            ("respawns", num(self.respawns as f64)),
+            ("terminals", num(self.terminals as f64)),
+            ("degradations", num(self.degradations as f64)),
+        ])
+    }
+}
+
+/// One fault's causal chain: injection → supervision → degradation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultChain {
+    pub fault: u64,
+    /// Injection tick, recovered from the id (`fault_tick`).
+    pub tick: usize,
+    /// Component index within the chaos stack (`fault_component`).
+    pub component: usize,
+    /// Fault class from the matching `chaos_inject` ("unknown" when the
+    /// trace holds the consumption but not the injection).
+    pub class: String,
+    pub retries: usize,
+    pub respawns: usize,
+    /// Terminal outcome reason, if supervision gave up on this fault.
+    pub terminal: Option<String>,
+    /// Whether the chain ended in a degradation transition.
+    pub degraded: bool,
+}
+
+impl FaultChain {
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("fault", num(self.fault as f64)),
+            ("tick", num(self.tick as f64)),
+            ("component", num(self.component as f64)),
+            ("class", s(&self.class)),
+            ("retries", num(self.retries as f64)),
+            ("respawns", num(self.respawns as f64)),
+            ("terminal", match &self.terminal {
+                Some(r) => s(r),
+                None => Value::Null,
+            }),
+            ("degraded", Value::Bool(self.degraded)),
+        ])
+    }
+}
+
+/// Fault→degradation attribution rollup (see module doc).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Attribution {
+    /// Injected effect units per class, from `chaos_inject`.
+    pub injected_by_class: BTreeMap<String, usize>,
+    /// Supervision actions blamed per class (key "unknown" collects
+    /// faults whose injection event is missing from the trace).
+    pub blame_by_class: BTreeMap<String, BlameCounts>,
+    /// Actions whose `fault` field was null.
+    pub unattributed: BlameCounts,
+    /// Per-fault chains, ordered by fault id.
+    pub chains: Vec<FaultChain>,
+    /// `server_retry` counts per `reason`.
+    pub retry_reasons: BTreeMap<String, usize>,
+    /// `server_terminal` counts per `reason`.
+    pub terminal_reasons: BTreeMap<String, usize>,
+    /// `server_respawn` events with `crashed == true`.
+    pub crashed_respawns: usize,
+    pub degrade_enters: usize,
+    pub degrade_extends: usize,
+    pub degrade_exits: usize,
+    /// Closed degraded intervals `[start, end)` from `degrade_exit`.
+    pub intervals: Vec<(usize, usize)>,
+    /// Start tick of a degraded interval still open at trace end.
+    pub open_interval_start: Option<usize>,
+}
+
+/// Per-generation optimizer convergence curve; a trace holding several
+/// optimizer runs (e.g. offline + online re-optimizations) yields one
+/// entry per run (a generation reset starts a new run).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConvergenceRun {
+    pub generations: usize,
+    pub first_hypervolume: f64,
+    pub final_hypervolume: f64,
+    pub final_spread: f64,
+    pub max_stall: usize,
+    /// `(generation, hypervolume)` curve.
+    pub curve: Vec<(u64, f64)>,
+}
+
+/// ΔAcc evaluation-engine cache efficiency, rolled up from `eval.batch`
+/// span events.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheRollup {
+    pub batch_calls: usize,
+    pub genomes: usize,
+    pub unique_misses: usize,
+    pub cache_answered: usize,
+}
+
+impl CacheRollup {
+    pub fn hit_rate(&self) -> f64 {
+        if self.genomes == 0 {
+            0.0
+        } else {
+            self.cache_answered as f64 / self.genomes as f64
+        }
+    }
+}
+
+/// Serving-loop rollup from `online.tick` / `online.reconfig` spans.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OnlineRollup {
+    pub ticks: usize,
+    pub degraded_ticks: usize,
+    /// Ticks whose mapping actually changed.
+    pub reconfigurations: usize,
+    /// θ-trigger re-optimizations (mapping may or may not change).
+    pub reopt_triggers: usize,
+    pub reopt_evaluations: usize,
+    pub injected_delay_total: f64,
+    pub final_acc_drop: Option<f64>,
+}
+
+/// Campaign scheduler rollup from `campaign.cell` span events.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CampaignRollup {
+    pub cells: usize,
+    pub evaluations: usize,
+    pub unique_misses: usize,
+    pub cells_by_model: BTreeMap<String, usize>,
+    pub cells_by_drift: BTreeMap<String, usize>,
+}
+
+/// Every trace-event kind this analyzer version understands; anything
+/// else lands in `unknown_kind_counts` (forward compatibility).
+const KNOWN_KINDS: [&str; 10] = [
+    "trace_start",
+    "span",
+    "chaos_inject",
+    "server_retry",
+    "server_respawn",
+    "server_terminal",
+    "degrade_enter",
+    "degrade_exit",
+    "degrade_extend",
+    "convergence",
+];
+
+/// The full deterministic analysis of one trace file (module doc).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceAnalysis {
+    /// Non-empty lines seen (including malformed and truncated ones).
+    pub total_lines: usize,
+    /// Lines successfully parsed into events.
+    pub parsed_events: usize,
+    /// Final line was cut mid-write (no newline, unparseable).
+    pub truncated_tail: bool,
+    /// Interior lines that failed to parse (never expected).
+    pub malformed_lines: usize,
+    /// Events whose `seq` broke the `seq == line index` contract.
+    pub seq_gaps: usize,
+    /// Events per declared `schema` version.
+    pub schema_versions: BTreeMap<u64, usize>,
+    /// Events stamped with a schema newer than this build understands.
+    pub newer_schema_lines: usize,
+    /// Events per kind (known and unknown).
+    pub kind_counts: BTreeMap<String, usize>,
+    /// Kinds this analyzer version does not understand.
+    pub unknown_kind_counts: BTreeMap<String, usize>,
+    /// `span` events per dotted span path (the waterfall).
+    pub span_counts: BTreeMap<String, usize>,
+    /// Dominant span chain: at each hierarchy level the segment with
+    /// the most events under it (ties lexicographic).
+    pub critical_path: Vec<String>,
+    pub cache: CacheRollup,
+    pub online: OnlineRollup,
+    pub attribution: Attribution,
+    pub convergence: Vec<ConvergenceRun>,
+    pub campaign: CampaignRollup,
+}
+
+/// Analyze a trace file on disk.
+pub fn analyze_file(path: &Path) -> Result<TraceAnalysis> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {}", path.display()))?;
+    Ok(analyze_str(&text))
+}
+
+/// Analyze trace text. Infallible by design: damage is reported in the
+/// analysis (`truncated_tail`, `malformed_lines`, unknown kinds), not
+/// surfaced as an error.
+pub fn analyze_str(text: &str) -> TraceAnalysis {
+    let mut a = TraceAnalysis::default();
+    let complete_tail = text.is_empty() || text.ends_with('\n');
+    let lines: Vec<&str> = text.split('\n').filter(|l| !l.is_empty()).collect();
+    a.total_lines = lines.len();
+
+    // Injection-ledger pre-pass (module doc: attribution is whole-file,
+    // not stream-order). The substring filter just skips the parse for
+    // the vast majority of lines; the kind is re-checked after parsing.
+    let mut fault_class: BTreeMap<u64, String> = BTreeMap::new();
+    for line in &lines {
+        if !line.contains("\"chaos_inject\"") {
+            continue;
+        }
+        let Ok(v) = json::parse(line) else { continue };
+        if v.get("kind").and_then(|x| x.as_str()) != Some("chaos_inject") {
+            continue;
+        }
+        if let (Some(id), Some(class)) =
+            (v.get("fault").and_then(|x| x.as_u64()), v.get("class").and_then(|x| x.as_str()))
+        {
+            fault_class.insert(id, class.to_string());
+        }
+    }
+
+    // last server_terminal not yet blamed for a degradation transition
+    let mut pending_terminal: Option<Option<u64>> = None;
+    let mut chains: BTreeMap<u64, FaultChain> = BTreeMap::new();
+    let mut open_degrade: Option<usize> = None;
+    let mut prev_generation: Option<u64> = None;
+
+    for (i, line) in lines.iter().enumerate() {
+        let v = match json::parse(line) {
+            Ok(v) => v,
+            Err(_) => {
+                if i + 1 == lines.len() && !complete_tail {
+                    a.truncated_tail = true;
+                } else {
+                    a.malformed_lines += 1;
+                }
+                continue;
+            }
+        };
+        a.parsed_events += 1;
+        let schema = v.get("schema").and_then(|x| x.as_u64()).unwrap_or(0);
+        *a.schema_versions.entry(schema).or_default() += 1;
+        if schema > TRACE_SCHEMA_VERSION {
+            a.newer_schema_lines += 1;
+        }
+        if v.get("seq").and_then(|x| x.as_usize()) != Some(i) {
+            a.seq_gaps += 1;
+        }
+        let kind = v.get("kind").and_then(|x| x.as_str()).unwrap_or("").to_string();
+        *a.kind_counts.entry(kind.clone()).or_default() += 1;
+        if !KNOWN_KINDS.contains(&kind.as_str()) {
+            *a.unknown_kind_counts.entry(kind.clone()).or_default() += 1;
+            continue;
+        }
+        let span = v.get("span").and_then(|x| x.as_str()).unwrap_or("");
+        let fault = v.get("fault").and_then(|x| x.as_u64());
+        let reason = v.get("reason").and_then(|x| x.as_str()).unwrap_or("").to_string();
+        let tick = v.get("tick").and_then(|x| x.as_usize()).unwrap_or(0);
+
+        match kind.as_str() {
+            "span" => {
+                *a.span_counts.entry(span.to_string()).or_default() += 1;
+                match span {
+                    "eval.batch" => {
+                        a.cache.batch_calls += 1;
+                        a.cache.genomes += v.get("genomes").and_then(|x| x.as_usize()).unwrap_or(0);
+                        a.cache.unique_misses +=
+                            v.get("unique_misses").and_then(|x| x.as_usize()).unwrap_or(0);
+                        a.cache.cache_answered +=
+                            v.get("cache_answered").and_then(|x| x.as_usize()).unwrap_or(0);
+                    }
+                    "online.tick" => {
+                        a.online.ticks += 1;
+                        if v.get("degraded").and_then(|x| x.as_bool()) == Some(true) {
+                            a.online.degraded_ticks += 1;
+                        }
+                        if v.get("reconfigured").and_then(|x| x.as_bool()) == Some(true) {
+                            a.online.reconfigurations += 1;
+                        }
+                        a.online.injected_delay_total +=
+                            v.get("injected_delay").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                        if let Some(drop) = v.get("acc_drop").and_then(|x| x.as_f64()) {
+                            a.online.final_acc_drop = Some(drop);
+                        }
+                    }
+                    "online.reconfig" => {
+                        a.online.reopt_triggers += 1;
+                        a.online.reopt_evaluations +=
+                            v.get("evaluations").and_then(|x| x.as_usize()).unwrap_or(0);
+                    }
+                    "campaign.cell" => {
+                        a.campaign.cells += 1;
+                        a.campaign.evaluations +=
+                            v.get("evaluations").and_then(|x| x.as_usize()).unwrap_or(0);
+                        a.campaign.unique_misses +=
+                            v.get("unique_misses").and_then(|x| x.as_usize()).unwrap_or(0);
+                        if let Some(m) = v.get("model").and_then(|x| x.as_str()) {
+                            *a.campaign.cells_by_model.entry(m.to_string()).or_default() += 1;
+                        }
+                        if let Some(d) = v.get("drift").and_then(|x| x.as_str()) {
+                            *a.campaign.cells_by_drift.entry(d.to_string()).or_default() += 1;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            "chaos_inject" => {
+                let class =
+                    v.get("class").and_then(|x| x.as_str()).unwrap_or("unknown").to_string();
+                *a.attribution.injected_by_class.entry(class).or_default() += 1;
+            }
+            "server_retry" => {
+                *a.attribution.retry_reasons.entry(reason.clone()).or_default() += 1;
+                blame(&mut a.attribution, &fault_class, &mut chains, fault, |b| b.retries += 1);
+            }
+            "server_respawn" => {
+                if v.get("crashed").and_then(|x| x.as_bool()) == Some(true) {
+                    a.attribution.crashed_respawns += 1;
+                }
+                blame(&mut a.attribution, &fault_class, &mut chains, fault, |b| b.respawns += 1);
+            }
+            "server_terminal" => {
+                *a.attribution.terminal_reasons.entry(reason.clone()).or_default() += 1;
+                blame(&mut a.attribution, &fault_class, &mut chains, fault, |b| {
+                    b.terminals += 1
+                });
+                if let Some(id) = fault {
+                    if let Some(c) = chains.get_mut(&id) {
+                        c.terminal = Some(reason.clone());
+                    }
+                }
+                pending_terminal = Some(fault);
+            }
+            "degrade_enter" | "degrade_extend" => {
+                if kind == "degrade_enter" {
+                    a.attribution.degrade_enters += 1;
+                    open_degrade = Some(tick);
+                } else {
+                    a.attribution.degrade_extends += 1;
+                }
+                // blame the terminal that caused this transition;
+                // consume it so one terminal explains one transition
+                match pending_terminal.take() {
+                    Some(Some(id)) => {
+                        let class = fault_class
+                            .get(&id)
+                            .cloned()
+                            .unwrap_or_else(|| "unknown".to_string());
+                        a.attribution
+                            .blame_by_class
+                            .entry(class)
+                            .or_default()
+                            .degradations += 1;
+                        if let Some(c) = chains.get_mut(&id) {
+                            c.degraded = true;
+                        }
+                    }
+                    _ => a.attribution.unattributed.degradations += 1,
+                }
+            }
+            "degrade_exit" => {
+                a.attribution.degrade_exits += 1;
+                open_degrade = None;
+                let start = v.get("start").and_then(|x| x.as_usize()).unwrap_or(0);
+                let end = v.get("end").and_then(|x| x.as_usize()).unwrap_or(0);
+                a.attribution.intervals.push((start, end));
+            }
+            "convergence" => {
+                let generation = v.get("generation").and_then(|x| x.as_u64()).unwrap_or(0);
+                let hv = v.get("hypervolume").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                let spread = v.get("spread").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                let stall = v.get("stall").and_then(|x| x.as_usize()).unwrap_or(0);
+                let new_run = match prev_generation {
+                    None => true,
+                    Some(prev) => generation <= prev,
+                };
+                if new_run {
+                    a.convergence.push(ConvergenceRun {
+                        first_hypervolume: hv,
+                        ..ConvergenceRun::default()
+                    });
+                }
+                prev_generation = Some(generation);
+                let run = a.convergence.last_mut().expect("pushed above");
+                run.generations += 1;
+                run.final_hypervolume = hv;
+                run.final_spread = spread;
+                run.max_stall = run.max_stall.max(stall);
+                run.curve.push((generation, hv));
+            }
+            _ => {}
+        }
+    }
+
+    a.attribution.open_interval_start = open_degrade;
+    a.attribution.chains = chains.into_values().collect();
+    a.critical_path = critical_path(&a.span_counts);
+    a
+}
+
+/// Charge one supervision action to its fault's class (or to
+/// `unattributed` when the event carried a null fault), and grow the
+/// per-fault chain.
+fn blame(
+    attr: &mut Attribution,
+    fault_class: &BTreeMap<u64, String>,
+    chains: &mut BTreeMap<u64, FaultChain>,
+    fault: Option<u64>,
+    bump: impl Fn(&mut BlameCounts),
+) {
+    match fault {
+        None => bump(&mut attr.unattributed),
+        Some(id) => {
+            let class =
+                fault_class.get(&id).cloned().unwrap_or_else(|| "unknown".to_string());
+            bump(attr.blame_by_class.entry(class.clone()).or_default());
+            let chain = chains.entry(id).or_insert_with(|| FaultChain {
+                fault: id,
+                tick: fault_tick(id),
+                component: fault_component(id),
+                class,
+                retries: 0,
+                respawns: 0,
+                terminal: None,
+                degraded: false,
+            });
+            // a per-chain view of the same bump
+            let mut delta = BlameCounts::default();
+            bump(&mut delta);
+            chain.retries += delta.retries;
+            chain.respawns += delta.respawns;
+        }
+    }
+}
+
+/// Dominant span chain: starting at the root, at each level pick the
+/// path segment with the most span events at-or-below it; ties go to
+/// the lexicographically smallest segment (BTreeMap order).
+fn critical_path(span_counts: &BTreeMap<String, usize>) -> Vec<String> {
+    let mut prefix = String::new();
+    let mut out = Vec::new();
+    loop {
+        let mut seg_counts: BTreeMap<&str, usize> = BTreeMap::new();
+        for (path, count) in span_counts {
+            let rest = if prefix.is_empty() {
+                path.as_str()
+            } else if let Some(r) =
+                path.strip_prefix(&prefix).and_then(|r| r.strip_prefix('.'))
+            {
+                r
+            } else {
+                continue;
+            };
+            if rest.is_empty() {
+                continue;
+            }
+            let seg = rest.split('.').next().unwrap_or(rest);
+            *seg_counts.entry(seg).or_default() += count;
+        }
+        let Some((best, _)) = seg_counts.iter().fold(None, |acc: Option<(&str, usize)>, (k, &c)| {
+            match acc {
+                Some((_, bc)) if bc >= c => acc,
+                _ => Some((k, c)),
+            }
+        }) else {
+            break;
+        };
+        prefix = if prefix.is_empty() { best.to_string() } else { format!("{prefix}.{best}") };
+        out.push(prefix.clone());
+    }
+    out
+}
+
+impl TraceAnalysis {
+    /// The deterministic JSON report (`--format json`). Key order is
+    /// fixed by the BTreeMap-backed JSON layer, so a bitwise-identical
+    /// trace yields a bitwise-identical report.
+    pub fn to_json(&self) -> Value {
+        let count_map = |m: &BTreeMap<String, usize>| {
+            Value::Obj(m.iter().map(|(k, &v)| (k.clone(), num(v as f64))).collect())
+        };
+        obj(vec![
+            ("events", obj(vec![
+                ("total_lines", num(self.total_lines as f64)),
+                ("parsed", num(self.parsed_events as f64)),
+                ("truncated_tail", Value::Bool(self.truncated_tail)),
+                ("malformed", num(self.malformed_lines as f64)),
+                ("seq_gaps", num(self.seq_gaps as f64)),
+                ("schema_versions", Value::Obj(
+                    self.schema_versions
+                        .iter()
+                        .map(|(k, &v)| (k.to_string(), num(v as f64)))
+                        .collect(),
+                )),
+                ("newer_schema_lines", num(self.newer_schema_lines as f64)),
+                ("by_kind", count_map(&self.kind_counts)),
+                ("unknown_kinds", count_map(&self.unknown_kind_counts)),
+            ])),
+            ("spans", obj(vec![
+                ("waterfall", count_map(&self.span_counts)),
+                ("critical_path", json::arr(self.critical_path.iter().map(|p| s(p)))),
+            ])),
+            ("cache", obj(vec![
+                ("batch_calls", num(self.cache.batch_calls as f64)),
+                ("genomes", num(self.cache.genomes as f64)),
+                ("unique_misses", num(self.cache.unique_misses as f64)),
+                ("cache_answered", num(self.cache.cache_answered as f64)),
+                ("hit_rate", num(self.cache.hit_rate())),
+            ])),
+            ("online", obj(vec![
+                ("ticks", num(self.online.ticks as f64)),
+                ("degraded_ticks", num(self.online.degraded_ticks as f64)),
+                ("reconfigurations", num(self.online.reconfigurations as f64)),
+                ("reopt_triggers", num(self.online.reopt_triggers as f64)),
+                ("reopt_evaluations", num(self.online.reopt_evaluations as f64)),
+                ("injected_delay_total", num(self.online.injected_delay_total)),
+                ("final_acc_drop", match self.online.final_acc_drop {
+                    Some(d) => num(d),
+                    None => Value::Null,
+                }),
+            ])),
+            ("attribution", obj(vec![
+                ("injected_by_class", count_map(&self.attribution.injected_by_class)),
+                ("blame_by_class", Value::Obj(
+                    self.attribution
+                        .blame_by_class
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.to_json()))
+                        .collect(),
+                )),
+                ("unattributed", self.attribution.unattributed.to_json()),
+                ("chains", json::arr(self.attribution.chains.iter().map(|c| c.to_json()))),
+                ("retry_reasons", count_map(&self.attribution.retry_reasons)),
+                ("terminal_reasons", count_map(&self.attribution.terminal_reasons)),
+                ("crashed_respawns", num(self.attribution.crashed_respawns as f64)),
+                ("degrade_enters", num(self.attribution.degrade_enters as f64)),
+                ("degrade_extends", num(self.attribution.degrade_extends as f64)),
+                ("degrade_exits", num(self.attribution.degrade_exits as f64)),
+                ("intervals", json::arr(self.attribution.intervals.iter().map(
+                    |&(lo, hi)| json::arr([num(lo as f64), num(hi as f64)]),
+                ))),
+                ("open_interval_start", match self.attribution.open_interval_start {
+                    Some(t) => num(t as f64),
+                    None => Value::Null,
+                }),
+            ])),
+            ("convergence", json::arr(self.convergence.iter().map(|r| {
+                obj(vec![
+                    ("generations", num(r.generations as f64)),
+                    ("first_hypervolume", num(r.first_hypervolume)),
+                    ("final_hypervolume", num(r.final_hypervolume)),
+                    ("final_spread", num(r.final_spread)),
+                    ("max_stall", num(r.max_stall as f64)),
+                    ("curve", json::arr(r.curve.iter().map(
+                        |&(g, hv)| json::arr([num(g as f64), num(hv)]),
+                    ))),
+                ])
+            }))),
+            ("campaign", obj(vec![
+                ("cells", num(self.campaign.cells as f64)),
+                ("evaluations", num(self.campaign.evaluations as f64)),
+                ("unique_misses", num(self.campaign.unique_misses as f64)),
+                ("cells_by_model", count_map(&self.campaign.cells_by_model)),
+                ("cells_by_drift", count_map(&self.campaign.cells_by_drift)),
+            ])),
+        ])
+    }
+
+    /// Short human-readable summary (`--format text`).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        let mut line = |s: String| {
+            out.push_str(&s);
+            out.push('\n');
+        };
+        line(format!(
+            "events: {} parsed / {} lines{}{}",
+            self.parsed_events,
+            self.total_lines,
+            if self.truncated_tail { " (truncated tail)" } else { "" },
+            if self.malformed_lines > 0 {
+                format!(" ({} malformed)", self.malformed_lines)
+            } else {
+                String::new()
+            },
+        ));
+        if self.newer_schema_lines > 0 || !self.unknown_kind_counts.is_empty() {
+            line(format!(
+                "forward-compat: {} newer-schema lines, {} unknown kinds",
+                self.newer_schema_lines,
+                self.unknown_kind_counts.len()
+            ));
+        }
+        line(format!("critical path: {}", self.critical_path.join(" > ")));
+        if self.cache.batch_calls > 0 {
+            line(format!(
+                "cache: {} genomes in {} batches, {} misses, hit rate {:.1}%",
+                self.cache.genomes,
+                self.cache.batch_calls,
+                self.cache.unique_misses,
+                self.cache.hit_rate() * 100.0
+            ));
+        }
+        if self.online.ticks > 0 {
+            line(format!(
+                "online: {} ticks, {} degraded, {} reconfigurations ({} triggers)",
+                self.online.ticks,
+                self.online.degraded_ticks,
+                self.online.reconfigurations,
+                self.online.reopt_triggers
+            ));
+        }
+        for (class, b) in &self.attribution.blame_by_class {
+            line(format!(
+                "blame[{class}]: {} retries, {} respawns, {} terminals, {} degradations",
+                b.retries, b.respawns, b.terminals, b.degradations
+            ));
+        }
+        let u = &self.attribution.unattributed;
+        if *u != BlameCounts::default() {
+            line(format!(
+                "blame[unattributed]: {} retries, {} respawns, {} terminals, {} degradations",
+                u.retries, u.respawns, u.terminals, u.degradations
+            ));
+        }
+        for (i, r) in self.convergence.iter().enumerate() {
+            line(format!(
+                "convergence[{i}]: {} generations, hv {:.6} -> {:.6}, max stall {}",
+                r.generations, r.first_hypervolume, r.final_hypervolume, r.max_stall
+            ));
+        }
+        if self.campaign.cells > 0 {
+            line(format!(
+                "campaign: {} cells, {} evaluations, {} misses",
+                self.campaign.cells, self.campaign.evaluations, self.campaign.unique_misses
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::fault_id;
+
+    fn ev(seq: usize, body: &str) -> String {
+        format!("{{\"schema\":2,\"seq\":{seq},\"kind\":{body}}}\n")
+    }
+
+    fn sample_trace() -> String {
+        let f = fault_id(3, 1);
+        let mut t = String::new();
+        t.push_str(&ev(0, "\"trace_start\""));
+        t.push_str(&ev(
+            1,
+            &format!(
+                "\"chaos_inject\",\"span\":\"online.chaos\",\"class\":\"transient\",\
+                 \"component\":1,\"fault\":{f},\"magnitude\":2,\"tick\":3"
+            ),
+        ));
+        t.push_str(&ev(
+            2,
+            &format!(
+                "\"server_retry\",\"span\":\"server.supervise\",\"ticket\":3,\
+                 \"attempts\":1,\"reason\":\"transient\",\"fault\":{f}"
+            ),
+        ));
+        t.push_str(&ev(
+            3,
+            &format!(
+                "\"server_terminal\",\"span\":\"server.supervise\",\"ticket\":3,\
+                 \"attempts\":2,\"reason\":\"exhausted\",\"fault\":{f}"
+            ),
+        ));
+        t.push_str(&ev(
+            4,
+            "\"degrade_enter\",\"span\":\"online.degrade\",\"tick\":3,\"reason\":\"exhausted\"",
+        ));
+        t.push_str(&ev(
+            5,
+            "\"degrade_exit\",\"span\":\"online.degrade\",\"tick\":7,\"start\":3,\"end\":7",
+        ));
+        t.push_str(&ev(
+            6,
+            "\"span\",\"span\":\"eval.batch\",\"batch\":1,\"genomes\":8,\
+             \"unique_misses\":3,\"cache_answered\":5",
+        ));
+        t.push_str(&ev(
+            7,
+            "\"span\",\"span\":\"online.tick\",\"tick\":3,\"degraded\":true,\
+             \"reconfigured\":false,\"acc\":0,\"acc_drop\":0.5,\"injected_delay\":0",
+        ));
+        t.push_str(&ev(
+            8,
+            "\"convergence\",\"span\":\"opt.convergence\",\"generation\":0,\
+             \"hypervolume\":1.5,\"spread\":0.2,\"progress\":1.5,\"stall\":0,\"front_size\":4",
+        ));
+        t.push_str(&ev(
+            9,
+            "\"convergence\",\"span\":\"opt.convergence\",\"generation\":1,\
+             \"hypervolume\":2.5,\"spread\":0.3,\"progress\":1,\"stall\":0,\"front_size\":5",
+        ));
+        t
+    }
+
+    #[test]
+    fn links_fault_to_degradation_chain() {
+        let a = analyze_str(&sample_trace());
+        assert_eq!(a.parsed_events, 10);
+        assert!(!a.truncated_tail);
+        assert_eq!(a.seq_gaps, 0);
+        assert_eq!(a.attribution.injected_by_class["transient"], 1);
+        let b = &a.attribution.blame_by_class["transient"];
+        assert_eq!((b.retries, b.terminals, b.degradations), (1, 1, 1));
+        assert_eq!(a.attribution.chains.len(), 1);
+        let c = &a.attribution.chains[0];
+        assert_eq!((c.tick, c.component, c.class.as_str()), (3, 1, "transient"));
+        assert_eq!(c.terminal.as_deref(), Some("exhausted"));
+        assert!(c.degraded);
+        assert_eq!(a.attribution.intervals, vec![(3, 7)]);
+        assert_eq!(a.attribution.open_interval_start, None);
+    }
+
+    #[test]
+    fn rolls_up_cache_online_and_convergence() {
+        let a = analyze_str(&sample_trace());
+        assert_eq!(
+            (a.cache.batch_calls, a.cache.genomes, a.cache.unique_misses),
+            (1, 8, 3)
+        );
+        assert!((a.cache.hit_rate() - 5.0 / 8.0).abs() < 1e-12);
+        assert_eq!((a.online.ticks, a.online.degraded_ticks), (1, 1));
+        assert_eq!(a.online.final_acc_drop, Some(0.5));
+        assert_eq!(a.convergence.len(), 1);
+        let r = &a.convergence[0];
+        assert_eq!(r.generations, 2);
+        assert_eq!(r.curve, vec![(0, 1.5), (1, 2.5)]);
+        assert_eq!(r.final_hypervolume, 2.5);
+    }
+
+    #[test]
+    fn generation_reset_starts_a_new_convergence_run() {
+        let mut t = sample_trace();
+        t.push_str(&ev(
+            10,
+            "\"convergence\",\"span\":\"opt.convergence\",\"generation\":0,\
+             \"hypervolume\":0.5,\"spread\":0.1,\"progress\":0.5,\"stall\":0,\"front_size\":2",
+        ));
+        let a = analyze_str(&t);
+        assert_eq!(a.convergence.len(), 2);
+        assert_eq!(a.convergence[1].generations, 1);
+        assert_eq!(a.convergence[1].first_hypervolume, 0.5);
+    }
+
+    #[test]
+    fn truncated_tail_detected_not_fatal() {
+        let mut t = sample_trace();
+        t.push_str("{\"schema\":2,\"seq\":10,\"kind\":\"span\",\"spa"); // cut mid-write
+        let a = analyze_str(&t);
+        assert!(a.truncated_tail);
+        assert_eq!(a.malformed_lines, 0);
+        assert_eq!(a.parsed_events, 10);
+    }
+
+    #[test]
+    fn unknown_kinds_and_newer_schema_counted() {
+        let mut t = sample_trace();
+        t.push_str("{\"schema\":99,\"seq\":10,\"kind\":\"hologram\",\"x\":1}\n");
+        let a = analyze_str(&t);
+        assert_eq!(a.unknown_kind_counts["hologram"], 1);
+        assert_eq!(a.newer_schema_lines, 1);
+        assert_eq!(a.schema_versions[&99], 1);
+        // known kinds from newer schemas are still mined
+        let mut t2 = sample_trace();
+        t2.push_str(
+            "{\"schema\":99,\"seq\":10,\"kind\":\"degrade_exit\",\
+             \"span\":\"online.degrade\",\"tick\":9,\"start\":8,\"end\":9}\n",
+        );
+        let a2 = analyze_str(&t2);
+        assert_eq!(a2.attribution.intervals.len(), 2);
+    }
+
+    #[test]
+    fn unattributed_actions_and_open_intervals() {
+        let mut t = String::new();
+        t.push_str(&ev(0, "\"trace_start\""));
+        t.push_str(&ev(
+            1,
+            "\"server_respawn\",\"span\":\"server.supervise\",\"reason\":\"recv timeout\",\
+             \"crashed\":false,\"pending\":2,\"fault\":null",
+        ));
+        t.push_str(&ev(
+            2,
+            "\"server_terminal\",\"span\":\"server.supervise\",\"ticket\":1,\
+             \"reason\":\"fatal\",\"fault\":null",
+        ));
+        t.push_str(&ev(
+            3,
+            "\"degrade_enter\",\"span\":\"online.degrade\",\"tick\":5,\"reason\":\"fatal\"",
+        ));
+        let a = analyze_str(&t);
+        assert_eq!(a.attribution.unattributed.respawns, 1);
+        assert_eq!(a.attribution.unattributed.terminals, 1);
+        assert_eq!(a.attribution.unattributed.degradations, 1);
+        assert_eq!(a.attribution.crashed_respawns, 0);
+        assert_eq!(a.attribution.open_interval_start, Some(5));
+        assert!(a.attribution.chains.is_empty());
+    }
+
+    #[test]
+    fn late_injection_still_classifies_blame() {
+        // pipelined lookahead: a drained speculative wait can consume a
+        // fault before its tick's chaos_inject line is written; the
+        // pre-pass must still recover the class
+        let f = fault_id(9, 0);
+        let mut t = String::new();
+        t.push_str(&ev(0, "\"trace_start\""));
+        t.push_str(&ev(
+            1,
+            &format!(
+                "\"server_retry\",\"span\":\"server.supervise\",\"ticket\":9,\
+                 \"attempts\":1,\"reason\":\"transient\",\"fault\":{f}"
+            ),
+        ));
+        t.push_str(&ev(
+            2,
+            &format!(
+                "\"chaos_inject\",\"span\":\"online.chaos\",\"class\":\"transient\",\
+                 \"component\":0,\"fault\":{f},\"magnitude\":2,\"tick\":9"
+            ),
+        ));
+        let a = analyze_str(&t);
+        assert_eq!(a.attribution.blame_by_class["transient"].retries, 1);
+        assert!(!a.attribution.blame_by_class.contains_key("unknown"));
+        assert_eq!(a.attribution.chains.len(), 1);
+        assert_eq!(a.attribution.chains[0].class, "transient");
+    }
+
+    #[test]
+    fn critical_path_follows_dominant_spans() {
+        let mut counts = BTreeMap::new();
+        counts.insert("online.tick".to_string(), 60);
+        counts.insert("online.reconfig".to_string(), 2);
+        counts.insert("eval.batch".to_string(), 40);
+        assert_eq!(
+            critical_path(&counts),
+            vec!["online".to_string(), "online.tick".to_string()]
+        );
+        assert!(critical_path(&BTreeMap::new()).is_empty());
+    }
+
+    #[test]
+    fn report_is_deterministic_and_reconciles() {
+        let a = analyze_str(&sample_trace());
+        let j1 = json::to_string(&a.to_json());
+        let j2 = json::to_string(&analyze_str(&sample_trace()).to_json());
+        assert_eq!(j1, j2);
+        let v = a.to_json();
+        assert_eq!(
+            v.path(&["attribution", "blame_by_class", "transient", "retries"])
+                .and_then(|x| x.as_f64()),
+            Some(1.0)
+        );
+        assert_eq!(
+            v.path(&["events", "by_kind", "server_retry"]).and_then(|x| x.as_f64()),
+            Some(1.0)
+        );
+        // text rendering mentions the blame rollup
+        assert!(a.render_text().contains("blame[transient]"));
+    }
+
+    #[test]
+    fn empty_trace_is_empty_analysis() {
+        let a = analyze_str("");
+        assert_eq!(a.total_lines, 0);
+        assert!(!a.truncated_tail);
+        assert!(a.kind_counts.is_empty());
+        assert!(a.critical_path.is_empty());
+    }
+}

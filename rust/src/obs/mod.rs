@@ -24,6 +24,7 @@
 //! consumers strip (`scripts/trace_smoke.sh`). Given the same spec and
 //! seed, a `--trace` file is bitwise identical at any `eval_threads`.
 
+pub mod analyze;
 pub mod prometheus;
 pub mod registry;
 pub mod span;
@@ -35,6 +36,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+pub use analyze::{analyze_file, analyze_str, TraceAnalysis};
 pub use registry::{Histogram, MetricRegistry, MetricSnapshot, MS_BUCKETS};
 pub use span::Span;
 pub use trace::{TraceWriter, TRACE_SCHEMA_VERSION};

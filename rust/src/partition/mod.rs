@@ -13,6 +13,8 @@ mod sensitivity;
 pub use cache::{CacheRollover, CacheStats, DaccCache};
 pub use engine::EngineConfig;
 pub use evaluator::{DaccMode, EvalCounters, PartitionEvaluator};
-pub use front::{select_knee, select_min_dacc, select_min_dacc_within_budget};
+pub use front::{
+    front_quality, select_knee, select_min_dacc, select_min_dacc_within_budget, FrontQuality,
+};
 pub use genome::Mapping;
 pub use sensitivity::SensitivityTable;

@@ -557,7 +557,7 @@ pub fn run_campaign_with(
     telemetry.gauge_set("campaign_workers", workers as f64);
     telemetry.gauge_set("campaign_cell_threads", cell_threads as f64);
     telemetry.gauge_set("campaign_cell_selection_threads", cell_selection_threads as f64);
-    let mut nsga2 = spec.base.optimizer.to_nsga2(spec.base.seed);
+    let mut nsga2 = spec.base.nsga2_config();
     // Budget-clamped optimizer fan-out. Safe for determinism: either the
     // spec asked for the serial path (stays 1) or the forked path (stays
     // >= 2, whose results are width-invariant).

@@ -127,6 +127,7 @@ impl OptimizerSpec {
             mutation_prob: self.mutation_prob,
             seed,
             selection_threads: self.selection_threads,
+            ..Default::default()
         }
     }
 }
@@ -518,15 +519,25 @@ impl ExperimentSpec {
         Ok(spec)
     }
 
+    /// The optimizer config with the telemetry-declared convergence
+    /// reference applied (`telemetry.hv_reference` pins the hypervolume
+    /// reference point so convergence analytics compare across runs).
+    pub fn nsga2_config(&self) -> Nsga2Config {
+        let mut cfg = self.optimizer.to_nsga2(self.seed);
+        cfg.hv_reference = self.telemetry.hv_reference.clone();
+        cfg
+    }
+
     /// The flat runtime view consumed by [`crate::experiment::Experiment`]
     /// and the benches.
     pub fn to_config(&self) -> ExperimentConfig {
+        let nsga2 = self.nsga2_config();
         ExperimentConfig {
             artifacts_dir: self.artifacts_dir.clone(),
             model: self.model.clone(),
             fault_rate: self.fault_env.fault_rate,
             scenario: self.fault_env.scenario,
-            nsga2: self.optimizer.to_nsga2(self.seed),
+            nsga2,
             theta: self.online.theta,
             eval_limit: self.eval_limit,
             dacc_batches: self.dacc_batches,

@@ -23,11 +23,16 @@ pub struct TelemetrySpec {
     /// JSONL event-trace path (`--trace <file>`); `None` disables the
     /// trace exporter. Setting a path implies `enabled`.
     pub trace: Option<String>,
+    /// Fixed hypervolume reference point for convergence analytics
+    /// (one value per objective: latency_ms, energy_mj, dacc). `None`
+    /// freezes a reference from the initial population instead; a
+    /// spec-declared point makes hypervolume comparable across runs.
+    pub hv_reference: Option<Vec<f64>>,
 }
 
 impl TelemetrySpec {
     pub(crate) fn apply_json(&mut self, obj: &BTreeMap<String, Value>, ctx: &str) -> Result<()> {
-        reject_unknown(obj, &["enabled", "trace"], ctx)?;
+        reject_unknown(obj, &["enabled", "trace", "hv_reference"], ctx)?;
         if let Some(b) = bool_field(obj, "enabled", ctx)? {
             self.enabled = b;
         }
@@ -40,6 +45,24 @@ impl TelemetrySpec {
             }
             Some(_) => bail!("{ctx}.trace: expected a string path or null"),
         }
+        match obj.get("hv_reference") {
+            None => {}
+            Some(Value::Null) => self.hv_reference = None,
+            Some(v) => {
+                let arr = expect_arr(v, &format!("{ctx}.hv_reference"))?;
+                let mut point = Vec::with_capacity(arr.len());
+                for (i, x) in arr.iter().enumerate() {
+                    match x.as_f64() {
+                        Some(f) if f.is_finite() => point.push(f),
+                        _ => bail!("{ctx}.hv_reference[{i}]: expected a finite number"),
+                    }
+                }
+                if point.is_empty() {
+                    bail!("{ctx}.hv_reference: expected at least one objective bound");
+                }
+                self.hv_reference = Some(point);
+            }
+        }
         Ok(())
     }
 
@@ -48,6 +71,10 @@ impl TelemetrySpec {
             ("enabled", Value::Bool(self.enabled)),
             ("trace", match &self.trace {
                 Some(p) => json::s(p),
+                None => Value::Null,
+            }),
+            ("hv_reference", match &self.hv_reference {
+                Some(point) => json::arr(point.iter().map(|x| json::num(*x))),
                 None => Value::Null,
             }),
         ])
@@ -91,8 +118,13 @@ mod tests {
     fn round_trips_through_json() {
         for spec in [
             TelemetrySpec::default(),
-            TelemetrySpec { enabled: true, trace: None },
-            TelemetrySpec { enabled: true, trace: Some("t.jsonl".into()) },
+            TelemetrySpec { enabled: true, ..Default::default() },
+            TelemetrySpec { enabled: true, trace: Some("t.jsonl".into()), ..Default::default() },
+            TelemetrySpec {
+                enabled: true,
+                hv_reference: Some(vec![250.0, 90.0, 0.2]),
+                ..Default::default()
+            },
         ] {
             let v = spec.to_json();
             let mut back = TelemetrySpec::default();
@@ -111,8 +143,31 @@ mod tests {
     }
 
     #[test]
+    fn hv_reference_parses_and_rejects_bad_points() {
+        let mut spec = TelemetrySpec::default();
+        let v = crate::util::json::parse(r#"{"hv_reference": [250.0, 90, 0.2]}"#).unwrap();
+        spec.apply_json(v.as_obj().unwrap(), "telemetry").unwrap();
+        assert_eq!(spec.hv_reference, Some(vec![250.0, 90.0, 0.2]));
+        // declaring a reference does not flip the master switch
+        assert!(!spec.enabled);
+
+        let v = crate::util::json::parse(r#"{"hv_reference": null}"#).unwrap();
+        spec.apply_json(v.as_obj().unwrap(), "telemetry").unwrap();
+        assert_eq!(spec.hv_reference, None);
+
+        for bad in [
+            r#"{"hv_reference": []}"#,
+            r#"{"hv_reference": 3.0}"#,
+            r#"{"hv_reference": [1.0, "x"]}"#,
+        ] {
+            let v = crate::util::json::parse(bad).unwrap();
+            assert!(spec.apply_json(v.as_obj().unwrap(), "telemetry").is_err(), "{bad}");
+        }
+    }
+
+    #[test]
     fn enabled_without_trace_builds_registry_only() {
-        let spec = TelemetrySpec { enabled: true, trace: None };
+        let spec = TelemetrySpec { enabled: true, ..Default::default() };
         let t = spec.build().unwrap();
         assert!(t.is_enabled());
         assert!(!t.has_trace());

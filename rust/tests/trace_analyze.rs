@@ -1,0 +1,328 @@
+//! Acceptance tests for the fault-attribution ledger + offline analyzer
+//! (ISSUE 10): a seeded 120-tick chaos run's `trace analyze` blame
+//! counts must reconcile *exactly* with the `ServerStats` supervision
+//! counters and the run's `Metrics` degradation records, and the
+//! analyzer report must be bitwise identical across repeats and across
+//! `eval_threads` / `campaign_workers` ∈ {1, 2, 4}.
+//!
+//! Everything runs on the artifact-free synthetic backend (the same
+//! harness as `rust/tests/obs.rs`), so no PJRT artifacts are needed.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use afarepart::bench::suite::{synthetic_eval_set, synthetic_manifest, synthetic_sensitivity};
+use afarepart::coordinator::{
+    BackendSpec, InferenceServer, OnlineConfig, OnlineOutcome, OnlineRunner, ServerStats,
+};
+use afarepart::faults::{
+    ChaosComponent, ChaosEngine, DeviceFaultProfile, FaultEnv, FaultScenario,
+};
+use afarepart::hw::Platform;
+use afarepart::nsga2::Nsga2Config;
+use afarepart::obs::analyze::BlameCounts;
+use afarepart::obs::{analyze_file, Telemetry, TraceAnalysis, TRACE_SCHEMA_VERSION};
+use afarepart::partition::{DaccMode, Mapping, PartitionEvaluator};
+use afarepart::spec::campaign::{run_campaign_with, CampaignOptions};
+use afarepart::spec::CampaignSpec;
+use afarepart::util::json;
+
+const UNITS: usize = 6;
+const DIMS: (usize, usize, usize) = (4, 4, 3);
+const BATCH: usize = 8;
+const TICKS: usize = 120;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("afare_analyze_it_{}_{name}.jsonl", std::process::id()));
+    p
+}
+
+fn online_cfg() -> OnlineConfig {
+    OnlineConfig {
+        ticks: TICKS,
+        window: 4,
+        theta: 0.05,
+        cooldown: 6,
+        lookahead: 2,
+        backoff_ms: 0,
+        health_cooldown: 3,
+        reopt: Nsga2Config { pop_size: 8, generations: 3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// A 120-tick chaos schedule exercising every ledger path: corruption
+/// drives θ re-optimizations throughout, two windowed rate-1.0 crashes
+/// guarantee crashed respawns, two windowed transient bursts (far past
+/// the retry budget) guarantee `exhausted` terminals + degradation
+/// episodes, a low-rate background transient scatters plain retries,
+/// and the delay component feeds `injected_delay`. No drop component:
+/// its recv timeouts would make wall time part of the schedule (the
+/// dedicated timeout tests in `rust/tests/chaos.rs` cover that path).
+fn chaos() -> ChaosEngine {
+    ChaosEngine::new(
+        99,
+        vec![
+            ChaosComponent::corrupt(0.5),
+            ChaosComponent::crash(1.0).window(4, 5),
+            ChaosComponent::crash(1.0).window(70, 71),
+            ChaosComponent::transient(1.0, 9).window(14, 15),
+            ChaosComponent::transient(1.0, 9).window(90, 91),
+            ChaosComponent::transient(0.25, 2),
+            ChaosComponent::delay(0.2, 2.0),
+        ],
+    )
+}
+
+/// Run the synthetic online pipeline with a trace at evaluation-engine
+/// width `threads`; returns the outcome plus the server's supervision
+/// counters (which `Metrics` only partially mirrors — `crashes` lives
+/// on the server alone).
+fn run_traced(threads: usize, path: &Path) -> (OnlineOutcome, ServerStats) {
+    let telemetry = Telemetry::with_trace(path).expect("trace file opens");
+    let manifest = synthetic_manifest(UNITS);
+    let table = synthetic_sensitivity(UNITS);
+    let platform = Platform::default_two_device();
+    let env = FaultEnv {
+        base_rate: 0.08,
+        profiles: DeviceFaultProfile::default_two_device(),
+        drift: Vec::new(),
+    };
+    let eval = synthetic_eval_set(BATCH * 4, DIMS.0, DIMS.1, DIMS.2, 10, 42);
+    let cfg = online_cfg();
+    let server = InferenceServer::spawn_with(
+        BackendSpec::Synthetic { manifest: manifest.clone(), exec_cost: Duration::ZERO },
+        DIMS,
+        cfg.supervisor_policy(),
+    )
+    .unwrap();
+    server.set_telemetry(telemetry.clone());
+    let mut ev = PartitionEvaluator::new(
+        &manifest,
+        &platform,
+        env.dev_w_rates(0.0),
+        env.dev_a_rates(0.0),
+        FaultScenario::InputWeight,
+        table.clean_acc,
+        false,
+        DaccMode::SyntheticExact { table: &table, cost: Duration::ZERO },
+    )
+    .with_parallelism(threads)
+    .with_telemetry(telemetry.clone());
+    let mut runner = OnlineRunner {
+        cfg,
+        server: &server,
+        evaluator: &mut ev,
+        clean_acc: table.clean_acc,
+        chaos: chaos(),
+        safe_mapping: Some(Mapping::all_on(1, UNITS)),
+        telemetry,
+    };
+    let out = runner.run(&eval, &env, Mapping::all_on(0, UNITS), |_| {}).unwrap();
+    let stats = server.stats();
+    server.shutdown().unwrap();
+    (out, stats)
+}
+
+fn report_fingerprint(a: &TraceAnalysis) -> String {
+    json::to_string(&a.to_json())
+}
+
+/// `Metrics` merges contiguous degraded intervals (`end == next start`);
+/// the trace keeps one `degrade_exit` per episode. Apply the same merge
+/// to the analyzer's intervals before comparing.
+fn merged(intervals: &[(usize, usize)]) -> Vec<(usize, usize)> {
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    for &(lo, hi) in intervals {
+        match out.last_mut() {
+            Some(last) if last.1 == lo => last.1 = hi,
+            _ => out.push((lo, hi)),
+        }
+    }
+    out
+}
+
+/// ISSUE acceptance: every analyzer blame counter reconciles exactly
+/// with the supervision stats and degradation records of the run that
+/// produced the trace.
+#[test]
+fn blame_counts_reconcile_with_server_stats_and_metrics() {
+    let path = tmp("reconcile");
+    let (out, stats) = run_traced(2, &path);
+    let a = analyze_file(&path).unwrap();
+    let m = &out.metrics;
+
+    // the run must actually exercise every ledger path
+    assert!(stats.crashes >= 2, "both crash windows must fire");
+    assert!(stats.transient_errors > 0, "transient bursts must fire");
+    assert!(m.degradations > 0, "exhausted bursts must degrade");
+    assert!(m.reconfigurations > 0, "corruption must trigger θ");
+
+    // the trace itself is clean and schema-current
+    assert_eq!(a.parsed_events, a.total_lines);
+    assert!(!a.truncated_tail);
+    assert_eq!((a.malformed_lines, a.seq_gaps, a.newer_schema_lines), (0, 0, 0));
+    let versions: Vec<u64> = a.schema_versions.keys().copied().collect();
+    assert_eq!(versions, [TRACE_SCHEMA_VERSION]);
+    assert!(a.unknown_kind_counts.is_empty(), "{:?}", a.unknown_kind_counts);
+
+    // supervision events: one trace line per counter increment
+    let kind = |k: &str| a.kind_counts.get(k).copied().unwrap_or(0);
+    assert_eq!(kind("server_retry"), stats.retries);
+    assert_eq!(kind("server_retry"), m.retries);
+    assert_eq!(kind("server_respawn"), stats.respawns);
+    assert_eq!(kind("server_respawn"), m.worker_respawns);
+    assert_eq!(a.attribution.crashed_respawns, stats.crashes);
+
+    // every transient error surfaced as a transient retry or an
+    // exhausted terminal; every timeout as a timeout retry or terminal
+    let attr = &a.attribution;
+    let reason = |map: &std::collections::BTreeMap<String, usize>, k: &str| {
+        map.get(k).copied().unwrap_or(0)
+    };
+    assert_eq!(
+        reason(&attr.retry_reasons, "transient") + reason(&attr.terminal_reasons, "exhausted"),
+        stats.transient_errors,
+    );
+    assert_eq!(stats.transient_errors, m.transient_errors);
+    assert_eq!(
+        reason(&attr.retry_reasons, "timeout") + reason(&attr.terminal_reasons, "timeout"),
+        stats.timeouts,
+    );
+    assert_eq!(stats.timeouts, m.timeouts);
+
+    // blame rolls up losslessly: per-class + unattributed == totals
+    let sum = |f: fn(&BlameCounts) -> usize| {
+        attr.blame_by_class.values().map(f).sum::<usize>() + f(&attr.unattributed)
+    };
+    assert_eq!(sum(|b| b.retries), stats.retries);
+    assert_eq!(sum(|b| b.respawns), stats.respawns);
+    assert_eq!(sum(|b| b.terminals), kind("server_terminal"));
+    assert_eq!(sum(|b| b.degradations), m.degradations);
+    // the injection pre-pass means no consumed fault id lacks its class
+    assert!(!attr.blame_by_class.contains_key("unknown"), "{:?}", attr.blame_by_class);
+
+    // degradation records: each terminal-induced transition is exactly
+    // one enter-or-extend; each closed episode is one exit interval
+    assert_eq!(attr.degrade_enters + attr.degrade_extends, m.degradations);
+    assert_eq!(attr.degrade_exits, attr.intervals.len());
+    let ours = merged(&attr.intervals);
+    match attr.open_interval_start {
+        None => assert_eq!(ours, m.degraded_intervals),
+        Some(s) => {
+            // the run ended degraded: Metrics closes the open episode at
+            // the run boundary with no degrade_exit event
+            let glued = !ours.is_empty() && ours.last().unwrap().1 == s;
+            let (closed, last_start) = if glued {
+                (&ours[..ours.len() - 1], ours.last().unwrap().0)
+            } else {
+                (&ours[..], s)
+            };
+            assert_eq!(m.degraded_intervals.len(), closed.len() + 1);
+            assert_eq!(&m.degraded_intervals[..closed.len()], closed);
+            let last = *m.degraded_intervals.last().unwrap();
+            assert_eq!(last.0, last_start);
+            assert!(last.1 > s && last.1 <= TICKS);
+        }
+    }
+
+    // injections: both guaranteed classes present, crash windows = 2
+    assert_eq!(attr.injected_by_class.get("crash").copied(), Some(2));
+    assert!(attr.injected_by_class.get("transient").copied().unwrap_or(0) >= 2);
+    assert!(attr.injected_by_class.get("corrupt").copied().unwrap_or(0) > 0);
+    // chains carry terminal outcomes and degradation flags
+    assert!(attr.chains.iter().any(|c| c.terminal.as_deref() == Some("exhausted")));
+    assert!(attr.chains.iter().any(|c| c.degraded));
+    assert!(attr.chains.iter().all(|c| c.class != "unknown"));
+
+    // serving-loop rollup mirrors Metrics tick for tick
+    assert_eq!(a.online.ticks, TICKS);
+    assert_eq!(a.online.degraded_ticks, m.degraded_ticks);
+    assert_eq!(a.online.reopt_triggers, m.reconfigurations);
+    assert_eq!(a.online.reopt_evaluations, m.reopt_evaluations);
+    assert!(a.online.reconfigurations <= a.online.reopt_triggers);
+    assert_eq!(
+        a.span_counts.get("online.reconfig").copied().unwrap_or(0),
+        m.reconfigurations
+    );
+
+    // every θ re-optimization leaves one complete convergence curve
+    assert_eq!(a.convergence.len(), m.reconfigurations);
+    for run in &a.convergence {
+        assert_eq!(run.generations, online_cfg().reopt.generations);
+        assert_eq!(run.curve.len(), run.generations);
+        assert!(run.final_hypervolume.is_finite());
+    }
+
+    assert!(a.cache.batch_calls > 0);
+    assert!(!a.critical_path.is_empty());
+    std::fs::remove_file(&path).ok();
+}
+
+/// ISSUE acceptance: the analyzer report (not just the trace) is
+/// bitwise identical across repeats and across `eval_threads`.
+#[test]
+fn analyzer_report_is_bitwise_identical_across_eval_threads_and_repeats() {
+    let paths: Vec<PathBuf> =
+        ["e1", "e2", "e4", "e1_repeat"].iter().map(|n| tmp(n)).collect();
+    run_traced(1, &paths[0]);
+    run_traced(2, &paths[1]);
+    run_traced(4, &paths[2]);
+    run_traced(1, &paths[3]);
+    let reports: Vec<String> = paths
+        .iter()
+        .map(|p| report_fingerprint(&analyze_file(p).unwrap()))
+        .collect();
+    for (p, r) in paths.iter().zip(&reports).skip(1) {
+        assert_eq!(
+            &reports[0],
+            r,
+            "DETERMINISM VIOLATION: analyzer report for {} differs",
+            p.display()
+        );
+    }
+    // and the report is non-trivial: the blame section actually rolled up
+    assert!(reports[0].contains("\"blame_by_class\":{\""));
+    for p in &paths {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// Campaign traces (coordinator-side `campaign.cell` spans, strictly in
+/// cell order) analyze to the same report at any `campaign_workers`.
+#[test]
+fn campaign_analyzer_report_is_identical_across_workers() {
+    let mut reference: Option<String> = None;
+    for workers in [1usize, 2, 4] {
+        let mut spec = CampaignSpec::from_json_str(
+            r#"{
+                "base": {"eval_threads": 1,
+                         "optimizer": {"pop_size": 8, "generations": 2}},
+                "grid": {"models": ["synthetic-L6"],
+                         "fault_rates": [0.1, 0.2, 0.4],
+                         "scenarios": ["w", "iw"]}
+            }"#,
+        )
+        .unwrap();
+        spec.base.campaign_workers = workers;
+        let path = tmp(&format!("campaign_w{workers}"));
+        let telemetry = Telemetry::with_trace(&path).expect("trace file opens");
+        let opts = CampaignOptions { telemetry, ..CampaignOptions::default() };
+        run_campaign_with(&spec, &opts, |_, _, _| {}).unwrap();
+        let a = analyze_file(&path).unwrap();
+        assert_eq!(a.campaign.cells, 6, "at {workers} workers");
+        assert_eq!(a.campaign.cells_by_model.get("synthetic-L6").copied(), Some(6));
+        assert!(a.campaign.evaluations > 0);
+        assert_eq!((a.malformed_lines, a.seq_gaps), (0, 0));
+        let fp = report_fingerprint(&a);
+        match &reference {
+            None => reference = Some(fp),
+            Some(r) => assert_eq!(
+                r, &fp,
+                "analyzer report at {workers} workers differs from campaign_workers = 1"
+            ),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -4,10 +4,11 @@
 # 1/2/4-thread trajectory monotone), the telemetry disabled-path
 # overhead gate on BENCH_telemetry_overhead.json (<2%), the
 # campaign-scheduler throughput gate on BENCH_campaign.json (cells/s at
-# 4 workers must not fall below serial), and the NSGA-II selection
+# 4 workers must not fall below serial), the NSGA-II selection
 # pipeline gate on BENCH_variation.json (pop-1024 wall monotone over
-# selection_threads 1/2/4 + both determinism contracts). Run via
-# `make check`.
+# selection_threads 1/2/4 + both determinism contracts), and the
+# offline trace-analyzer throughput gate on BENCH_trace_analyze.json
+# (>= 50k events/s, deterministic report). Run via `make check`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -190,5 +191,31 @@ if not doc.get("forked_deterministic", False):
     print("FORKED CONTRACT flag missing: parallel path not thread-invariant")
 
 sys.exit(0 if ok else "NSGA-II selection pipeline gate failed")
+EOF
+
+echo "== BENCH_trace_analyze.json analyzer throughput gate =="
+python3 - <<'EOF'
+import json
+import sys
+
+with open("BENCH_trace_analyze.json") as f:
+    doc = json.load(f)
+
+eps = doc["events_per_sec"]
+print(
+    f"  {doc['events']:.0f} events ({doc['bytes'] / 2**20:.1f} MiB): "
+    f"{doc['min_ms']:.1f} ms min -> {eps:.0f} events/s"
+)
+ok = True
+# Post-processing must stay comfortably faster than emission: a 120-tick
+# chaos run produces a few hundred events, so anything above 50k
+# events/s keeps `trace analyze` invisible next to the run itself.
+if eps < 50_000:
+    ok = False
+    print(f"SLOW: analyzer at {eps:.0f} events/s (< 50k floor)")
+if not doc.get("deterministic", False):
+    ok = False
+    print("DETERMINISM flag missing from trace-analyze bench output")
+sys.exit(0 if ok else "trace analyzer throughput gate failed")
 EOF
 echo "check: OK"

@@ -6,7 +6,9 @@
 # — two identical invocations produce identical trace files — and
 # (c) leave the report deterministic once the wall-clock latency
 # summaries and the Prometheus snapshot (histogram sums are wall times)
-# are stripped.
+# are stripped, and (d) post-process through `trace analyze` into a
+# non-empty attribution report that is itself bitwise
+# repeat-deterministic.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -49,7 +51,7 @@ python3 - "$TMP/a.jsonl" <<'EOF'
 import json
 import sys
 
-SCHEMA = 1
+SCHEMA = 2
 kinds = {}
 with open(sys.argv[1]) as f:
     lines = [line.rstrip("\n") for line in f]
@@ -93,5 +95,31 @@ for doc in (a, b):
     doc.pop("telemetry", None)
 assert a == b, "traced run is not deterministic across identical invocations"
 print("  deterministic across repeats: OK")
+EOF
+
+echo "== trace-smoke: offline analyzer (attribution report) =="
+"$BIN" trace analyze "$TMP/a.jsonl" --format json --out "$TMP/ra1.json"
+"$BIN" trace analyze "$TMP/a.jsonl" --format json --out "$TMP/ra2.json"
+"$BIN" trace analyze "$TMP/b.jsonl" --format json --out "$TMP/rb.json"
+cmp "$TMP/ra1.json" "$TMP/ra2.json" \
+    || { echo "trace analyze is not repeat-deterministic"; exit 1; }
+cmp "$TMP/ra1.json" "$TMP/rb.json" \
+    || { echo "identical traces produced different analyzer reports"; exit 1; }
+python3 - "$TMP/ra1.json" "$TMP/a.jsonl" <<'EOF'
+import json
+import sys
+
+report = json.load(open(sys.argv[1]))
+lines = sum(1 for _ in open(sys.argv[2]))
+ev = report["events"]
+assert ev["parsed"] == lines, f"analyzer parsed {ev['parsed']} of {lines} lines"
+assert not ev["truncated_tail"] and ev["malformed"] == 0 and ev["seq_gaps"] == 0
+assert ev["by_kind"].get("span", 0) >= 60, "analyzer lost span events"
+attr = report["attribution"]
+assert attr["injected_by_class"], "chaos run produced an empty attribution report"
+assert report["spans"]["critical_path"], "empty critical path"
+assert report["cache"]["batch_calls"] > 0, "no eval.batch rollup"
+print("  attribution classes:", ", ".join(sorted(attr["injected_by_class"])))
+print("  analyzer report non-empty + deterministic: OK")
 EOF
 echo "trace-smoke: OK"
